@@ -1,0 +1,43 @@
+"""Paper reproduction in one command: a Table-2 slice (LIGO, all three
+arrival patterns) with ARAS vs the FCFS baseline.
+
+    PYTHONPATH=src python examples/paper_reproduction.py [--full]
+
+--full runs the complete 4-workflow × 3-pattern matrix
+(≈15 min on one core; this is what `python -m benchmarks.table2` does).
+"""
+import argparse
+
+from benchmarks import table2
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    if args.full:
+        table2.main()
+        return
+
+    from repro.engine import EngineConfig, run_experiment
+    from repro.workflows.arrival import PATTERNS
+
+    print("LIGO workflows, ARAS vs FCFS (paper Table 2 slice):")
+    for pat_name, pat in PATTERNS.items():
+        res = {}
+        for alloc in ("aras", "fcfs"):
+            m = run_experiment("ligo", pat(), alloc, seed=0,
+                               config=EngineConfig())
+            res[alloc] = m
+        a, f = res["aras"], res["fcfs"]
+        print(f"  {pat_name:9s} total {a.makespan/60:6.2f}/"
+              f"{f.makespan/60:6.2f} min "
+              f"(-{100*(1-a.makespan/f.makespan):.1f}%)  "
+              f"per-wf {a.avg_workflow_duration/60:5.2f}/"
+              f"{f.avg_workflow_duration/60:5.2f} min "
+              f"(-{100*(1-a.avg_workflow_duration/f.avg_workflow_duration):.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""End-to-end serving driver: continuous batching with batched requests.
+
+Serves a small decoder LM: requests arrive in bursts, the engine admits
+them into cache slots (prefill) and advances all active slots with one
+batched decode step per iteration — the serving-side analogue of the
+paper's high-concurrency task-pod scenario.
+
+    PYTHONPATH=src python examples/serve_lm.py [--requests 12] [--slots 4]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.api import build_model
+from repro.serving.engine import ServeConfig, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("llama3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params,
+                      ServeConfig(n_slots=args.slots, max_len=64))
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    rids = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(3, 10))
+        rids.append(eng.submit(prompt, max_new_tokens=args.new_tokens))
+    done = eng.run_to_completion()
+    dt = time.time() - t0
+
+    total_tokens = sum(len(v) for v in done.values())
+    print(f"served {len(done)} requests / {total_tokens} tokens in "
+          f"{dt:.1f}s ({total_tokens/dt:.1f} tok/s, "
+          f"{args.slots} slots, continuous batching)")
+    for rid in rids[:3]:
+        print(f"  request {rid}: {done[rid]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.cluster.simulator import ClusterSim, Node, Pod
+
+__all__ = ["ClusterSim", "Node", "Pod"]

@@ -1,0 +1,137 @@
+"""Discrete-event K8s-cluster model.
+
+Stands in for the paper's 6-node testbed (one Master + six 8-core/16 GB
+workers, §6.1.1).  The simulator tracks nodes, pods and phases with the
+same semantics the ARAS algorithms assume:
+
+* a pod's *quota* (allocated cpu/mem) counts against its node while the pod
+  is Pending or Running (Alg. 2 line 8);
+* Succeeded / Failed / OOMKilled pods stop consuming but linger until the
+  Task Container Cleaner deletes them (paper §4.2), matching the deletion
+  latency visible in Fig. 9;
+* ``snapshot()`` is the Informer analogue — a cached, consistent view that
+  the Resource Discovery reads instead of hitting the API server.
+
+Invariant (checked): at every instant, Σ quotas of consuming pods on a
+node ≤ the node's allocatable capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.types import Allocation, ClusterSnapshot, PodPhase, Resources, TaskSpec
+
+
+@dataclasses.dataclass
+class Node:
+    index: int
+    allocatable: Resources
+    used: Resources = dataclasses.field(default_factory=lambda: Resources(0.0, 0.0))
+
+    @property
+    def residual(self) -> Resources:
+        return self.allocatable - self.used
+
+
+@dataclasses.dataclass
+class Pod:
+    uid: int
+    task: TaskSpec
+    quota: Resources
+    node: int
+    phase: PodPhase = PodPhase.PENDING
+    t_created: float = 0.0
+    t_started: float = 0.0
+    t_finished: float = 0.0
+    workflow_id: str = ""
+
+
+class ClusterSim:
+    """Mutable cluster state + capacity accounting."""
+
+    def __init__(self, num_nodes: int, node_cpu: float, node_mem: float):
+        self.nodes: List[Node] = [
+            Node(i, Resources(node_cpu, node_mem)) for i in range(num_nodes)
+        ]
+        self.pods: Dict[int, Pod] = {}
+        self._uid = itertools.count()
+
+    # ------------------------------------------------------------- pod ops
+    def bind(self, task: TaskSpec, alloc: Allocation, now: float,
+             workflow_id: str = "") -> Pod:
+        """Create a pod with the allocated quota on the chosen node."""
+        node = self.nodes[alloc.node]
+        quota = Resources(alloc.cpu, alloc.mem)
+        if not (quota + node.used).fits_in(node.allocatable):
+            raise RuntimeError(
+                f"overcommit on node {node.index}: used={node.used} "
+                f"quota={quota} cap={node.allocatable}"
+            )
+        node.used = node.used + quota
+        pod = Pod(
+            uid=next(self._uid), task=task, quota=quota, node=alloc.node,
+            phase=PodPhase.RUNNING, t_created=now, t_started=now,
+            workflow_id=workflow_id,
+        )
+        self.pods[pod.uid] = pod
+        return pod
+
+    def finish(self, uid: int, now: float, phase: PodPhase) -> Pod:
+        """Transition a Running pod to a terminal phase, releasing quota."""
+        pod = self.pods[uid]
+        assert pod.phase == PodPhase.RUNNING, pod
+        node = self.nodes[pod.node]
+        node.used = node.used - pod.quota
+        assert node.used.nonneg(), (node, pod)
+        pod.phase = phase
+        pod.t_finished = now
+        return pod
+
+    def delete(self, uid: int) -> None:
+        """Task Container Cleaner: remove terminal pods from the registry."""
+        pod = self.pods.pop(uid)
+        assert not pod.phase.consumes_resources, pod
+
+    # ----------------------------------------------------------- informer
+    def snapshot(self) -> ClusterSnapshot:
+        """Informer-style struct-of-arrays view for the JAX algorithms."""
+        pods = list(self.pods.values())
+        return ClusterSnapshot(
+            allocatable_cpu=np.array(
+                [n.allocatable.cpu for n in self.nodes], np.float32
+            ),
+            allocatable_mem=np.array(
+                [n.allocatable.mem for n in self.nodes], np.float32
+            ),
+            pod_node=np.array([p.node for p in pods], np.int32),
+            pod_cpu=np.array([p.quota.cpu for p in pods], np.float32),
+            pod_mem=np.array([p.quota.mem for p in pods], np.float32),
+            pod_active=np.array(
+                [p.phase.consumes_resources for p in pods], bool
+            ),
+        )
+
+    # ------------------------------------------------------------- metrics
+    def utilization(self) -> Resources:
+        """Fraction of allocatable capacity currently held by quotas."""
+        cap_cpu = sum(n.allocatable.cpu for n in self.nodes)
+        cap_mem = sum(n.allocatable.mem for n in self.nodes)
+        used_cpu = sum(n.used.cpu for n in self.nodes)
+        used_mem = sum(n.used.mem for n in self.nodes)
+        return Resources(used_cpu / cap_cpu, used_mem / cap_mem)
+
+    def check_invariants(self) -> None:
+        for n in self.nodes:
+            assert n.used.nonneg(), n
+            assert n.used.fits_in(n.allocatable), n
+        # cross-check node accounting against the pod registry
+        for n in self.nodes:
+            cpu = sum(
+                p.quota.cpu for p in self.pods.values()
+                if p.node == n.index and p.phase.consumes_resources
+            )
+            assert abs(cpu - n.used.cpu) < 1e-3, (n, cpu)

@@ -1,0 +1,75 @@
+"""Architecture registry: the 10 assigned configs + reduced smoke variants.
+
+``get_config(arch_id)`` returns the exact published configuration;
+``get_smoke_config(arch_id)`` returns a structurally identical reduced
+variant (few layers, narrow widths, tiny vocab) for CPU smoke tests.  The
+full configs are exercised only through the dry-run (ShapeDtypeStruct —
+no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+
+_MODULES = {
+    "qwen2-0.5b": "qwen2_0_5b",
+    "llama3-8b": "llama3_8b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "llama3-405b": "llama3_405b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "whisper-base": "whisper_base",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise ValueError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    """Reduced same-family config: one CPU forward/train step must pass."""
+    cfg = get_config(arch_id)
+    updates: Dict = dict(
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(4, cfg.num_kv_heads),
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=512,
+        sliding_window=min(cfg.sliding_window, 16),
+        num_vision_tokens=24,
+        num_audio_frames=32,
+        remat=False,
+    )
+    if cfg.is_hybrid:
+        updates["num_layers"] = cfg.hybrid_group  # one full group
+    elif cfg.is_vlm:
+        updates["num_layers"] = 2 * cfg.cross_attn_every  # two groups
+    else:
+        updates["num_layers"] = 2 if not cfg.first_layer_dense_ff else 3
+    if cfg.encoder_layers:
+        updates["encoder_layers"] = 2
+    if cfg.moe is not None:
+        # capacity_factor=8 guarantees no capacity drops at smoke scale, so
+        # prefill/decode parity tests check cache math, not drop sets
+        # (capacity dropping is covered by tests/test_layers.py).
+        updates["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=8,
+            top_k=min(cfg.moe.top_k, 4), expert_d_ff=96,
+            capacity_factor=8.0)
+    if cfg.ssm is not None:
+        updates["ssm"] = dataclasses.replace(cfg.ssm, d_state=4, dt_rank=8)
+    if cfg.first_layer_dense_ff:
+        updates["first_layer_dense_ff"] = 160
+    return dataclasses.replace(cfg, name=f"{cfg.name}-smoke", **updates)

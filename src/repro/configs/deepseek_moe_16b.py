@@ -1,0 +1,18 @@
+"""deepseek-moe-16b [moe] — fine-grained 64 routed top-6 + 2 shared experts,
+dense first layer [arXiv:2401.06066; hf]."""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,  # per-expert width (fine-grained)
+    vocab_size=102400,
+    moe=MoEConfig(num_experts=64, top_k=6, expert_d_ff=1408,
+                  num_shared_experts=2),
+    first_layer_dense_ff=10944,
+    rope_theta=10000.0,
+)

@@ -1,0 +1,15 @@
+"""falcon-mamba-7b [ssm] — Mamba-1, attention-free [arXiv:2410.05355]."""
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    num_layers=64,
+    d_model=4096,
+    num_heads=1,  # unused (attention-free)
+    num_kv_heads=1,
+    head_dim=64,
+    d_ff=0,
+    vocab_size=65024,
+    attention="none",
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+)

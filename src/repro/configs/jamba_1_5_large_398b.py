@@ -1,0 +1,18 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba:attn 7:1 interleave, MoE 16e top-2
+[arXiv:2403.19887; hf]. 398B total / ~94B active."""
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    hybrid_group=8,  # layer 0 of each group is attention, 1..7 Mamba
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    moe=MoEConfig(num_experts=16, top_k=2, expert_d_ff=24576,
+                  every_k_layers=2),
+)

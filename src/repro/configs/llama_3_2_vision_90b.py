@@ -1,0 +1,18 @@
+"""llama-3.2-vision-90b [vlm] — gated cross-attn image layers every 5th
+[hf:meta-llama/Llama-3.2-11B-Vision scaled]. Vision frontend is a stub:
+``input_specs()`` provides precomputed patch embeddings."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    num_layers=100,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    cross_attn_every=5,
+    num_vision_tokens=1601,  # 1 tile × (40×40 patches + cls)
+    rope_theta=500000.0,
+)

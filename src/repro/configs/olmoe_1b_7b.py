@@ -1,0 +1,15 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8 [arXiv:2409.02060; hf]."""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,  # per-expert width
+    vocab_size=50304,
+    moe=MoEConfig(num_experts=64, top_k=8, expert_d_ff=1024),
+    rope_theta=10000.0,
+)

@@ -1,0 +1,19 @@
+"""whisper-base [audio] — enc-dec backbone; conv frontend stubbed
+(``input_specs()`` provides precomputed frame embeddings)
+[arXiv:2212.04356]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    num_layers=6,  # decoder layers
+    encoder_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    norm="layernorm",
+    use_rope=False,  # sinusoidal absolute positions
+    num_audio_frames=1500,
+)

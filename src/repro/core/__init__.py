@@ -1,0 +1,34 @@
+# ARAS — the paper's primary contribution (Algorithms 1-3 + MAPE-K),
+# implemented as vectorized JAX with a thin object front-end.
+from repro.core.allocator import AdaptiveAllocator, FCFSAllocator, make_allocator
+from repro.core.evaluation import EvalInputs, EvalResult, evaluate, evaluate_batch
+from repro.core.mapek import MapeK
+from repro.core.types import (
+    DEFAULT_ALPHA,
+    DEFAULT_BETA,
+    Allocation,
+    ClusterSnapshot,
+    PodPhase,
+    Resources,
+    TaskSpec,
+    TaskWindow,
+)
+
+__all__ = [
+    "AdaptiveAllocator",
+    "FCFSAllocator",
+    "make_allocator",
+    "EvalInputs",
+    "EvalResult",
+    "evaluate",
+    "evaluate_batch",
+    "MapeK",
+    "Allocation",
+    "ClusterSnapshot",
+    "PodPhase",
+    "Resources",
+    "TaskSpec",
+    "TaskWindow",
+    "DEFAULT_ALPHA",
+    "DEFAULT_BETA",
+]

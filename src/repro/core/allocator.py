@@ -1,0 +1,155 @@
+"""Allocator front-ends: ARAS (Algorithm 1) and the FCFS baseline.
+
+``AdaptiveAllocator`` composes the three modules of the Resource Manager
+(paper Fig. 2): Resource Discovery (Alg. 2), the lifecycle window +
+summaries (Alg. 1), and the Resource Evaluator (Alg. 3).  The baseline
+(``FCFSAllocator``) reproduces the paper's §6.1.6 comparison strategy: it
+allocates the *full* declared request if some node can host it, otherwise
+reports infeasible so the engine queues the task until resources free up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import discovery, lifecycle
+from repro.core.evaluation import SCENARIO_NAMES, EvalInputs, evaluate_jit
+from repro.core.types import (
+    DEFAULT_ALPHA,
+    DEFAULT_BETA,
+    Allocation,
+    ClusterSnapshot,
+    TaskSpec,
+    TaskWindow,
+)
+
+
+def _best_node_for(
+    residual_cpu: np.ndarray,
+    residual_mem: np.ndarray,
+    cpu: float,
+    mem: float,
+) -> int:
+    """Worst-fit placement: max-residual-CPU node that fits (cpu, mem).
+
+    The paper delegates placement to the K8s scheduler; worst-fit mirrors
+    ARAS's own orientation toward the max-residual node (Alg. 1 lines
+    19-22).  Returns -1 when nothing fits.
+    """
+    fits = (residual_cpu >= cpu - 1e-6) & (residual_mem >= mem - 1e-6)
+    if not fits.any():
+        return -1
+    masked = np.where(fits, residual_cpu, -np.inf)
+    return int(np.argmax(masked))
+
+
+@dataclasses.dataclass
+class AdaptiveAllocator:
+    """ARAS — Algorithm 1 (one round of the per-request loop).
+
+    The paper's ``for each task pod's resource request`` loop re-runs on
+    every engine retry event; each call here is one iteration, returning
+    ``feasible=False`` when the line-27 acceptance gate fails (allocation
+    below ``min_cpu`` / ``min_mem + β``), in which case the engine waits
+    for a cluster-state change and retries — identical to the paper's
+    blocking behaviour.
+    """
+
+    alpha: float = DEFAULT_ALPHA
+    beta: float = DEFAULT_BETA
+
+    name: str = "aras"
+
+    def allocate(
+        self,
+        task: TaskSpec,
+        snapshot: ClusterSnapshot,
+        window: TaskWindow,
+        now: float,
+    ) -> Allocation:
+        # --- Monitor: Alg. 2 + Alg. 1 lines 15-23.
+        residual_cpu, residual_mem = discovery.discover(snapshot)
+        summary = discovery.summarize(residual_cpu, residual_mem)
+
+        # --- Alg. 1 lines 4-13: in-window demand. The lifecycle window is
+        # [now, now + duration) — bounded by the deadline when declared.
+        window_end = now + task.duration
+        if task.deadline is not None:
+            window_end = min(window_end, task.deadline)
+        req_cpu, req_mem = lifecycle.window_demand(
+            window, now, window_end, task.cpu, task.mem
+        )
+
+        # --- Analyse/Plan: Alg. 3.
+        result = evaluate_jit(
+            EvalInputs(
+                task_cpu=task.cpu,
+                task_mem=task.mem,
+                request_cpu=req_cpu,
+                request_mem=req_mem,
+                total_residual_cpu=summary["total_cpu"],
+                total_residual_mem=summary["total_mem"],
+                re_max_cpu=summary["re_max_cpu"],
+                re_max_mem=summary["re_max_mem"],
+            ),
+            self.alpha,
+        )
+        alloc_cpu = float(result.cpu)
+        alloc_mem = float(result.mem)
+        scenario = SCENARIO_NAMES[int(result.scenario)]
+
+        # --- Alg. 1 line 27 acceptance gate.
+        feasible = (alloc_cpu >= task.min_cpu) and (
+            alloc_mem >= task.min_mem + self.beta
+        )
+
+        node = _best_node_for(
+            np.asarray(residual_cpu), np.asarray(residual_mem), alloc_cpu, alloc_mem
+        )
+        if node < 0:
+            feasible = False
+        return Allocation(
+            cpu=alloc_cpu, mem=alloc_mem, node=node, feasible=feasible,
+            scenario=scenario,
+        )
+
+
+@dataclasses.dataclass
+class FCFSAllocator:
+    """Baseline (§6.1.6): first-come-first-serve full-request allocation.
+
+    No lifecycle look-ahead, no scaling: the task gets exactly its declared
+    request when some node has room, else it waits for other pods to
+    release resources.
+    """
+
+    name: str = "fcfs"
+
+    def allocate(
+        self,
+        task: TaskSpec,
+        snapshot: ClusterSnapshot,
+        window: TaskWindow,
+        now: float,
+    ) -> Allocation:
+        residual_cpu, residual_mem = discovery.discover(snapshot)
+        node = _best_node_for(
+            np.asarray(residual_cpu), np.asarray(residual_mem), task.cpu, task.mem
+        )
+        return Allocation(
+            cpu=task.cpu,
+            mem=task.mem,
+            node=node,
+            feasible=node >= 0,
+            scenario="fcfs",
+        )
+
+
+def make_allocator(name: str, **kwargs) -> AdaptiveAllocator | FCFSAllocator:
+    if name == "aras":
+        return AdaptiveAllocator(**kwargs)
+    if name in ("fcfs", "baseline"):
+        return FCFSAllocator()
+    raise ValueError(f"unknown allocator {name!r} (want 'aras' or 'fcfs')")

@@ -1,0 +1,64 @@
+"""Lifecycle concurrency window — Algorithm 1 lines 4-13, vectorized.
+
+``request.cpu`` / ``request.mem`` accumulate the declared requests of every
+task whose start time falls inside the current task's lifecycle window
+``[t_start, t_end)`` — the set of pods that will *compete* with the current
+request (paper Fig. 1).  The Go original iterates the Redis task map; here
+it is one masked reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import TaskWindow
+
+
+@jax.jit
+def _window_demand(
+    t_start: jax.Array,
+    cpu: jax.Array,
+    mem: jax.Array,
+    done: jax.Array,
+    window_start: jax.Array,
+    window_end: jax.Array,
+    own_cpu: jax.Array,
+    own_mem: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    # Alg.1 line 9: task.t_start ∈ [task_req.t_start, task_req.t_end).
+    in_window = (t_start >= window_start) & (t_start < window_end) & (~done)
+    w = in_window.astype(cpu.dtype)
+    req_cpu = own_cpu + jnp.sum(cpu * w)
+    req_mem = own_mem + jnp.sum(mem * w)
+    return req_cpu, req_mem
+
+
+def window_demand(
+    window: TaskWindow,
+    window_start: float,
+    window_end: float,
+    own_cpu: float,
+    own_mem: float,
+) -> Tuple[float, float]:
+    """Total in-window demand including the requesting task itself.
+
+    Alg. 1 lines 5-6 seed the accumulator with the current task's own
+    request; lines 8-13 add every not-yet-done record whose start lies in
+    the window.
+    """
+    if window.t_start.shape[0] == 0:
+        return float(own_cpu), float(own_mem)
+    req_cpu, req_mem = _window_demand(
+        jnp.asarray(window.t_start, jnp.float32),
+        jnp.asarray(window.cpu, jnp.float32),
+        jnp.asarray(window.mem, jnp.float32),
+        jnp.asarray(window.done),
+        jnp.float32(window_start),
+        jnp.float32(window_end),
+        jnp.float32(own_cpu),
+        jnp.float32(own_mem),
+    )
+    return float(req_cpu), float(req_mem)

@@ -1,0 +1,56 @@
+"""MAPE-K adaptive loop (paper §4.3, Fig. 3).
+
+The loop binds the four phases to concrete components:
+
+    Monitor  — an Informer-style snapshot provider + the knowledge base
+    Analyse  — the Resource Evaluator (Alg. 3) via the allocator
+    Plan     — the accepted Allocation (vertical-scaling plan)
+    Execute  — a launch callback (Containerized Executor)
+    Knowledge— the task-state store (Redis analogue)
+
+It is deliberately thin: the engine (``repro.engine``) drives it per task
+request; the self-healing path (OOMKilled → reallocate → relaunch, paper
+§6.2.2) re-enters the same loop with the *runtime* minimum so the second
+pass allocates enough memory — exactly Fig. 9's Reallocation marker.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core.types import Allocation, ClusterSnapshot, TaskSpec, TaskWindow
+
+
+@dataclasses.dataclass
+class MapeK:
+    monitor: Callable[[], ClusterSnapshot]  # Informer snapshot
+    knowledge: Callable[[], TaskWindow]  # Redis-backed task records
+    analyser: object  # AdaptiveAllocator | FCFSAllocator
+    execute: Callable[[TaskSpec, Allocation], None]
+
+    def step(self, task: TaskSpec, now: float) -> Optional[Allocation]:
+        """One M-A-P-E cycle for a task-pod resource request.
+
+        Returns the executed allocation, or None when the Plan was
+        rejected (engine re-queues the request — paper Alg. 1 loop).
+        """
+        snapshot = self.monitor()  # Monitor
+        window = self.knowledge()  # Knowledge
+        plan = self.analyser.allocate(task, snapshot, window, now)  # Analyse+Plan
+        if not plan.feasible:
+            return None
+        self.execute(task, plan)  # Execute
+        return plan
+
+    def heal(self, task: TaskSpec, now: float) -> Optional[Allocation]:
+        """Self-healing re-entry after OOMKilled (paper §6.2.2).
+
+        The reallocation honours the task's *runtime* memory floor — the
+        knowledge base has learned the true requirement from the OOM event
+        — so the relaunched pod cannot OOM on the same boundary again
+        provided the cluster can ever satisfy it.
+        """
+        learned = dataclasses.replace(
+            task, min_mem=max(task.min_mem, task.runtime_min_mem())
+        )
+        return self.step(learned, now)

@@ -1,0 +1,159 @@
+"""Core datatypes for the ARAS control plane.
+
+The paper's system model (§3) uses two resource kinds: CPU (compressible)
+and memory (incompressible).  We keep that pair everywhere but treat the
+*unit system* as opaque — the same structures carry (millicores, MiB) for
+the faithful K8s reproduction and (chip-milliseconds, HBM MiB) for the
+TPU-pod workload mode.
+
+Array-of-struct layouts are used at the engine level (readable), and
+struct-of-array snapshots (`ClusterSnapshot`, `TaskWindow`) at the JAX
+level so the allocation math vectorizes over nodes / pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+
+class PodPhase(enum.IntEnum):
+    """K8s pod lifecycle phases tracked by the simulator (paper §5.2)."""
+
+    PENDING = 0
+    RUNNING = 1
+    SUCCEEDED = 2
+    FAILED = 3
+    OOM_KILLED = 4
+    DELETED = 5
+
+    @property
+    def consumes_resources(self) -> bool:
+        # Alg. 2 line 8: Running and Pending pods count against a node.
+        return self in (PodPhase.PENDING, PodPhase.RUNNING)
+
+
+@dataclasses.dataclass(frozen=True)
+class Resources:
+    """A (cpu, mem) pair. cpu is compressible, mem is incompressible."""
+
+    cpu: float
+    mem: float
+
+    def __add__(self, other: "Resources") -> "Resources":
+        return Resources(self.cpu + other.cpu, self.mem + other.mem)
+
+    def __sub__(self, other: "Resources") -> "Resources":
+        return Resources(self.cpu - other.cpu, self.mem - other.mem)
+
+    def scale(self, f: float) -> "Resources":
+        return Resources(self.cpu * f, self.mem * f)
+
+    def fits_in(self, other: "Resources") -> bool:
+        return self.cpu <= other.cpu and self.mem <= other.mem
+
+    def nonneg(self) -> bool:
+        return self.cpu >= 0 and self.mem >= 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """One workflow task s_{i,j} (paper Eq. 1).
+
+    ``cpu``/``mem`` are the user-declared request; ``min_cpu``/``min_mem``
+    the minimum viable allocation; ``duration`` the Stress-driven runtime;
+    ``deadline`` the per-task SLO (Eq. 3).  ``actual_min_mem`` models what
+    the task program *really* needs at runtime — §6.2.2 fine-tunes
+    ``min_mem`` below it to provoke OOMKilled.
+    """
+
+    task_id: str
+    image: str
+    cpu: float
+    mem: float
+    duration: float
+    min_cpu: float
+    min_mem: float
+    deadline: Optional[float] = None
+    actual_min_mem: Optional[float] = None  # runtime truth; defaults to min_mem
+
+    @property
+    def request(self) -> Resources:
+        return Resources(self.cpu, self.mem)
+
+    @property
+    def minimum(self) -> Resources:
+        return Resources(self.min_cpu, self.min_mem)
+
+    def runtime_min_mem(self) -> float:
+        return self.min_mem if self.actual_min_mem is None else self.actual_min_mem
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSnapshot:
+    """Struct-of-arrays Informer view consumed by the JAX algorithms.
+
+    ``allocatable_*``: per-node allocatable capacity (Alg. 2 lines 15-17).
+    ``pod_*``: one entry per tracked pod; ``pod_active`` marks
+    Running/Pending pods (Alg. 2 line 8), ``pod_node`` the hosting node.
+    """
+
+    allocatable_cpu: np.ndarray  # [m] float32
+    allocatable_mem: np.ndarray  # [m] float32
+    pod_node: np.ndarray  # [p] int32, index into nodes
+    pod_cpu: np.ndarray  # [p] float32, request quota
+    pod_mem: np.ndarray  # [p] float32, request quota
+    pod_active: np.ndarray  # [p] bool
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.allocatable_cpu.shape[0])
+
+    @staticmethod
+    def empty(num_nodes: int) -> "ClusterSnapshot":
+        z = np.zeros((0,), np.float32)
+        return ClusterSnapshot(
+            allocatable_cpu=np.zeros((num_nodes,), np.float32),
+            allocatable_mem=np.zeros((num_nodes,), np.float32),
+            pod_node=np.zeros((0,), np.int32),
+            pod_cpu=z,
+            pod_mem=z,
+            pod_active=np.zeros((0,), bool),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskWindow:
+    """State-store view for Alg. 1 lines 4-13 (lifecycle concurrency).
+
+    One entry per task record in the knowledge base (Redis analogue):
+    start time, declared request, completion flag.
+    """
+
+    t_start: np.ndarray  # [t] float32
+    cpu: np.ndarray  # [t] float32
+    mem: np.ndarray  # [t] float32
+    done: np.ndarray  # [t] bool  (flag == true in Eq. 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """Result of one ARAS / baseline decision."""
+
+    cpu: float
+    mem: float
+    node: int  # target node index, -1 if no placement found
+    feasible: bool  # meets Alg.1 line-27 minimum-resource acceptance
+    # Diagnostics (which Alg.3 scenario fired) — for tests and tracing.
+    scenario: str = ""
+
+    @property
+    def resources(self) -> Resources:
+        return Resources(self.cpu, self.mem)
+
+
+# Experience constants from the paper (§5.1, §5.3, Table 1).
+DEFAULT_ALPHA = 0.8  # single-node saturation guard, α ∈ (0,1)
+DEFAULT_BETA = 20.0  # memory headroom above min_mem, β ≥ 20 (MiB)

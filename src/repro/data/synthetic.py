@@ -1,0 +1,60 @@
+"""Deterministic, step-indexed synthetic token pipeline.
+
+Properties the trainer relies on:
+
+* **step-indexed**: ``batch_at(step)`` is a pure function of (seed, step) —
+  restarting from a checkpoint at step k reproduces the exact remaining
+  batch stream (bit-exact restart tests depend on this);
+* **learnable**: tokens follow a noisy affine recurrence
+  ``t_{i+1} = (a·t_i + b) mod V`` so small models visibly reduce loss in
+  the end-to-end examples;
+* **shardable**: the leading batch axis is laid out host-major so each data
+  shard draws a disjoint deterministic slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class SyntheticDataset:
+    cfg: ModelConfig
+    batch: int
+    seq: int
+    seed: int = 0
+    noise: float = 0.05  # fraction of corrupted transitions
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        V = self.cfg.vocab_size
+        a, b = 31, 7  # affine recurrence parameters (coprime with V)
+        t0 = rng.integers(0, V, size=(self.batch, 1))
+        seqs = [t0]
+        for _ in range(self.seq):
+            seqs.append((a * seqs[-1] + b) % V)
+        toks = np.concatenate(seqs, axis=1)  # [B, S+1]
+        corrupt = rng.random((self.batch, self.seq + 1)) < self.noise
+        toks = np.where(corrupt, rng.integers(0, V, toks.shape), toks)
+        out = {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+        }
+        if self.cfg.is_vlm:
+            out["vision_embeds"] = jnp.asarray(
+                rng.standard_normal(
+                    (self.batch, self.cfg.num_vision_tokens,
+                     self.cfg.d_model)), jnp.float32)
+        if self.cfg.is_encdec:
+            out["frames"] = jnp.asarray(
+                rng.standard_normal(
+                    (self.batch, self.cfg.num_audio_frames,
+                     self.cfg.d_model)), jnp.float32)
+        return out

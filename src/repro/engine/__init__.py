@@ -1,0 +1,16 @@
+from repro.engine.kubeadaptor import (
+    EngineConfig,
+    EngineMetrics,
+    KubeAdaptor,
+    run_experiment,
+)
+from repro.engine.state_store import StateStore, TaskRecord
+
+__all__ = [
+    "EngineConfig",
+    "EngineMetrics",
+    "KubeAdaptor",
+    "run_experiment",
+    "StateStore",
+    "TaskRecord",
+]

@@ -1,0 +1,329 @@
+"""KubeAdaptor — the workflow engine (paper Fig. 2), discrete-event form.
+
+Components map 1:1 to the paper:
+
+* Workflow Injection Module  → ``inject`` events from an arrival pattern
+* Interface Unit             → ready-task decomposition + state tracking
+* Resource Manager           → pluggable allocator (ARAS / FCFS baseline)
+  driven through the MAPE-K cycle
+* Containerized Executor     → ``ClusterSim.bind`` (pod creation)
+* Task Container Cleaner     → delayed pod deletion, OOMKilled watch
+* Redis                      → ``StateStore``
+
+Fault-tolerance semantics follow §6.2.2: a pod whose memory quota is below
+its *runtime* requirement + β turns OOMKilled mid-run; the engine deletes
+it, re-allocates with the learned floor, and relaunches (self-healing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cluster.simulator import ClusterSim
+from repro.core.allocator import make_allocator
+from repro.core.types import DEFAULT_BETA, Allocation, PodPhase, TaskSpec
+from repro.engine.state_store import StateStore, TaskRecord
+from repro.workflows.spec import WorkflowSpec
+
+# Event kinds, ordered: deletions/completions before retries before arrivals
+# at equal timestamps so released resources are visible to retries.
+_COMPLETE, _OOM, _DELETE, _RETRY, _INJECT, _READY = range(6)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    num_nodes: int = 6
+    # §6.1.1: 8-core / 16 GB workers; ~15% is system-reserved (kubelet,
+    # kube-proxy, KubeAdaptor's own pods), as on the paper's testbed.
+    node_cpu: float = 6800.0  # allocatable millicores
+    node_mem: float = 13600.0  # allocatable MiB
+    allocator: str = "aras"  # "aras" | "fcfs"
+    alpha: float = 0.8
+    beta: float = DEFAULT_BETA
+    pod_startup_delay: float = 40.0  # schedule + image pull + start (Fig. 9)
+    cleanup_delay: float = 5.0  # Task Container Cleaner latency
+    restart_delay: float = 2.0  # OOM watch → regenerate latency
+    oom_fraction: float = 0.3  # OOM fires this far into the run
+    # §6.1.3: Stress CPU/memory operations last twice the task `duration`,
+    # so pod wall time = startup + duration_multiplier · duration.
+    duration_multiplier: float = 2.0
+    max_time: float = 1e7
+
+
+@dataclasses.dataclass
+class WorkflowRun:
+    spec: WorkflowSpec
+    injected_at: float
+    indegree: Dict[str, int] = dataclasses.field(default_factory=dict)
+    done: set = dataclasses.field(default_factory=set)
+    first_start: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def complete(self) -> bool:
+        return len(self.done) == self.spec.num_tasks
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Evaluation metrics of §6.1.5 + trace series for Figs. 5-9."""
+
+    makespan: float = 0.0  # Total Duration of All Workflows
+    workflow_durations: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # time-weighted average utilization (quota / allocatable)
+    avg_cpu_usage: float = 0.0
+    avg_mem_usage: float = 0.0
+    usage_series: List[Tuple[float, float, float]] = dataclasses.field(
+        default_factory=list
+    )
+    oom_events: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+    realloc_events: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+    alloc_trace: List[Tuple[float, str, float, float, str]] = dataclasses.field(
+        default_factory=list
+    )
+    num_allocations: int = 0
+    num_waits: int = 0
+    # SLA accounting (paper Eqs. 2-4): per-workflow deadline violations
+    sla_violations: List[Tuple[str, float, float]] = dataclasses.field(
+        default_factory=list  # (workflow, finished_at, deadline)
+    )
+
+    @property
+    def sla_violation_rate(self) -> float:
+        n = len(self.workflow_durations)
+        return len(self.sla_violations) / n if n else 0.0
+
+    @property
+    def avg_workflow_duration(self) -> float:
+        vals = list(self.workflow_durations.values())
+        return float(np.mean(vals)) if vals else 0.0
+
+
+class KubeAdaptor:
+    """Discrete-event engine executing workflows under an allocator."""
+
+    def __init__(self, config: EngineConfig):
+        self.cfg = config
+        self.cluster = ClusterSim(config.num_nodes, config.node_cpu, config.node_mem)
+        self.allocator = make_allocator(
+            config.allocator,
+            **({"alpha": config.alpha, "beta": config.beta}
+               if config.allocator == "aras" else {}),
+        )
+        self.store = StateStore()
+        self.runs: Dict[str, WorkflowRun] = {}
+        self.metrics = EngineMetrics()
+        self._events: List[Tuple[float, int, int, tuple]] = []
+        self._seq = itertools.count()
+        self._pending: Deque[Tuple[str, TaskSpec]] = deque()
+        self._now = 0.0
+        self._last_sample = (0.0, 0.0, 0.0)  # (t, cpu_util, mem_util)
+        self._util_integral = np.zeros(2)
+
+    # ----------------------------------------------------------- plumbing
+    def _push(self, t: float, kind: int, payload: tuple) -> None:
+        heapq.heappush(self._events, (t, kind, next(self._seq), payload))
+
+    def submit(self, spec: WorkflowSpec, at: float) -> None:
+        self._push(at, _INJECT, (spec,))
+
+    def _sample_usage(self) -> None:
+        """Advance the time-weighted utilization integral to ``now``."""
+        t0, cu, mu = self._last_sample
+        dt = self._now - t0
+        if dt > 0:
+            self._util_integral += dt * np.array([cu, mu])
+        u = self.cluster.utilization()
+        self._last_sample = (self._now, u.cpu, u.mem)
+        self.metrics.usage_series.append((self._now, u.cpu, u.mem))
+
+    # -------------------------------------------------------------- phases
+    def _inject(self, spec: WorkflowSpec) -> None:
+        """Workflow Injection Module + Interface Unit decomposition."""
+        run = WorkflowRun(spec=spec, injected_at=self._now,
+                          indegree=spec.indegrees())
+        self.runs[spec.workflow_id] = run
+        # Plan-phase knowledge: projected earliest starts for every task.
+        est = spec.earliest_starts(self._now)
+        for tid, task in spec.tasks.items():
+            self.store.put(TaskRecord(
+                key=f"{spec.workflow_id}/{tid}", t_start=est[tid],
+                duration=task.duration, cpu=task.cpu, mem=task.mem,
+            ))
+        for tid in spec.roots():
+            self._push(self._now, _READY, (spec.workflow_id, tid))
+
+    def _try_allocate(self, wf_id: str, task: TaskSpec) -> bool:
+        """One MAPE-K cycle: Monitor → Analyse → Plan → Execute."""
+        key = f"{wf_id}/{task.task_id}"
+        snapshot = self.cluster.snapshot()  # Monitor (Informer)
+        window = self.store.window(exclude=key)  # Knowledge
+        alloc = self.allocator.allocate(task, snapshot, window, self._now)
+        if not alloc.feasible:
+            self.metrics.num_waits += 1
+            return False
+        # Execute: Containerized Executor creates the pod.
+        pod = self.cluster.bind(task, alloc, self._now, workflow_id=wf_id)
+        self.store.mark_started(key, self._now)
+        run = self.runs[wf_id]
+        if run.first_start is None:
+            run.first_start = self._now
+        self.metrics.num_allocations += 1
+        self.metrics.alloc_trace.append(
+            (self._now, key, alloc.cpu, alloc.mem, alloc.scenario)
+        )
+        # Will this quota OOM? (§6.2.2: runtime memory floor + β)
+        runtime_floor = task.runtime_min_mem() + self.cfg.beta
+        wall = self.cfg.duration_multiplier * task.duration
+        if alloc.mem < runtime_floor - 1e-9 and task.mem > 0:
+            t_oom = self._now + self.cfg.pod_startup_delay + \
+                self.cfg.oom_fraction * wall
+            self._push(t_oom, _OOM, (pod.uid, wf_id))
+        else:
+            t_done = self._now + self.cfg.pod_startup_delay + wall
+            self._push(t_done, _COMPLETE, (pod.uid, wf_id))
+        self._sample_usage()
+        return True
+
+    def _ready(self, wf_id: str, tid: str) -> None:
+        task = self.runs[wf_id].spec.tasks[tid]
+        if task.cpu == 0 and task.mem == 0:
+            # Virtual entrance/exit: complete instantly, no pod.
+            self._task_done(wf_id, tid)
+            return
+        if not self._try_allocate(wf_id, task):
+            self._pending.append((wf_id, task))
+
+    def _task_done(self, wf_id: str, tid: str) -> None:
+        run = self.runs[wf_id]
+        key = f"{wf_id}/{tid}"
+        self.store.mark_done(key, self._now)
+        run.done.add(tid)
+        if run.first_start is None and run.spec.tasks[tid].cpu == 0:
+            pass  # virtual entrance does not count as a start
+        for child in run.spec.children(tid):
+            run.indegree[child] -= 1
+            if run.indegree[child] == 0:
+                self._push(self._now, _READY, (wf_id, child))
+        if run.complete:
+            run.finished_at = self._now
+            dur_start = run.first_start if run.first_start is not None \
+                else run.injected_at
+            self.metrics.workflow_durations[wf_id] = self._now - dur_start
+            # SLA check (Eq. 4: workflow deadline = last task's deadline)
+            if run.spec.deadline is not None \
+                    and self._now > run.injected_at + run.spec.deadline:
+                self.metrics.sla_violations.append(
+                    (wf_id, self._now, run.injected_at + run.spec.deadline))
+
+    def _complete(self, uid: int, wf_id: str) -> None:
+        pod = self.cluster.finish(uid, self._now, PodPhase.SUCCEEDED)
+        self._sample_usage()
+        self._push(self._now + self.cfg.cleanup_delay, _DELETE, (uid,))
+        self._task_done(wf_id, pod.task.task_id)
+        self._push(self._now, _RETRY, ())
+
+    def _oom(self, uid: int, wf_id: str) -> None:
+        """OOMKilled watch → delete → reallocate (self-healing, Fig. 9)."""
+        pod = self.cluster.finish(uid, self._now, PodPhase.OOM_KILLED)
+        self._sample_usage()
+        key = f"{wf_id}/{pod.task.task_id}"
+        self.metrics.oom_events.append((self._now, key))
+        self._push(self._now + self.cfg.cleanup_delay, _DELETE, (uid,))
+        # Learn the runtime floor so the reallocation cannot repeat the OOM.
+        learned = dataclasses.replace(
+            pod.task, min_mem=max(pod.task.min_mem, pod.task.runtime_min_mem())
+        )
+        self._push(self._now + self.cfg.restart_delay, _READY + 100,
+                   (wf_id, learned))
+
+    def _heal(self, wf_id: str, task: TaskSpec) -> None:
+        self.metrics.realloc_events.append(
+            (self._now, f"{wf_id}/{task.task_id}")
+        )
+        if not self._try_allocate(wf_id, task):
+            self._pending.append((wf_id, task))
+
+    def _retry_pending(self) -> None:
+        """Re-try the wait queue after a resource release.
+
+        Strict FIFO with head-of-line blocking, as in the paper's
+        baseline (§6.1.6: the engine "waits for other task pods to
+        complete and release resources to meet the resource reallocation
+        for the CURRENT task request") — if the head cannot allocate,
+        everything behind it keeps waiting.  Both allocators share the
+        discipline; ARAS rarely blocks because it scales instead.
+        """
+        while self._pending:
+            wf_id, task = self._pending[0]
+            if not self._try_allocate(wf_id, task):
+                break
+            self._pending.popleft()
+
+    # ------------------------------------------------------------ run loop
+    def run(self) -> EngineMetrics:
+        t_first: Optional[float] = None
+        while self._events:
+            t, kind, _, payload = heapq.heappop(self._events)
+            if t > self.cfg.max_time:
+                raise RuntimeError("simulation exceeded max_time — deadlock?")
+            self._now = t
+            if t_first is None:
+                t_first = t
+            if kind == _INJECT:
+                self._inject(*payload)
+            elif kind == _READY:
+                self._ready(*payload)
+            elif kind == _COMPLETE:
+                self._complete(*payload)
+            elif kind == _OOM:
+                self._oom(*payload)
+            elif kind == _DELETE:
+                self.cluster.delete(*payload)
+            elif kind == _RETRY:
+                self._retry_pending()
+            elif kind == _READY + 100:
+                self._heal(*payload)
+            self.cluster.check_invariants()
+
+        incomplete = [w for w, r in self.runs.items() if not r.complete]
+        if incomplete or self._pending:
+            raise RuntimeError(
+                f"deadlocked workflows: {incomplete}, pending={len(self._pending)}"
+            )
+        self._sample_usage()
+        total = self._now - (t_first or 0.0)
+        self.metrics.makespan = total
+        if total > 0:
+            self.metrics.avg_cpu_usage = float(self._util_integral[0] / total)
+            self.metrics.avg_mem_usage = float(self._util_integral[1] / total)
+        return self.metrics
+
+
+def run_experiment(
+    workflow_kind: str,
+    pattern: List[Tuple[float, int]],
+    allocator: str,
+    seed: int = 0,
+    config: Optional[EngineConfig] = None,
+    task_kwargs: Optional[dict] = None,
+) -> EngineMetrics:
+    """Inject `pattern` bursts of `workflow_kind` and run to completion."""
+    from repro.workflows.dags import WORKFLOW_BUILDERS
+
+    cfg = dataclasses.replace(config or EngineConfig(), allocator=allocator)
+    engine = KubeAdaptor(cfg)
+    rng = np.random.default_rng(seed)
+    builder = WORKFLOW_BUILDERS[workflow_kind]
+    idx = 0
+    for t, count in pattern:
+        for _ in range(count):
+            spec = builder(f"{workflow_kind}-{idx}", rng, task_kwargs)
+            engine.submit(spec, t)
+            idx += 1
+    return engine.run()

@@ -1,0 +1,163 @@
+"""ML workloads as workflow tasks — the paper's technique driving real
+JAX jobs (DESIGN §2, workload plane).
+
+A ``MLTaskSpec`` wraps a training job (arch config + steps + token
+budget) as a workflow task whose resources are (chip-milliseconds,
+HBM MiB).  The ARAS quota maps onto the job's *microbatch size*: memory
+is the incompressible resource (activations must fit the quota), compute
+the compressible one — exactly the paper's CPU/memory split.  An
+OOMKilled job (quota below the activation floor) self-heals by halving
+the microbatch and restarting from its last checkpoint — Fig. 9
+semantics on the workload plane.
+
+``run_ml_workflow`` executes a DAG of training jobs under ARAS on the
+local device, with per-job checkpointing. Used by
+``examples/train_lm.py`` and ``tests/test_mljobs.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.allocator import AdaptiveAllocator
+from repro.core.types import Allocation, ClusterSnapshot, TaskSpec, TaskWindow
+from repro.data.synthetic import SyntheticDataset
+from repro.models.api import build_model
+from repro.models.config import ModelConfig
+from repro.optim import make_optimizer
+from repro.training import LoopConfig, train
+
+
+@dataclasses.dataclass
+class MLTaskSpec:
+    """A training job as a workflow task."""
+
+    task_id: str
+    cfg: ModelConfig
+    steps: int
+    batch: int  # requested global batch (the 'cpu'-like knob)
+    seq: int
+    mem_mib_per_seq: float = 8.0  # activation footprint per sequence
+    min_batch: int = 1
+    depends_on: Tuple[str, ...] = ()
+
+    def as_task(self) -> TaskSpec:
+        return TaskSpec(
+            task_id=self.task_id,
+            image=f"jax-train:{self.cfg.name}",
+            cpu=float(self.batch),  # compressible: batch lanes
+            mem=self.batch * self.mem_mib_per_seq,  # incompressible
+            duration=float(self.steps),
+            min_cpu=float(self.min_batch),
+            min_mem=self.min_batch * self.mem_mib_per_seq,
+        )
+
+
+@dataclasses.dataclass
+class MLJobResult:
+    task_id: str
+    batch_used: int
+    final_loss: float
+    restarts: int
+    wall_s: float
+
+
+def run_ml_workflow(
+    jobs: List[MLTaskSpec],
+    *,
+    cluster_mem: float = 256.0,  # MiB of "HBM" the allocator manages
+    ckpt_root: str = "/tmp/repro_mljobs",
+    seed: int = 0,
+    inject_oom_once: bool = False,
+) -> Dict[str, MLJobResult]:
+    """Execute a DAG of training jobs under ARAS quota control."""
+    allocator = AdaptiveAllocator()
+    done: Dict[str, MLJobResult] = {}
+    pending = {j.task_id: j for j in jobs}
+    running_quota: List[Tuple[str, float]] = []  # (task, mem quota)
+
+    def snapshot() -> ClusterSnapshot:
+        used = [m for _, m in running_quota]
+        return ClusterSnapshot(
+            allocatable_cpu=np.array([1e9], np.float32),
+            allocatable_mem=np.array([cluster_mem], np.float32),
+            pod_node=np.zeros((len(used),), np.int32),
+            pod_cpu=np.ones((len(used),), np.float32),
+            pod_mem=np.array(used, np.float32),
+            pod_active=np.ones((len(used),), bool),
+        )
+
+    def window() -> TaskWindow:
+        waiting = [j.as_task() for j in pending.values()]
+        return TaskWindow(
+            t_start=np.zeros((len(waiting),), np.float32),
+            cpu=np.array([t.cpu for t in waiting], np.float32),
+            mem=np.array([t.mem for t in waiting], np.float32),
+            done=np.zeros((len(waiting),), bool),
+        )
+
+    oom_injected = [not inject_oom_once]
+    order = _topo_order(jobs)
+    for tid in order:
+        job = pending.pop(tid)
+        task = job.as_task()
+        alloc = allocator.allocate(task, snapshot(), window(), now=0.0)
+        # vertical scaling: quota -> microbatch lanes
+        batch = max(job.min_batch,
+                    min(job.batch, int(alloc.mem / job.mem_mib_per_seq)))
+        restarts = 0
+        ckpt = os.path.join(ckpt_root, tid)
+        shutil.rmtree(ckpt, ignore_errors=True)
+        t0 = time.time()
+        while True:
+            try:
+                if not oom_injected[0] and restarts == 0:
+                    oom_injected[0] = True
+                    raise MemoryError("injected HBM OOM")
+                model = build_model(job.cfg)
+                opt = make_optimizer("adamw", learning_rate=3e-3)
+                ds = SyntheticDataset(job.cfg, batch=batch, seq=job.seq,
+                                      seed=seed)
+                lc = LoopConfig(total_steps=job.steps,
+                                checkpoint_every=max(1, job.steps // 4),
+                                checkpoint_dir=ckpt, log_every=10 ** 9)
+                train(model, opt, ds, lc)
+                loss = train.last_history[-1]
+                break
+            except MemoryError:
+                # MAPE-K self-healing: halve the microbatch, restart from
+                # the latest checkpoint (loop restores automatically).
+                restarts += 1
+                batch = max(job.min_batch, batch // 2)
+        running_quota.append((tid, batch * job.mem_mib_per_seq))
+        done[tid] = MLJobResult(task_id=tid, batch_used=batch,
+                                final_loss=float(loss), restarts=restarts,
+                                wall_s=time.time() - t0)
+    return done
+
+
+def _topo_order(jobs: List[MLTaskSpec]) -> List[str]:
+    by_id = {j.task_id: j for j in jobs}
+    seen: Dict[str, int] = {}
+    order: List[str] = []
+
+    def visit(tid: str):
+        if seen.get(tid) == 2:
+            return
+        if seen.get(tid) == 1:
+            raise ValueError("cycle in ML job DAG")
+        seen[tid] = 1
+        for dep in by_id[tid].depends_on:
+            visit(dep)
+        seen[tid] = 2
+        order.append(tid)
+
+    for j in jobs:
+        visit(j.task_id)
+    return order

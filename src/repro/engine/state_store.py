@@ -1,0 +1,62 @@
+"""Knowledge base — the Redis analogue (paper Eq. 8, §4.2).
+
+Holds one record per task: ``{t_start, duration, t_end, cpu, mem, flag}``.
+``t_start`` is the *projected* earliest start (critical-path estimate from
+the Plan phase) until the task actually launches, then the actual start —
+this is what lets Alg. 1 see future in-window competitors (Fig. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.types import TaskWindow
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    key: str  # f"{workflow_id}/{task_id}"
+    t_start: float  # projected until launched, then actual
+    duration: float
+    cpu: float
+    mem: float
+    t_end: float = 0.0
+    flag: bool = False  # True once complete (Eq. 8)
+
+
+class StateStore:
+    """Map<task.id, task_record> with an array view for the JAX window."""
+
+    def __init__(self) -> None:
+        self._records: Dict[str, TaskRecord] = {}
+
+    def put(self, rec: TaskRecord) -> None:
+        self._records[rec.key] = rec
+
+    def get(self, key: str) -> Optional[TaskRecord]:
+        return self._records.get(key)
+
+    def mark_started(self, key: str, t_start: float) -> None:
+        rec = self._records[key]
+        rec.t_start = t_start
+        rec.t_end = t_start + rec.duration
+
+    def mark_done(self, key: str, t_end: float) -> None:
+        rec = self._records[key]
+        rec.flag = True
+        rec.t_end = t_end
+
+    def window(self, exclude: Optional[str] = None) -> TaskWindow:
+        """Struct-of-arrays view for Alg. 1 (excluding the requester)."""
+        recs = [r for k, r in self._records.items() if k != exclude]
+        return TaskWindow(
+            t_start=np.array([r.t_start for r in recs], np.float32),
+            cpu=np.array([r.cpu for r in recs], np.float32),
+            mem=np.array([r.mem for r in recs], np.float32),
+            done=np.array([r.flag for r in recs], bool),
+        )
+
+    def __len__(self) -> int:
+        return len(self._records)

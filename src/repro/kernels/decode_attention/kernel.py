@@ -1,0 +1,108 @@
+"""Flash-decoding: single-token attention against a long KV cache.
+
+One query token per sequence attends to T cached positions.  The kernel
+splits the cache into kv blocks along the sequential minor grid dim and
+combines partial softmax statistics in VMEM scratch — the TPU analogue of
+GPU flash-decoding's split-KV reduction, with the MXU doing [H_blk, bk]
+score tiles.  Invalid (future / unwritten) slots are masked from ``pos``.
+
+This kernel is also the per-shard body of the shard_map sequence-sharded
+decode path (§Perf): each model-axis shard runs it over its cache slice,
+then partial (m, l, acc) combine with a tiny psum.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, scale: float, bk: int, kv_heads: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [H, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    pos = pos_ref[0]  # scalar: number of valid cache slots
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(
+    q: jax.Array,  # [B, H, d]   one token per sequence
+    k: jax.Array,  # [B, T, KV, d]
+    v: jax.Array,
+    pos: jax.Array,  # [B] int32: valid cache length per sequence
+    *,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, d = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    if H != KV:
+        # GQA: fold the group into the head dim by repeating kv reads —
+        # the BlockSpec maps q-head blocks onto their kv head.
+        assert H % KV == 0
+    scale = 1.0 / math.sqrt(d)
+    nk = pl.cdiv(T, bk)
+
+    # one kv-head group at a time: grid (B*KV, nk); q rows grouped per kv
+    G = H // KV
+    qg = q.reshape(B * KV, G, d)
+    kg = k.transpose(0, 2, 1, 3).reshape(B * KV, T, 1, d)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * KV, T, 1, d)
+    posg = jnp.repeat(pos, KV)
+
+    out = pl.pallas_call(
+        functools.partial(_dec_kernel, scale=scale, bk=bk, kv_heads=KV),
+        grid=(B * KV, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, d), lambda g, ki: (g, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda g, ki: (g, ki, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda g, ki: (g, ki, 0, 0)),
+            pl.BlockSpec((1,), lambda g, ki: (g,),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, G, d), lambda g, ki: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg, posg)
+    return out.reshape(B, KV, G, d).reshape(B, H, d)

@@ -1,0 +1,34 @@
+"""Public wrapper: padding + backend dispatch for flash decoding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
+                 interpret=None) -> jax.Array:
+    """q [B,H,d]; k/v [B,T,KV,d]; pos [B] -> [B,H,d]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, H, d = q.shape
+    T = k.shape[1]
+    dp = (-d) % 128
+    bk = min(256, 1 << (T - 1).bit_length())
+    tp = (-T) % bk
+    if dp or tp:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, dp)))
+        k = jnp.pad(k, ((0, 0), (0, tp), (0, 0), (0, dp)))
+        v = jnp.pad(v, ((0, 0), (0, tp), (0, 0), (0, dp)))
+    # padded positions are masked by `pos`; padded head dims contribute 0
+    # to scores but change the scale -> rescale q to compensate
+    if dp:
+        q = q * jnp.sqrt((d + dp) / d).astype(q.dtype)
+    out = decode_attention(q, k, v, pos, bk=bk, interpret=interpret)
+    return out[:, :, :d]

@@ -1,0 +1,23 @@
+"""Oracle for single-token decode attention (pure jnp)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         pos: jax.Array) -> jax.Array:
+    """q [B,H,d]; k/v [B,T,KV,d]; pos [B] valid lengths -> [B,H,d]."""
+    B, H, d = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.reshape(B, KV, G, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    valid = jnp.arange(T)[None, :] < pos[:, None]  # [B, T]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, d).astype(q.dtype)

@@ -1,0 +1,118 @@
+"""Blocked causal/windowed flash-attention forward (Pallas TPU).
+
+TPU-native adaptation: q/k/v tiles live in VMEM with MXU-aligned block
+shapes (bq × d and bk × d, multiples of 128 on the lane dim); the online-
+softmax running max/denominator/accumulator sit in VMEM scratch that
+persists across the sequential kv-block grid dimension (TPU grids execute
+minor-dim-sequentially, so scratch carries state — the Pallas analogue of
+a CUDA persistent-CTA loop).
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); GQA maps q-head h to kv head
+h // (H // KV) in the k/v index maps.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window, bq: int, bk: int,
+               kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # [bq, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < kv_len  # padding
+    if causal:
+        mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # [bq, bk]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret", "kv_len",
+                     "head_dim"))
+def flash_attention_fwd(
+    q: jax.Array,  # [B, S, H, d]   (d padded to 128-multiple by ops.py)
+    k: jax.Array,  # [B, T, KV, d]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+    kv_len: int = 0,  # true (unpadded) kv length; 0 -> T
+    head_dim: int = 0,  # true head dim for the softmax scale; 0 -> d
+) -> jax.Array:
+    B, S, H, d = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(head_dim or d)
+    nq = pl.cdiv(S, bq)
+    nk = pl.cdiv(T, bk)
+
+    grid = (B, H, nq, nk)
+    return pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk,
+                          kv_len=kv_len or T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running max
+            pltpu.VMEM((bq, 1), jnp.float32),  # denominator
+            pltpu.VMEM((bq, d), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,70 @@
+"""Jit'd public wrapper: padding, GQA plumbing, backend dispatch.
+
+``flash_attention`` pads the head dim to a 128 lane multiple and the kv
+length to the block size (masked inside the kernel), runs the Pallas
+kernel (interpret=True off-TPU), and slices back.  The custom_vjp uses
+the reference path for the backward (recompute — memory-light), so the
+kernel is usable inside ``train_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    return _fwd_impl(q, k, v, causal, window, interpret)
+
+
+def _fwd_impl(q, k, v, causal, window, interpret):
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, H, d = q.shape
+    T = k.shape[1]
+    bq = min(128, max(8, 1 << (S - 1).bit_length()))
+    bk = min(128, max(8, 1 << (T - 1).bit_length()))
+    qp = _pad_to(_pad_to(q, 3, 128), 1, bq)
+    kp = _pad_to(_pad_to(k, 3, 128), 1, bk)
+    vp = _pad_to(_pad_to(v, 3, 128), 1, bk)
+    out = flash_attention_fwd(
+        qp, kp, vp, causal=causal, window=window,
+        bq=min(bq, qp.shape[1]), bk=min(bk, kp.shape[1]),
+        interpret=interpret, kv_len=T, head_dim=d)
+    return out[:, :S, :, :d]
+
+
+def _vjp_fwd(q, k, v, causal, window, interpret):
+    return _fwd_impl(q, k, v, causal, window, interpret), (q, k, v)
+
+
+def _vjp_bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (no Pallas, no blocking)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q [B,S,H,d]; k/v [B,T,KV,d] (GQA) -> [B,S,H,d], fp32 accumulation."""
+    B, S, H, d = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.reshape(B, S, KV, G, d).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    if causal:
+        q_pos = jnp.arange(S)[:, None]
+        k_pos = jnp.arange(T)[None, :]
+        mask = k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, d).astype(q.dtype)

@@ -1,0 +1,87 @@
+"""Chunked selective-scan (Mamba-1 recurrence) — Pallas TPU.
+
+    h_t = da_t ⊙ h_{t-1} + dbx_t          (per channel × state)
+
+TPU-native blocking: the (B, S, di, n) recurrence tiles the *channel* dim
+into VMEM-sized blocks and walks sequence chunks along the last (minor,
+sequential) grid dimension; the inter-chunk carry lives in VMEM scratch
+(never returns to HBM).  Within a chunk the recurrence is a short
+``fori_loop`` of [bd, n] VPU element-wise ops — d_state (16) rides the
+lane dim, channels the sublane dim.  This avoids materializing the
+(B, S, di, n) tensor in HBM more than once (read da/dbx, write h).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(da_ref, dbx_ref, h0_ref, h_ref, hf_ref, carry_ref, *,
+                 chunk: int):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        carry_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        da_t = da_ref[0, t].astype(jnp.float32)  # [bd, n]
+        dbx_t = dbx_ref[0, t].astype(jnp.float32)
+        h = da_t * h + dbx_t
+        h_ref[0, t] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, carry_ref[...])
+    carry_ref[...] = h
+
+    @pl.when(si == ns - 1)
+    def _final():
+        hf_ref[0] = h.astype(hf_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def mamba_scan(
+    da: jax.Array,  # [B, S, di, n] fp32
+    dbx: jax.Array,  # [B, S, di, n] fp32
+    h0: jax.Array,  # [B, di, n] fp32
+    *,
+    chunk: int = 128,
+    block_d: int = 256,
+    interpret: bool = False,
+):
+    """Returns (h [B,S,di,n], h_final [B,di,n])."""
+    B, S, di, n = da.shape
+    chunk = min(chunk, S)
+    block_d = min(block_d, di)
+    assert S % chunk == 0 and di % block_d == 0, (S, chunk, di, block_d)
+    grid = (B, di // block_d, S // chunk)
+
+    h, hf = pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d, n),
+                         lambda b, dI, si: (b, si, dI, 0)),
+            pl.BlockSpec((1, chunk, block_d, n),
+                         lambda b, dI, si: (b, si, dI, 0)),
+            pl.BlockSpec((1, block_d, n), lambda b, dI, si: (b, dI, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d, n),
+                         lambda b, dI, si: (b, si, dI, 0)),
+            pl.BlockSpec((1, block_d, n), lambda b, dI, si: (b, dI, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di, n), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(da, dbx, h0)
+    return h, hf

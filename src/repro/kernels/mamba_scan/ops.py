@@ -1,0 +1,33 @@
+"""Public wrapper for the chunked selective scan."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.kernel import mamba_scan
+from repro.kernels.mamba_scan.ref import scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def chunked_scan(da: jax.Array, dbx: jax.Array, h0: jax.Array,
+                 interpret=None) -> Tuple[jax.Array, jax.Array]:
+    """Dispatch to the Pallas kernel with shape-legal chunking."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, di, n = da.shape
+    chunk = _largest_divisor(S, 128)
+    block_d = _largest_divisor(di, 256)
+    return mamba_scan(da, dbx, h0, chunk=chunk, block_d=block_d,
+                      interpret=interpret)
+
+
+def _largest_divisor(x: int, cap: int) -> int:
+    for c in range(min(cap, x), 0, -1):
+        if x % c == 0:
+            return c
+    return 1

@@ -1,0 +1,23 @@
+"""Sequential-scan oracle for the Mamba recurrence (pure jnp)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_ref(da: jax.Array, dbx: jax.Array, h0: jax.Array):
+    """h_t = da_t * h_{t-1} + dbx_t over axis 1.
+
+    da/dbx: [B, S, di, n]; h0: [B, di, n].
+    Returns (h [B,S,di,n], h_final [B,di,n]).
+    """
+    def step(h, x):
+        a, b = x
+        h = a * h + b
+        return h, h
+
+    hf, h = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(da, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(dbx, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(h, 0, 1), hf

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (one v5e pod, 256 chips) or 2×16×16 (two pods, 512 chips).
+
+    Axes: ``data`` carries DP/FSDP, ``model`` carries TP/EP.  The ``pod``
+    axis (multi-pod) extends DP across the inter-pod DCN link — parameter
+    all-gathers stay inside a pod's ICI torus; only gradient reductions
+    cross pods.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for {shape}; have {len(devices)}. The dry-run "
+            "sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import.")
+    # dry-run env exposes 512 host devices; single-pod uses the first 256
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever fits the *current* device set (tests / local runs)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,49 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
+
+Continuous-batching server loop over the selected architecture (reduced
+config on CPU).  See examples/serve_lm.py for a scripted variant.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.api import build_model
+from repro.serving.engine import ServeConfig, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    on_cpu = jax.default_backend() == "cpu"
+    cfg = get_smoke_config(args.arch) if on_cpu else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params,
+                      ServeConfig(n_slots=args.slots,
+                                  max_len=args.max_len))
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for _ in range(args.requests):
+        eng.submit(rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(3, 12))),
+                   max_new_tokens=args.new_tokens)
+    done = eng.run_to_completion()
+    dt = time.time() - t0
+    toks = sum(len(v) for v in done.values())
+    print(f"{args.arch}: {len(done)} requests, {toks} tokens, "
+          f"{toks/dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

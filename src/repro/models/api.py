@@ -1,0 +1,181 @@
+"""Unified model API over all architecture families.
+
+``build_model(cfg)`` returns an ``ArchModel`` exposing family-independent
+entry points used by the trainer, server, dry-run and tests:
+
+    init(key) -> params
+    loss(params, batch) -> (scalar, metrics)          # train step core
+    forward(params, batch) -> (logits, aux)
+    prefill(params, batch, max_len) -> (logits, cache)
+    decode_step(params, tokens, cache) -> (logits, cache)
+
+Batches are dicts: tokens/labels always; ``vision_embeds`` (VLM) or
+``frames`` (audio) when the modality stub applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.lm import DecoderLM
+from repro.models.ssm_lm import MambaLM
+from repro.models.vlm import VisionLM
+
+Params = Dict[str, Any]
+Batch = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def model_family(cfg: ModelConfig) -> str:
+    if cfg.is_encdec:
+        return "encdec"
+    if cfg.is_vlm:
+        return "vlm"
+    if cfg.is_hybrid:
+        return "hybrid"
+    if cfg.is_ssm_only:
+        return "mamba"
+    return "decoder"
+
+
+class ArchModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.family = model_family(cfg)
+        impl_cls = {
+            "decoder": DecoderLM, "mamba": MambaLM, "hybrid": HybridLM,
+            "vlm": VisionLM, "encdec": EncDecLM,
+        }[self.family]
+        self.m = impl_cls(cfg)
+
+    # ------------------------------------------------------------ passes
+    def init(self, key: jax.Array) -> Params:
+        return self.m.init(key)
+
+    def _extra(self, batch: Batch):
+        if self.family == "vlm":
+            return (batch["vision_embeds"],)
+        if self.family == "encdec":
+            return (batch["frames"],)
+        return ()
+
+    def forward(self, params: Params, batch: Batch,
+                impl: str = "reference") -> Tuple[jax.Array, Dict]:
+        return self.m.forward(params, batch["tokens"], *self._extra(batch),
+                              impl=impl)
+
+    def loss(self, params: Params, batch: Batch, impl: str = "reference"
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Token cross-entropy (+ z-loss, + MoE aux) in fp32.
+
+        The gold-logit gather is a one-hot *contraction* (not
+        take_along_axis): under GSPMD with vocab-sharded logits the
+        contraction stays sharded and only [B,S] partials are all-reduced
+        — take_along_axis would all-gather the full fp32 logits
+        (≈400 GB/device for qwen2 train_4k; see EXPERIMENTS §Perf).
+        """
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, impl=impl)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        mask = (labels >= 0).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        xent = jnp.sum((logz - gold) * mask) / denom
+        zloss = 1e-4 * jnp.sum(jnp.square(logz) * mask) / denom
+        total = xent + zloss
+        metrics = {"xent": xent, "zloss": zloss}
+        if cfg.moe is not None:
+            lb = aux.get("load_balance_loss", 0.0)
+            rz = aux.get("router_z_loss", 0.0)
+            total = total + cfg.moe.aux_loss_weight * lb \
+                + cfg.moe.router_z_weight * rz
+            metrics["moe_lb"] = lb
+            metrics["moe_rz"] = rz
+            metrics["moe_dropped"] = aux.get("dropped_fraction", 0.0)
+        metrics["loss"] = total
+        return total, metrics
+
+    def prefill(self, params: Params, batch: Batch, max_len: int,
+                impl: str = "reference"):
+        return self.m.prefill(params, batch["tokens"], *self._extra(batch),
+                              max_len, impl=impl)
+
+    def decode_step(self, params: Params, tokens: jax.Array, cache,
+                    impl: str = "reference"):
+        return self.m.decode_step(params, tokens, cache, impl=impl)
+
+    def init_cache(self, batch: int, max_len: int):
+        return self.m.init_cache(batch, max_len)
+
+
+def build_model(cfg: ModelConfig) -> ArchModel:
+    return ArchModel(cfg)
+
+
+# ===================================================== input constructors
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key: jax.Array
+               ) -> Batch:
+    """Concrete random batch (smoke tests / CPU examples)."""
+    ks = jax.random.split(key, 3)
+    out: Batch = {
+        "tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size,
+                                     jnp.int32),
+        "labels": jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab_size,
+                                     jnp.int32),
+    }
+    if cfg.is_vlm:
+        out["vision_embeds"] = jax.random.normal(
+            ks[2], (batch, cfg.num_vision_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encdec:
+        out["frames"] = jax.random.normal(
+            ks[2], (batch, cfg.num_audio_frames, cfg.d_model), jnp.float32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Batch:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation).
+
+    For train/prefill kinds these are the model inputs at (global_batch,
+    seq_len); decode kinds instead describe the one-new-token step and are
+    paired with a cache spec built by the dry-run itself.
+    """
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    sds = jax.ShapeDtypeStruct
+    out: Batch = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+    if cfg.is_vlm:
+        out["vision_embeds"] = sds(
+            (B, cfg.num_vision_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encdec:
+        out["frames"] = sds(
+            (B, cfg.num_audio_frames, cfg.d_model), jnp.float32)
+    return out

@@ -1,0 +1,230 @@
+"""Model configuration covering all assigned architecture families.
+
+One dataclass describes dense / MoE / SSM / hybrid / VLM / enc-dec LMs;
+family-specific blocks are enabled by fields being non-None.  Configs for
+the ten assigned architectures live in ``repro.configs.<id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+def pad_vocab(vocab_size: int, multiple: int = 256) -> int:
+    """Pad the embedding table so every TP degree divides it (MaxText-style)."""
+    return ((vocab_size + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    expert_d_ff: int = 0  # per-expert FFN width
+    num_shared_experts: int = 0  # DeepSeek-style always-on experts
+    capacity_factor: float = 1.25
+    every_k_layers: int = 1  # MoE replaces MLP on layers where i % k == k-1
+    aux_loss_weight: float = 0.01
+    router_z_weight: float = 1e-3
+    # "scatter": capacity-slot scatter-add dispatch + gather combine,
+    #   O(T·k·D) data movement (production default — see EXPERIMENTS §Perf);
+    # "einsum": one-hot [T,E,C] dispatch/combine matmuls, O(T·E·C·D) FLOPs
+    #   (kept as the naive reference; what the §Perf baseline measured).
+    dispatch_mode: str = "scatter"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- attention flavour
+    attention: str = "full"  # "full" | "swa" | "none" (pure SSM)
+    sliding_window: int = 4096  # only for attention == "swa"
+    qkv_bias: bool = False  # Qwen2
+    rope_theta: float = 500000.0
+    use_rope: bool = True  # Whisper uses absolute (sinusoidal) positions
+    norm: str = "rmsnorm"  # "rmsnorm" | "layernorm"
+
+    # --- family blocks
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (Jamba): within each group of `hybrid_group` layers, layer 0 is
+    # attention and the rest are Mamba.  None -> not hybrid.
+    hybrid_group: Optional[int] = None
+    # VLM: every `cross_attn_every`-th layer is a gated cross-attention
+    # layer reading the (stubbed) vision embeddings.  None -> not a VLM.
+    cross_attn_every: Optional[int] = None
+    num_vision_tokens: int = 1601  # stub frontend output length
+    # enc-dec (Whisper): `num_layers` decoder layers + this many encoder
+    # layers over stubbed frame embeddings.  None -> decoder-only.
+    encoder_layers: Optional[int] = None
+    num_audio_frames: int = 1500  # stub frontend output length
+
+    # --- moe first-layer override (DeepSeek: dense layer 0)
+    first_layer_dense_ff: int = 0  # >0: layer 0 uses a dense MLP this wide
+
+    # --- numerics / training
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"  # master copy; cast to `dtype` for compute
+    remat: bool = True
+    # "full": recompute everything in bwd (min memory);
+    # "dots": save matmul outputs, recompute elementwise only (≈25% fewer
+    #   flops, more live activation memory) — see EXPERIMENTS §Perf iter 5.
+    remat_policy: str = "full"
+    # scan layer stacks (O(1) HLO). False unrolls — only for the dry-run's
+    # FLOP calibration (HLO cost analysis counts while bodies once).
+    scan_layers: bool = True
+    logits_softcap: float = 0.0
+    tie_embeddings: bool = False
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_heads % self.num_kv_heads != 0:
+            raise ValueError("num_heads must be a multiple of num_kv_heads")
+        if self.ssm is not None and self.ssm.dt_rank == 0:
+            object.__setattr__(
+                self, "ssm",
+                dataclasses.replace(self.ssm, dt_rank=-(-self.d_model // 16)),
+            )
+
+    # ------------------------------------------------------------ derived
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def d_inner(self) -> int:
+        return (self.ssm.expand if self.ssm else 2) * self.d_model
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.hybrid_group is not None
+
+    @property
+    def is_ssm_only(self) -> bool:
+        return self.ssm is not None and not self.is_hybrid
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers is not None
+
+    @property
+    def is_vlm(self) -> bool:
+        return self.cross_attn_every is not None
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for the long_500k shape (spec: SSM/hybrid/SWA only)."""
+        return self.is_ssm_only or self.is_hybrid or self.attention == "swa"
+
+    def layer_kind(self, i: int) -> str:
+        """'attn' | 'mamba' | 'cross' for layer i (decoder stack)."""
+        if self.is_ssm_only:
+            return "mamba"
+        if self.is_hybrid:
+            return "attn" if i % self.hybrid_group == 0 else "mamba"
+        if self.is_vlm and (i + 1) % self.cross_attn_every == 0:
+            return "cross"
+        return "attn"
+
+    def uses_moe(self, i: int) -> bool:
+        if self.moe is None:
+            return False
+        if self.first_layer_dense_ff > 0 and i == 0:
+            return False
+        k = self.moe.every_k_layers
+        return i % k == k - 1
+
+    # -------------------------------------------------- parameter counting
+    def param_count(self) -> int:
+        """Exact parameter count (used for MODEL_FLOPS = 6·N·D)."""
+        return _count_params(self)
+
+    def active_param_count(self) -> int:
+        """Active-per-token parameters (MoE: top_k + shared experts only)."""
+        return _count_params(self, active_only=True)
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    n = d * h * hd + 2 * d * kv * hd + h * hd * d  # q, k, v, o
+    if cfg.qkv_bias:
+        n += (h + 2 * kv) * hd
+    return n
+
+
+def _mlp_params(d_model: int, d_ff: int) -> int:
+    return 3 * d_model * d_ff  # SwiGLU: gate, up, down
+
+
+def _mamba_params(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    di, d = cfg.d_inner, cfg.d_model
+    n = d * 2 * di  # in_proj
+    n += di * s.d_conv  # depthwise conv
+    n += di * (s.dt_rank + 2 * s.d_state)  # x_proj
+    n += s.dt_rank * di + di  # dt_proj (+bias)
+    n += di * s.d_state + di  # A_log, D
+    n += di * d  # out_proj
+    return n
+
+
+def _count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    total = cfg.padded_vocab * cfg.d_model  # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.padded_vocab * cfg.d_model  # unembedding
+    total += cfg.d_model  # final norm
+
+    def moe_layer(moe: MoEConfig) -> int:
+        router = cfg.d_model * moe.num_experts
+        experts = moe.top_k if active_only else moe.num_experts
+        n = router + experts * _mlp_params(cfg.d_model, moe.expert_d_ff)
+        n += moe.num_shared_experts * _mlp_params(cfg.d_model, moe.expert_d_ff)
+        return n
+
+    for i in range(cfg.num_layers):
+        kind = cfg.layer_kind(i)
+        total += 2 * cfg.d_model  # 2 norms per layer
+        if kind == "mamba":
+            total += _mamba_params(cfg)
+        else:
+            total += _attn_params(cfg)
+        if kind != "mamba":
+            pass
+        if cfg.uses_moe(i):
+            total += moe_layer(cfg.moe)
+        elif cfg.first_layer_dense_ff > 0 and i == 0:
+            total += _mlp_params(cfg.d_model, cfg.first_layer_dense_ff)
+        else:
+            total += _mlp_params(cfg.d_model, cfg.d_ff)
+
+    if cfg.is_encdec:
+        # encoder layers: self-attn + MLP;  decoder cross-attn weights.
+        enc = cfg.encoder_layers * (
+            _attn_params(cfg) + _mlp_params(cfg.d_model, cfg.d_ff)
+            + 2 * cfg.d_model
+        )
+        cross = cfg.num_layers * (_attn_params(cfg) + cfg.d_model)
+        total += enc + cross + cfg.d_model
+    if cfg.is_vlm:
+        pass  # cross layers already counted via layer_kind
+    return int(total)

@@ -1,0 +1,207 @@
+"""Whisper-backbone encoder-decoder (audio family).
+
+The conv frontend is stubbed per the assignment: the model consumes
+precomputed frame embeddings [B, F, D] (``input_specs()`` supplies them).
+Encoder: bidirectional self-attention with sinusoidal positions.
+Decoder: causal self-attention + cross-attention to the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import _remat_policy
+from repro.parallel import act_sharding as act
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+class EncDecCache(NamedTuple):
+    k: jax.Array  # [L, B, T, KV, Dh]  decoder self-attn
+    v: jax.Array
+    xk: jax.Array  # [L, B, F, KV, Dh]  static cross-attn (encoder output)
+    xv: jax.Array
+    pos: jax.Array  # [B]
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.is_encdec
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- init
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1": L.init_norm(cfg),
+                "attn": L.init_attention(k1, cfg),
+                "ln2": L.init_norm(cfg),
+                "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff),
+            }
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "ln1": L.init_norm(cfg),
+                "attn": L.init_attention(k1, cfg),
+                "lnx": L.init_norm(cfg),
+                "xattn": L.init_attention(k2, cfg),
+                "ln2": L.init_norm(cfg),
+                "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff),
+            }
+
+        return {
+            "embedding": L.init_embedding(ks[0], cfg),
+            "enc_layers": jax.vmap(enc_layer)(
+                jax.random.split(ks[1], cfg.encoder_layers)),
+            "enc_norm": L.init_norm(cfg),
+            "dec_layers": jax.vmap(dec_layer)(
+                jax.random.split(ks[2], cfg.num_layers)),
+            "final_norm": L.init_norm(cfg),
+        }
+
+    # ------------------------------------------------------------ encode
+    def encode(self, params: Params, frames: jax.Array,
+               impl: str = "reference") -> jax.Array:
+        """frames [B, F, D] (stub frontend output) -> encoder states."""
+        cfg = self.cfg
+        B, F, _ = frames.shape
+        pos = L.sinusoidal_positions(jnp.arange(F), cfg.d_model)
+        x = frames.astype(jnp.dtype(cfg.dtype)) + pos.astype(jnp.dtype(cfg.dtype))
+
+        def body(x, p):
+            x = x + L.attention(p["attn"], cfg, L.norm(cfg, p["ln1"], x),
+                                causal=False, impl=impl)
+            x = x + L.mlp(p["mlp"], L.norm(cfg, p["ln2"], x))
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, _ = L.scan_or_unroll(body, x, params["enc_layers"], cfg.scan_layers)
+        return L.norm(cfg, params["enc_norm"], x)
+
+    # ------------------------------------------------------------ decode
+    def forward(self, params: Params, tokens: jax.Array, frames: jax.Array,
+                impl: str = "reference") -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        B, S = tokens.shape
+        enc = self.encode(params, frames, impl)
+        x = L.embed(params["embedding"], cfg, tokens)
+        x = x + L.sinusoidal_positions(
+            jnp.arange(S), cfg.d_model).astype(x.dtype)
+
+        def body(x, p):
+            x = x + L.attention(p["attn"], cfg, L.norm(cfg, p["ln1"], x),
+                                causal=True, impl=impl)
+            x = x + L.attention(p["xattn"], cfg, L.norm(cfg, p["lnx"], x),
+                                kv_input=enc, impl=impl)
+            x = x + L.mlp(p["mlp"], L.norm(cfg, p["ln2"], x))
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, _ = L.scan_or_unroll(body, x, params["dec_layers"], cfg.scan_layers)
+        x = L.norm(cfg, params["final_norm"], x)
+        return L.unembed(params["embedding"], cfg, x), {}
+
+    # ------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int) -> EncDecCache:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        Ld, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        F = cfg.num_audio_frames
+        return EncDecCache(
+            k=jnp.zeros((Ld, batch, max_len, kv, hd), dt),
+            v=jnp.zeros((Ld, batch, max_len, kv, hd), dt),
+            xk=jnp.zeros((Ld, batch, F, kv, hd), dt),
+            xv=jnp.zeros((Ld, batch, F, kv, hd), dt),
+            pos=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def prefill(self, params: Params, tokens: jax.Array, frames: jax.Array,
+                max_len: int, impl: str = "reference"
+                ) -> Tuple[jax.Array, EncDecCache]:
+        cfg = self.cfg
+        B, S = tokens.shape
+        enc = self.encode(params, frames, impl)
+        x = L.embed(params["embedding"], cfg, tokens)
+        x = x + L.sinusoidal_positions(
+            jnp.arange(S), cfg.d_model).astype(x.dtype)
+        pad = max_len - S
+
+        def body(x, p):
+            hn = L.norm(cfg, p["ln1"], x)
+            q, k, v = L._project_qkv(p["attn"], cfg, hn)
+            out = L.sdpa_reference(q, k, v, causal=True)
+            out = act.constrain_attn_out(out).reshape(B, S, cfg.num_heads * cfg.head_dim)
+            x = x + out @ p["attn"]["wo"].astype(x.dtype)
+            _, xk, xv = L._project_qkv(p["xattn"], cfg,
+                                       L.norm(cfg, p["lnx"], x), kv_input=enc)
+            x = x + L.attention(p["xattn"], cfg, L.norm(cfg, p["lnx"], x),
+                                kv_input=enc, impl=impl)
+            x = x + L.mlp(p["mlp"], L.norm(cfg, p["ln2"], x))
+            kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return x, (kp, vp, xk, xv)
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, (k, v, xk, xv) = L.scan_or_unroll(body, x, params["dec_layers"],
+                                             cfg.scan_layers)
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x[:, -1:])
+        dt = jnp.dtype(cfg.dtype)
+        return logits, EncDecCache(
+            k=k.astype(dt), v=v.astype(dt), xk=xk.astype(dt),
+            xv=xv.astype(dt), pos=jnp.full((B,), S, jnp.int32))
+
+    def decode_step(self, params: Params, tokens: jax.Array,
+                    cache: EncDecCache, impl: str = "reference"
+                    ) -> Tuple[jax.Array, EncDecCache]:
+        cfg = self.cfg
+        B = tokens.shape[0]
+        T = cache.k.shape[2]
+        pos = cache.pos
+        x = L.embed(params["embedding"], cfg, tokens)
+        x = x + L.sinusoidal_positions(
+            pos[:, None], cfg.d_model).astype(x.dtype)
+        j = jnp.arange(T, dtype=jnp.int32)[None, :]
+        kv_valid = j < (pos + 1)[:, None]
+
+        def body(x, scanned):
+            p, lk, lv, lxk, lxv = scanned
+            hn = L.norm(cfg, p["ln1"], x)
+            q, k, v = L._project_qkv(p["attn"], cfg, hn)
+            write = lambda buf, val: jax.vmap(
+                lambda b, s, w: jax.lax.dynamic_update_slice(b, w, (s, 0, 0))
+            )(buf, pos, val)
+            lk, lv = write(lk, k), write(lv, v)
+            out = L.sdpa_reference(q, lk, lv, causal=True, q_offset=pos,
+                                   kv_valid=kv_valid)
+            out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+            x = x + out @ p["attn"]["wo"].astype(x.dtype)
+            hn = L.norm(cfg, p["lnx"], x)
+            q = (hn @ p["xattn"]["wq"].astype(x.dtype)).reshape(
+                B, 1, cfg.num_heads, cfg.head_dim)
+            out = L.sdpa_reference(q, lxk, lxv, causal=False)
+            out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+            x = x + out @ p["xattn"]["wo"].astype(x.dtype)
+            x = x + L.mlp(p["mlp"], L.norm(cfg, p["ln2"], x))
+            return x, (lk, lv)
+
+        x, (k, v) = L.scan_or_unroll(
+            body, x, (params["dec_layers"], cache.k, cache.v,
+                      cache.xk, cache.xv),
+            cfg.scan_layers)
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x)
+        return logits, EncDecCache(k=k, v=v, xk=cache.xk, xv=cache.xv,
+                                   pos=pos + 1)

@@ -1,0 +1,264 @@
+"""Jamba-family hybrid LM: interleaved attention/Mamba with MoE.
+
+Within each group of ``cfg.hybrid_group`` (=8) layers, layer 0 is
+attention and layers 1..7 are Mamba (1:7 ratio, arXiv:2403.19887); every
+second layer's FFN is MoE (odd in-group positions), the rest dense MLP.
+The stack scans over *groups* so HLO depth stays O(1).
+
+KV cache exists only for the one attention layer per group — this is what
+makes the long_500k decode shape feasible for Jamba.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import _remat_policy
+from repro.parallel import act_sharding as act
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+class HybridCache(NamedTuple):
+    k: jax.Array  # [G, B, T, KV, Dh]  (one attn layer per group)
+    v: jax.Array
+    conv: jax.Array  # [G, M, B, d_conv-1, d_inner]  (M mamba layers/group)
+    ssm: jax.Array  # [G, M, B, d_inner, d_state]
+    pos: jax.Array  # [B]
+
+
+def _ffn_init(cfg: ModelConfig, use_moe: bool, key):
+    if use_moe:
+        return {"moe": L.init_moe(key, cfg)}
+    return {"mlp": L.init_mlp(key, cfg.d_model, cfg.d_ff)}
+
+
+def _ffn_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+               dropless: bool = False):
+    if "moe" in p:
+        y, aux = L.moe(p["moe"], cfg, x, dropless=dropless)
+        return y, jnp.stack([aux.load_balance_loss, aux.router_z_loss,
+                             aux.dropped_fraction])
+    return L.mlp(p["mlp"], x), jnp.zeros((3,), jnp.float32)
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.is_hybrid and cfg.ssm is not None and cfg.moe is not None
+        self.cfg = cfg
+        g = cfg.hybrid_group
+        if cfg.num_layers % g:
+            raise ValueError("num_layers must be a multiple of hybrid_group")
+        self.num_groups = cfg.num_layers // g
+        self.mamba_per_group = g - 1
+        # in-group FFN kinds: MoE on odd positions (every_k_layers == 2)
+        self.use_moe = [
+            (j % cfg.moe.every_k_layers) == (cfg.moe.every_k_layers - 1)
+            for j in range(g)
+        ]
+
+    # ------------------------------------------------------------- init
+    def _group_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2 * cfg.hybrid_group + 2)
+        group: Params = {
+            "attn": {
+                "ln1": L.init_norm(cfg),
+                "attn": L.init_attention(ks[0], cfg),
+                "ln2": L.init_norm(cfg),
+                "ffn": _ffn_init(cfg, self.use_moe[0], ks[1]),
+            }
+        }
+        mamba_layers = []
+        for j in range(1, cfg.hybrid_group):
+            mamba_layers.append({
+                "ln1": L.init_norm(cfg),
+                "mamba": L.init_mamba(ks[2 * j], cfg),
+                "ln2": L.init_norm(cfg),
+                "ffn": _ffn_init(cfg, self.use_moe[j], ks[2 * j + 1]),
+            })
+        # stack the MoE-ffn and MLP-ffn mamba layers separately (structures
+        # differ) preserving order metadata in self.use_moe.
+        moe_stack = [m for j, m in enumerate(mamba_layers, 1) if self.use_moe[j]]
+        mlp_stack = [m for j, m in enumerate(mamba_layers, 1) if not self.use_moe[j]]
+        group["mamba_moe"] = jax.tree.map(lambda *a: jnp.stack(a), *moe_stack)
+        if mlp_stack:
+            group["mamba_mlp"] = jax.tree.map(lambda *a: jnp.stack(a), *mlp_stack)
+        return group
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        k_emb, k_groups = jax.random.split(key)
+        return {
+            "embedding": L.init_embedding(k_emb, cfg),
+            "groups": jax.vmap(self._group_init)(
+                jax.random.split(k_groups, self.num_groups)),
+            "final_norm": L.init_norm(cfg),
+        }
+
+    # ------------------------------------------------------- group apply
+    def _mamba_sublayers(self, gp: Params):
+        """Yield (params, in-group position) in execution order 1..g-1."""
+        moe_i = mlp_i = 0
+        out = []
+        for j in range(1, self.cfg.hybrid_group):
+            if self.use_moe[j]:
+                p = jax.tree.map(lambda a: a[moe_i], gp["mamba_moe"])
+                moe_i += 1
+            else:
+                p = jax.tree.map(lambda a: a[mlp_i], gp["mamba_mlp"])
+                mlp_i += 1
+            out.append(p)
+        return out
+
+    def _group_apply(self, gp: Params, x: jax.Array, positions, impl: str):
+        cfg = self.cfg
+        aux = jnp.zeros((3,), jnp.float32)
+        p = gp["attn"]
+        x = x + L.attention(p["attn"], cfg, L.norm(cfg, p["ln1"], x),
+                            positions=positions, impl=impl)
+        y, a = _ffn_apply(cfg, p["ffn"], L.norm(cfg, p["ln2"], x))
+        x, aux = x + y, aux + a
+        for p in self._mamba_sublayers(gp):
+            x = x + L.mamba(p["mamba"], cfg, L.norm(cfg, p["ln1"], x),
+                            impl=impl)
+            y, a = _ffn_apply(cfg, p["ffn"], L.norm(cfg, p["ln2"], x))
+            x, aux = x + y, aux + a
+        return x, aux
+
+    # ---------------------------------------------------------- forward
+    def forward(self, params: Params, tokens: jax.Array,
+                impl: str = "reference") -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        x = L.embed(params["embedding"], cfg, tokens)
+
+        def body(x, gp):
+            return self._group_apply(gp, x, positions, impl)
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, aux_all = L.scan_or_unroll(body, x, params["groups"],
+                                      cfg.scan_layers)
+        aux_sum = jnp.sum(aux_all, axis=0)
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x)
+        return logits, {"load_balance_loss": aux_sum[0],
+                        "router_z_loss": aux_sum[1],
+                        "dropped_fraction": aux_sum[2] / cfg.num_layers}
+
+    # ------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int) -> HybridCache:
+        cfg = self.cfg
+        s = cfg.ssm
+        dt = jnp.dtype(cfg.dtype)
+        G, M = self.num_groups, self.mamba_per_group
+        return HybridCache(
+            k=jnp.zeros((G, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt),
+            v=jnp.zeros((G, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt),
+            conv=jnp.zeros((G, M, batch, s.d_conv - 1, cfg.d_inner), dt),
+            ssm=jnp.zeros((G, M, batch, cfg.d_inner, s.d_state), jnp.float32),
+            pos=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def prefill(self, params: Params, tokens: jax.Array, max_len: int,
+                impl: str = "reference") -> Tuple[jax.Array, HybridCache]:
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        x = L.embed(params["embedding"], cfg, tokens)
+        pad = max_len - S
+        if pad < 0:
+            raise ValueError("prefill longer than cache")
+
+        def body(x, gp):
+            p = gp["attn"]
+            hn = L.norm(cfg, p["ln1"], x)
+            q, k, v = L._project_qkv(p["attn"], cfg, hn)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            out = L.sdpa_reference(q, k, v, causal=True)
+            out = act.constrain_attn_out(out).reshape(B, S, cfg.num_heads * cfg.head_dim)
+            x = x + out @ p["attn"]["wo"].astype(x.dtype)
+            y, _ = _ffn_apply(cfg, p["ffn"], L.norm(cfg, p["ln2"], x))
+            x = x + y
+            convs, ssms = [], []
+            for mp in self._mamba_sublayers(gp):
+                ym, (conv, ssm) = L.mamba(
+                    mp["mamba"], cfg, L.norm(cfg, mp["ln1"], x),
+                    return_state=True, impl=impl)
+                x = x + ym
+                y, _ = _ffn_apply(cfg, mp["ffn"], L.norm(cfg, mp["ln2"], x))
+                x = x + y
+                convs.append(conv)
+                ssms.append(ssm)
+            kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return x, (kp, vp, jnp.stack(convs), jnp.stack(ssms))
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, (k, v, conv, ssm) = L.scan_or_unroll(body, x, params["groups"],
+                                                cfg.scan_layers)
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x[:, -1:])
+        dt = jnp.dtype(cfg.dtype)
+        cache = HybridCache(k=k.astype(dt), v=v.astype(dt),
+                            conv=conv.astype(dt), ssm=ssm,
+                            pos=jnp.full((B,), S, jnp.int32))
+        return logits, cache
+
+    def decode_step(self, params: Params, tokens: jax.Array,
+                    cache: HybridCache, impl: str = "reference"
+                    ) -> Tuple[jax.Array, HybridCache]:
+        cfg = self.cfg
+        B = tokens.shape[0]
+        T = cache.k.shape[2]
+        pos = cache.pos
+        x = L.embed(params["embedding"], cfg, tokens)
+        j = jnp.arange(T, dtype=jnp.int32)[None, :]
+        kv_valid = j < (pos + 1)[:, None]
+
+        def body(x, scanned):
+            gp, gk, gv, gconv, gssm = scanned
+            p = gp["attn"]
+            hn = L.norm(cfg, p["ln1"], x)
+            q, k, v = L._project_qkv(p["attn"], cfg, hn)
+            q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+            k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+            write = lambda buf, val: jax.vmap(
+                lambda b, s, w: jax.lax.dynamic_update_slice(b, w, (s, 0, 0))
+            )(buf, pos, val)
+            gk, gv = write(gk, k), write(gv, v)
+            out = L.sdpa_reference(q, gk, gv, causal=True, q_offset=pos,
+                                   kv_valid=kv_valid)
+            out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+            x = x + out @ p["attn"]["wo"].astype(x.dtype)
+            y, _ = _ffn_apply(cfg, p["ffn"], L.norm(cfg, p["ln2"], x),
+                              dropless=True)
+            x = x + y
+            new_convs, new_ssms = [], []
+            for m, mp in enumerate(self._mamba_sublayers(gp)):
+                ym, nc, ns = L.mamba_decode_step(
+                    mp["mamba"], cfg, L.norm(cfg, mp["ln1"], x),
+                    gconv[m], gssm[m])
+                x = x + ym
+                y, _ = _ffn_apply(cfg, mp["ffn"], L.norm(cfg, mp["ln2"], x),
+                                  dropless=True)
+                x = x + y
+                new_convs.append(nc)
+                new_ssms.append(ns)
+            return x, (gk, gv, jnp.stack(new_convs), jnp.stack(new_ssms))
+
+        x, (k, v, conv, ssm) = L.scan_or_unroll(
+            body, x,
+            (params["groups"], cache.k, cache.v, cache.conv, cache.ssm),
+            cfg.scan_layers)
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x)
+        return logits, HybridCache(k=k, v=v, conv=conv, ssm=ssm, pos=pos + 1)

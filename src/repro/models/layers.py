@@ -1,0 +1,631 @@
+"""Functional layer library (pure JAX, no flax).
+
+Conventions
+-----------
+* every module has ``init_<name>(key, ...) -> params`` (nested dict of
+  fp32 arrays) and ``<name>(params, x, ...) -> y`` applies;
+* compute runs in ``cfg.dtype`` (bf16 by default) with fp32 accumulation
+  where it matters (norms, softmax, router);
+* parameter dict keys are stable and meaningful — the sharding policy
+  (``repro.parallel.policy``) dispatches PartitionSpecs on them;
+* attention takes ``impl`` ∈ {"reference", "pallas"}: the reference path is
+  pure jnp (used by CPU smoke tests and the compiled dry-run), the pallas
+  path calls the TPU kernels in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel import act_sharding as act
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _remat_policy(cfg: ModelConfig):
+    """jax.checkpoint policy from cfg.remat_policy."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_saveable
+    return None  # full recompute
+
+
+def scan_or_unroll(body, carry, xs, use_scan: bool):
+    """``lax.scan`` or an equivalent unrolled python loop.
+
+    The unrolled form exists for the dry-run's FLOP calibration: XLA's
+    HLO cost analysis visits a while-loop body ONCE, so scanned stacks
+    under-report flops/bytes by ~L×.  The dry-run lowers small *unrolled*
+    depths and extrapolates (see repro.launch.dryrun).  Production paths
+    keep ``use_scan=True`` (O(1) HLO size).
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+# =============================================================== norms
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(dt)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(dt)
+
+
+def init_norm(cfg: ModelConfig) -> Params:
+    return init_layernorm(cfg.d_model) if cfg.norm == "layernorm" \
+        else init_rmsnorm(cfg.d_model)
+
+
+def norm(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    return layernorm(params, x) if cfg.norm == "layernorm" else rmsnorm(params, x)
+
+
+# ================================================================ rope
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d_model: int) -> jax.Array:
+    """Transformer sinusoidal embeddings; positions [...,S] -> [...,S,D]."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (math.log(10000.0) / max(1, half - 1)))
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# =========================================================== projections
+
+def _dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], d, h * hd),
+        "wk": _dense_init(ks[1], d, kv * hd),
+        "wv": _dense_init(ks[2], d, kv * hd),
+        "wo": _dense_init(ks[3], h * hd, d, scale=1.0 / math.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(params: Params, cfg: ModelConfig, x: jax.Array,
+                 kv_input: Optional[jax.Array] = None):
+    """Project to q [B,S,H,Dh] and k,v [B,T,KV,Dh] (cross attn: kv_input)."""
+    dt = x.dtype
+    src = x if kv_input is None else kv_input
+    q = x @ params["wq"].astype(dt)
+    k = src @ params["wk"].astype(dt)
+    v = src @ params["wv"].astype(dt)
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    B, S = x.shape[:2]
+    T = src.shape[1]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    return act.constrain_qkv(q, k, v)
+
+
+def sdpa_reference(
+    q: jax.Array,  # [B, S, H, Dh]
+    k: jax.Array,  # [B, T, KV, Dh]
+    v: jax.Array,  # [B, T, KV, Dh]
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    q_offset: Optional[jax.Array] = None,  # absolute position of q[0]
+    kv_positions: Optional[jax.Array] = None,  # [B, T] absolute pos (ring)
+    kv_valid: Optional[jax.Array] = None,  # [B, T] bool
+) -> jax.Array:
+    """Pure-jnp grouped-query attention with causal / sliding-window masks.
+
+    This is the oracle the Pallas kernels are tested against, and the path
+    the compiled dry-run lowers (kernels do not lower on host CPU).
+    """
+    B, S, H, Dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    # keep q/k in their storage dtype and accumulate the dot in fp32:
+    # forward values are identical to an explicit fp32 upcast, but the
+    # backward cotangents stay bf16 — the fp32-upcast form produced fp32
+    # [B,S,D] all-reduces at every TP boundary (EXPERIMENTS §Perf iter 7).
+    qf = q.reshape(B, S, KV, G, Dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(Dh)
+
+    if q_offset is None:
+        q_off = jnp.zeros((B,), jnp.int32)
+    else:
+        q_off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+    qp = q_off[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # [B,S]
+    if kv_positions is None:
+        k_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None, :], (B, T))
+    else:
+        k_pos = kv_positions.astype(jnp.int32)
+
+    mask = jnp.ones((B, S, T), bool)
+    if causal:
+        mask &= k_pos[:, None, :] <= qp[:, :, None]
+        if window is not None:
+            mask &= k_pos[:, None, :] > qp[:, :, None] - window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def attention(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    positions: Optional[jax.Array] = None,
+    kv_input: Optional[jax.Array] = None,  # cross attention source
+    causal: bool = True,
+    impl: str = "reference",
+) -> jax.Array:
+    """Full attention sub-layer (projections + SDPA + output)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, kv_input)
+    if kv_input is None and cfg.use_rope:  # self attention: rotate q and k
+        pos = positions if positions is not None else jnp.arange(S)[None, :]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    window = cfg.sliding_window if cfg.attention == "swa" else None
+    if kv_input is not None:
+        causal, window = False, None
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = sdpa_reference(q, k, v, causal=causal, window=window)
+    out = act.constrain_attn_out(out).reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return out @ params["wo"].astype(x.dtype)
+
+
+# ================================================================= mlp
+
+def init_mlp(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": _dense_init(ks[0], d_model, d_ff),
+        "wu": _dense_init(ks[1], d_model, d_ff),
+        "wd": _dense_init(ks[2], d_ff, d_model, scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def mlp(params: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jax.nn.silu(act.constrain_ff(x @ params["wg"].astype(dt)))
+    u = act.constrain_ff(x @ params["wu"].astype(dt))
+    return act.constrain_tokens((g * u) @ params["wd"].astype(dt))
+
+
+# ================================================================= moe
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array
+    router_z_loss: jax.Array
+    dropped_fraction: jax.Array
+
+
+def _positions_by_sort(expert_idx: jax.Array, num_experts: int) -> jax.Array:
+    """Rank of each (token, slot) routing pair within its expert queue.
+
+    Equivalent to the exclusive cumsum of the flattened one-hot matrix
+    (token-major priority) but via a stable argsort — O(P log P)
+    comparisons instead of an O(P·E) reduce-window.
+    expert_idx: [T, k] -> positions [T, k] int32.
+    """
+    T, k = expert_idx.shape
+    P = T * k
+    e_flat = expert_idx.reshape(P)
+    order = jnp.argsort(e_flat, stable=True)
+    counts = jnp.zeros((num_experts,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    ranks_sorted = jnp.arange(P, dtype=jnp.int32) - starts[e_flat[order]]
+    pos = jnp.zeros((P,), jnp.int32).at[order].set(ranks_sorted)
+    return pos.reshape(T, k)
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, m.expert_d_ff, m.num_experts
+    p = {
+        "router": _dense_init(ks[0], d, e, scale=0.02),
+        # stacked expert weights: [E, D, F] / [E, F, D]
+        "experts_wg": jax.random.normal(ks[1], (e, d, f), jnp.float32) / math.sqrt(d),
+        "experts_wu": jax.random.normal(ks[2], (e, d, f), jnp.float32) / math.sqrt(d),
+        "experts_wd": jax.random.normal(ks[3], (e, f, d), jnp.float32) / math.sqrt(f),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * m.num_shared_experts)
+    return p
+
+
+def moe(params: Params, cfg: ModelConfig, x: jax.Array,
+        dropless: bool = False) -> Tuple[jax.Array, MoEAux]:
+    """Token-choice top-k MoE with capacity-bounded dispatch/combine einsums.
+
+    The [T,E,C] dispatch one-hots become all-to-alls under GSPMD when
+    tokens are data-sharded and experts model-sharded (EP).
+
+    ``dropless=True`` sets capacity = T (worst case) so no token is ever
+    dropped — used by the decode paths, where T is small and exact parity
+    with the training-time forward matters (see tests).  Decode-side
+    efficient dropless (sorted grouped GEMM) is a §Perf item.
+    """
+    m = cfg.moe
+    dt = x.dtype
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt @ params["router"].astype(dt)).astype(jnp.float32)  # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)  # [T,k]
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    if m.dispatch_mode == "scatter":
+        # --------- grouped scatter dispatch (GShard-style local capacity).
+        # Tokens are split into `groups` = |dp| slices (one per data
+        # shard); each group routes into per-group expert-capacity slots,
+        # so the expert GEMM batch dims (group, expert) shard over
+        # (data, model) — no replicated expert compute, and the
+        # scatter/gather stays shard-local.  Positions come from a
+        # stable sort (O(P log P) comparisons) instead of the [T·k, E]
+        # cumsum, whose reduce-window lowering cost-counts ~quadratically
+        # (see EXPERIMENTS §Perf, iteration 2).
+        ctx = act.current()
+        groups = 1
+        if ctx is not None and not ctx.serve:
+            # serve mode keeps tokens replicated (see act_sharding):
+            # grouping would scatter them across dp and gather back per
+            # layer — decode keeps groups=1 (experts stay model-sharded).
+            gsz = ctx.policy._axis_size(ctx.policy.dp)
+            if T % gsz == 0:
+                groups = gsz
+        Tg = T // groups
+        capacity = Tg if dropless else max(
+            1, int(m.capacity_factor * Tg * m.top_k / m.num_experts))
+        E = m.num_experts
+        eg = expert_idx.reshape(groups, Tg, m.top_k)
+        gateg = gate_vals.reshape(groups, Tg, m.top_k)
+        xg = act.constrain(xt.reshape(groups, Tg, D), "dp", None, None,
+                           what="moe.xg")
+
+        pos = jax.vmap(lambda e: _positions_by_sort(e, E))(eg)
+        kept = pos < capacity  # [g, Tg, k]
+        dest = jnp.where(kept, eg * capacity + pos,
+                         E * capacity).astype(jnp.int32)
+
+        def disp(x1, d1):  # per group: scatter tokens into expert slots
+            buf = jnp.zeros((E * capacity + 1, D), dt)
+            for kk in range(m.top_k):
+                buf = buf.at[d1[:, kk]].add(x1)
+            return buf[:-1].reshape(E, capacity, D)
+
+        xe = jax.vmap(disp)(xg, dest)  # [g, E, C, D]
+        xe = act.constrain(xe, "dp", "tp", None, None, what="moe.xe")
+        g_ = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe,
+                                    params["experts_wg"].astype(dt)))
+        u_ = jnp.einsum("gecd,edf->gecf", xe,
+                        params["experts_wu"].astype(dt))
+        ye = jnp.einsum("gecf,efd->gecd", g_ * u_,
+                        params["experts_wd"].astype(dt))
+        ye = act.constrain(ye, "dp", "tp", None, None, what="moe.ye")
+
+        def comb(y1, d1, g1):  # per group: gather slots back to tokens
+            flat = jnp.concatenate(
+                [y1.reshape(E * capacity, D), jnp.zeros((1, D), dt)])
+            out = jnp.zeros((Tg, D), dt)
+            for kk in range(m.top_k):
+                out = out + g1[:, kk, None].astype(dt) * flat[d1[:, kk]]
+            return out
+
+        y = jax.vmap(comb)(ye, dest, gateg).reshape(T, D)
+        onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+        dispatch_sum = jnp.sum(kept.astype(jnp.float32))
+    else:
+        capacity = T if dropless else max(
+            1, int(m.capacity_factor * T * m.top_k / m.num_experts))
+        onehot = jax.nn.one_hot(expert_idx, m.num_experts,
+                                dtype=jnp.float32)  # [T,k,E]
+        # position of each (token, slot) within its expert queue
+        flat = onehot.reshape(T * m.top_k, m.num_experts)
+        pos = jnp.cumsum(flat, axis=0) - flat  # exclusive cumsum
+        pos = pos.reshape(T, m.top_k, m.num_experts)
+        keep = (pos < capacity) * onehot  # [T,k,E]
+        pos_cap = jnp.einsum("tke,tke->tk", pos, keep).astype(jnp.int32)
+        # --------- one-hot einsum dispatch (naive reference; §Perf base).
+        slot_oh = jax.nn.one_hot(pos_cap, capacity, dtype=jnp.float32)  # [T,k,C]
+        dispatch = act.constrain_dispatch(
+            jnp.einsum("tke,tkc->tec", keep, slot_oh))  # [T,E,C]
+        combine = act.constrain_dispatch(
+            jnp.einsum("tec,tk,tke->tec", dispatch,
+                       gate_vals.astype(jnp.float32), onehot))
+
+        xe = act.constrain_expert(
+            jnp.einsum("tec,td->ecd", dispatch.astype(dt), xt))  # [E,C,D]
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["experts_wg"].astype(dt)))
+        u = jnp.einsum("ecd,edf->ecf", xe, params["experts_wu"].astype(dt))
+        ye = act.constrain_expert(
+            jnp.einsum("ecf,efd->ecd", g * u, params["experts_wd"].astype(dt)))
+        y = jnp.einsum("tec,ecd->td", combine.astype(dt), ye)  # [T,D]
+        dispatch_sum = jnp.sum(dispatch)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], xt)
+
+    # Switch-transformer load-balance + router z losses.
+    frac_tokens = jnp.mean(onehot[:, 0, :], axis=0)  # top-1 routing fraction
+    frac_probs = jnp.mean(probs, axis=0)
+    lb = m.num_experts * jnp.sum(frac_tokens * frac_probs)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - dispatch_sum / (T * m.top_k)
+    return y.reshape(B, S, D), MoEAux(lb, z, dropped)
+
+
+# =============================================================== mamba
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d, di = cfg.d_model, cfg.d_inner
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization of A.
+    a = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, 1))
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[0], (di,), jnp.float32)
+        * (math.log(0.1) - math.log(0.001)) + math.log(0.001)
+    )
+    return {
+        "w_in": _dense_init(ks[1], d, 2 * di),
+        "conv_w": jax.random.normal(ks[2], (s.d_conv, di), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "w_x": _dense_init(ks[3], di, s.dt_rank + 2 * s.d_state),
+        "w_dt": _dense_init(ks[4], s.dt_rank, di, scale=s.dt_rank ** -0.5),
+        # softplus^-1(dt) bias so initial dt matches dt_init
+        "b_dt": jnp.log(jnp.expm1(dt_init)),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": _dense_init(ks[5], di, d),
+    }
+
+
+def _ssm_scan_chunked(da: jax.Array, dbx: jax.Array, h0: jax.Array,
+                      chunk: int = 256):
+    """Chunked parallel selective scan.
+
+    h_t = da_t * h_{t-1} + dbx_t  over time;  da/dbx: [B,S,di,n].
+    Within a chunk uses an associative scan (parallel, MXU-friendly);
+    chunk carries propagate via lax.scan.  This bounds live memory to
+    [B,chunk,di,n] — the same blocking the Pallas kernel uses in VMEM.
+    Returns (h: [B,S,di,n], h_final: [B,di,n]).
+    """
+    B, S, di, n = da.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dbx = jnp.pad(dbx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (S + pad) // chunk
+    da_c = da.reshape(B, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    dbx_c = dbx.reshape(B, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, inputs):
+        a, b = inputs  # [B, chunk, di, n]
+        aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_all = aa * h[:, None] + bb  # [B, chunk, di, n]
+        return h_all[:, -1], h_all
+
+    h_final, h_chunks = jax.lax.scan(chunk_step, h0, (da_c, dbx_c))
+    h = h_chunks.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, di, n)
+    return h[:, :S], h_final
+
+
+def mamba(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    conv_state: Optional[jax.Array] = None,  # [B, d_conv-1, di]
+    ssm_state: Optional[jax.Array] = None,  # [B, di, n]
+    return_state: bool = False,
+    impl: str = "reference",
+):
+    """Mamba-1 block (selective state-space) — prefill/train form.
+
+    With ``return_state`` also emits (conv_state, ssm_state) for decoding.
+    """
+    s = cfg.ssm
+    dt_ = x.dtype
+    B, S, D = x.shape
+    di = cfg.d_inner
+
+    xz = act.constrain_ff(x @ params["w_in"].astype(dt_))
+    xp, z = jnp.split(xz, 2, axis=-1)  # [B,S,di] each
+
+    # causal depthwise conv, width d_conv
+    if conv_state is None:
+        xp_pad = jnp.pad(xp, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    else:
+        xp_pad = jnp.concatenate([conv_state.astype(dt_), xp], axis=1)
+    new_conv_state = xp_pad[:, -(s.d_conv - 1):, :] if return_state else None
+    conv_w = params["conv_w"].astype(dt_)
+    xc = sum(
+        xp_pad[:, i:i + S, :] * conv_w[i][None, None, :]
+        for i in range(s.d_conv)
+    ) + params["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)
+
+    dbc = xc @ params["w_x"].astype(dt_)  # [B,S,r+2n]
+    dt_raw = dbc[..., : s.dt_rank] @ params["w_dt"].astype(dt_)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["b_dt"]
+    )  # [B,S,di] fp32
+    Bc = dbc[..., s.dt_rank: s.dt_rank + s.d_state].astype(jnp.float32)
+    Cc = dbc[..., s.dt_rank + s.d_state:].astype(jnp.float32)
+
+    A = -jnp.exp(params["A_log"])  # [di,n]
+    da = act.constrain(jnp.exp(dt[..., None] * A), "dp", None, "tp", None,
+                       what="ssm.da")  # [B,S,di,n]
+    dbx = act.constrain(
+        (dt * xc.astype(jnp.float32))[..., None] * Bc[:, :, None, :],
+        "dp", None, "tp", None, what="ssm.dbx")
+
+    h0 = jnp.zeros((B, di, s.d_state), jnp.float32) if ssm_state is None \
+        else ssm_state.astype(jnp.float32)
+    if impl == "pallas":
+        from repro.kernels.mamba_scan import ops as scan_ops
+
+        h, h_final = scan_ops.chunked_scan(da, dbx, h0)
+    else:
+        h, h_final = _ssm_scan_chunked(da, dbx, h0)
+
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cc)  # fp32
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y.astype(dt_)) * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(dt_)
+    if return_state:
+        return out, (new_conv_state, h_final)
+    return out
+
+
+def mamba_decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, 1, D]
+    conv_state: jax.Array,  # [B, d_conv-1, di]
+    ssm_state: jax.Array,  # [B, di, n]
+):
+    """O(1) single-token state update (no sequence dimension)."""
+    s = cfg.ssm
+    dt_ = x.dtype
+    B = x.shape[0]
+
+    xz = x[:, 0] @ params["w_in"].astype(dt_)
+    xp, z = jnp.split(xz, 2, axis=-1)  # [B,di]
+
+    window = jnp.concatenate([conv_state.astype(dt_), xp[:, None]], axis=1)
+    conv_w = params["conv_w"].astype(dt_)
+    xc = jnp.einsum("bcd,cd->bd", window, conv_w) + params["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)
+    new_conv_state = window[:, 1:]
+
+    dbc = xc @ params["w_x"].astype(dt_)
+    dt = jax.nn.softplus(
+        (dbc[..., : s.dt_rank] @ params["w_dt"].astype(dt_)).astype(jnp.float32)
+        + params["b_dt"]
+    )  # [B,di]
+    Bc = dbc[..., s.dt_rank: s.dt_rank + s.d_state].astype(jnp.float32)
+    Cc = dbc[..., s.dt_rank + s.d_state:].astype(jnp.float32)
+
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt[..., None] * A)  # [B,di,n]
+    h = da * ssm_state.astype(jnp.float32) + \
+        (dt * xc.astype(jnp.float32))[..., None] * Bc[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cc) + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(dt_) * jax.nn.silu(z)
+    out = (y @ params["w_out"].astype(dt_))[:, None]
+    return out, new_conv_state, h
+
+
+# ======================================================== embed / logits
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    p = {"emb": jax.random.normal(
+        ks[0], (cfg.padded_vocab, cfg.d_model), jnp.float32) * 0.02}
+    if not cfg.tie_embeddings:
+        p["unemb"] = jax.random.normal(
+            ks[1], (cfg.d_model, cfg.padded_vocab), jnp.float32
+        ) / math.sqrt(cfg.d_model)
+    return p
+
+
+def embed(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return act.constrain_tokens(params["emb"].astype(_dtype(cfg))[tokens])
+
+
+def unembed(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    w = params["unemb"] if "unemb" in params else params["emb"].T
+    logits = act.constrain_logits((x @ w.astype(x.dtype)).astype(jnp.float32))
+    if cfg.logits_softcap > 0:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

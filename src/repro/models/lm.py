@@ -1,0 +1,292 @@
+"""Decoder-only LM — dense (llama/qwen/h2o) and MoE (olmoe/deepseek) families.
+
+Layer stacks are parameter-stacked ([L, ...] leaves) and applied with
+``lax.scan`` so the HLO stays O(1) in depth — essential for compiling the
+126-layer llama3-405b dry-run quickly.  ``cfg.remat`` wraps the scanned
+body in ``jax.checkpoint`` (full recompute policy) for activation memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import _remat_policy
+from repro.parallel import act_sharding as act
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+class DecodeCache(NamedTuple):
+    """Per-layer KV cache, parameter-stacked: leaves [L, B, T, KV, Dh]."""
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array  # [B] next write position (== tokens generated so far)
+
+
+def _layer_init(cfg: ModelConfig, use_moe: bool):
+    def init(key):
+        ks = jax.random.split(key, 4)
+        p = {
+            "ln1": L.init_norm(cfg),
+            "attn": L.init_attention(ks[0], cfg),
+            "ln2": L.init_norm(cfg),
+        }
+        if use_moe:
+            p["moe"] = L.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[2], cfg.d_model, cfg.d_ff)
+        return p
+
+    return init
+
+
+def _layer_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+                 positions: jax.Array, impl: str, use_moe: bool):
+    h = x + L.attention(p["attn"], cfg, L.norm(cfg, p["ln1"], x),
+                        positions=positions, impl=impl)
+    hn = L.norm(cfg, p["ln2"], h)
+    if use_moe:
+        y, aux = L.moe(p["moe"], cfg, hn)
+        aux_vec = jnp.stack([aux.load_balance_loss, aux.router_z_loss,
+                             aux.dropped_fraction])
+    else:
+        y = L.mlp(p["mlp"], hn)
+        aux_vec = jnp.zeros((3,), jnp.float32)
+    return h + y, aux_vec
+
+
+class DecoderLM:
+    """Uniform decoder stack; DeepSeek's dense layer 0 handled separately."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._moe_stack = cfg.moe is not None
+        self._dense_first = cfg.first_layer_dense_ff > 0
+        self._n_scanned = cfg.num_layers - (1 if self._dense_first else 0)
+
+    # ------------------------------------------------------------- init
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        k_emb, k_layers, k_first = jax.random.split(key, 3)
+        params: Params = {
+            "embedding": L.init_embedding(k_emb, cfg),
+            "final_norm": L.init_norm(cfg),
+        }
+        init_fn = _layer_init(cfg, self._moe_stack)
+        params["layers"] = jax.vmap(init_fn)(
+            jax.random.split(k_layers, self._n_scanned))
+        if self._dense_first:
+            ks = jax.random.split(k_first, 2)
+            params["first_layer"] = {
+                "ln1": L.init_norm(cfg),
+                "attn": L.init_attention(ks[0], cfg),
+                "ln2": L.init_norm(cfg),
+                "mlp": L.init_mlp(ks[1], cfg.d_model,
+                                  cfg.first_layer_dense_ff),
+            }
+        return params
+
+    # ---------------------------------------------------------- forward
+    def forward(self, params: Params, tokens: jax.Array,
+                impl: str = "reference") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """tokens [B,S] -> (logits [B,S,V], aux losses)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        x = L.embed(params["embedding"], cfg, tokens)
+
+        if self._dense_first:
+            x, _ = _layer_apply(cfg, params["first_layer"], x, positions,
+                                impl, use_moe=False)
+
+        def body(carry, layer_p):
+            x = carry
+            x, aux = _layer_apply(cfg, layer_p, x, positions, impl,
+                                  use_moe=self._moe_stack)
+            return x, aux
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, aux_all = L.scan_or_unroll(body, x, params["layers"], cfg.scan_layers)
+        aux_sum = jnp.sum(aux_all, axis=0)
+
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x)
+        aux = {
+            "load_balance_loss": aux_sum[0],
+            "router_z_loss": aux_sum[1],
+            "dropped_fraction": aux_sum[2] / max(1, self._n_scanned),
+        }
+        return logits, aux
+
+    # ------------------------------------------------------------ cache
+    def cache_len(self, max_len: int) -> int:
+        """SWA models keep a ring buffer of `window`, others the full span."""
+        cfg = self.cfg
+        if cfg.attention == "swa":
+            return min(cfg.sliding_window, max_len)
+        return max_len
+
+    def init_cache(self, batch: int, max_len: int) -> DecodeCache:
+        cfg = self.cfg
+        T = self.cache_len(max_len)
+        shape = (cfg.num_layers, batch, T, cfg.num_kv_heads, cfg.head_dim)
+        dt = jnp.dtype(cfg.dtype)
+        return DecodeCache(
+            k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+            pos=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def _ring_metadata(self, pos: jax.Array, T: int):
+        """Absolute positions + validity for (ring or linear) cache slots.
+
+        pos: [B] count of tokens already in the cache.  Linear caches have
+        slot j holding position j (valid when j < pos); SWA ring caches
+        hold p_j = last position ≡ j (mod W) strictly before `pos`.
+        """
+        cfg = self.cfg
+        B = pos.shape[0]
+        j = jnp.arange(T, dtype=jnp.int32)[None, :]
+        if cfg.attention == "swa" and T == cfg.sliding_window:
+            last = pos[:, None] - 1  # most recent written position
+            p = last - jnp.mod(last - j, T)
+            valid = p >= 0
+            return p, valid
+        p = jnp.broadcast_to(j, (B, T))
+        return p, j < pos[:, None]
+
+    def decode_step(self, params: Params, tokens: jax.Array,
+                    cache: DecodeCache, impl: str = "reference"
+                    ) -> Tuple[jax.Array, DecodeCache]:
+        """One token per sequence: tokens [B,1] -> logits [B,1,V]."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        T = cache.k.shape[2]
+        pos = cache.pos  # [B]
+        x = L.embed(params["embedding"], cfg, tokens)
+
+        slot = jnp.mod(pos, T) if cfg.attention == "swa" else pos
+        kv_pos, kv_valid = self._ring_metadata(pos + 1, T)
+
+        def attn_block(p, x, layer_k, layer_v):
+            hn = L.norm(cfg, p["ln1"], x)
+            q, k, v = L._project_qkv(p["attn"], cfg, hn)
+            q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+            k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+            write = lambda buf, val: jax.vmap(
+                lambda b, s, w: jax.lax.dynamic_update_slice(b, w, (s, 0, 0))
+            )(buf, slot, val)
+            layer_k = write(layer_k, k)
+            layer_v = write(layer_v, v)
+            out = L.sdpa_reference(
+                q, layer_k, layer_v, causal=True, q_offset=pos,
+                kv_positions=kv_pos, kv_valid=kv_valid,
+            )
+            out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+            return x + out @ p["attn"]["wo"].astype(x.dtype), layer_k, layer_v
+
+        # dense-first layer (DeepSeek) runs outside the scan
+        if self._dense_first:
+            p0 = params["first_layer"]
+            x, k0, v0 = attn_block(p0, x, cache.k[0], cache.v[0])
+            x = x + L.mlp(p0["mlp"], L.norm(cfg, p0["ln2"], x))
+
+        def body(x, scanned):
+            layer_p, layer_k, layer_v = scanned
+            x, layer_k, layer_v = attn_block(layer_p, x, layer_k, layer_v)
+            hn = L.norm(cfg, layer_p["ln2"], x)
+            if self._moe_stack:
+                y, _ = L.moe(layer_p["moe"], cfg, hn, dropless=True)
+            else:
+                y = L.mlp(layer_p["mlp"], hn)
+            return x + y, (layer_k, layer_v)
+
+        off = 1 if self._dense_first else 0
+        x, (new_k, new_v) = L.scan_or_unroll(
+            body, x, (params["layers"], cache.k[off:], cache.v[off:]),
+            cfg.scan_layers)
+        if self._dense_first:
+            new_k = jnp.concatenate([k0[None], new_k], axis=0)
+            new_v = jnp.concatenate([v0[None], new_v], axis=0)
+
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x)
+        return logits, DecodeCache(k=new_k, v=new_v, pos=pos + 1)
+
+    def prefill(self, params: Params, tokens: jax.Array, max_len: int,
+                impl: str = "reference") -> Tuple[jax.Array, DecodeCache]:
+        """Run the full sequence, returning last-position logits + cache."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        cache = self.init_cache(B, max_len)
+        T = cache.k.shape[2]
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        x = L.embed(params["embedding"], cfg, tokens)
+
+        def run_layer(p, x):
+            hn = L.norm(cfg, p["ln1"], x)
+            q, k, v = L._project_qkv(p["attn"], cfg, hn)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            window = cfg.sliding_window if cfg.attention == "swa" else None
+            if impl == "pallas":
+                from repro.kernels.flash_attention import ops as fa_ops
+
+                out = fa_ops.flash_attention(q, k, v, causal=True,
+                                             window=window)
+            else:
+                out = L.sdpa_reference(q, k, v, causal=True, window=window)
+            out = act.constrain_attn_out(out).reshape(B, S, cfg.num_heads * cfg.head_dim)
+            return x + out @ p["attn"]["wo"].astype(x.dtype), k, v
+
+        def block(p, x, use_moe):
+            x, k, v = run_layer(p, x)
+            hn = L.norm(cfg, p["ln2"], x)
+            if use_moe:
+                y, _ = L.moe(p["moe"], cfg, hn)
+            else:
+                y = L.mlp(p["mlp"], hn)
+            return x + y, k, v
+
+        if self._dense_first:
+            x, k0, v0 = block(params["first_layer"], x, use_moe=False)
+
+        def body(x, layer_p):
+            x, k, v = block(layer_p, x, use_moe=self._moe_stack)
+            return x, (k, v)
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, (k_all, v_all) = L.scan_or_unroll(body, x, params["layers"],
+                                             cfg.scan_layers)
+
+        if self._dense_first:
+            k_all = jnp.concatenate([k0[None], k_all], axis=0)
+            v_all = jnp.concatenate([v0[None], v_all], axis=0)
+
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x[:, -1:])
+        if cfg.attention == "swa" and T == cfg.sliding_window and S >= T:
+            # keep the last W positions, placed at their ring slots
+            tail_k, tail_v = k_all[:, :, S - T:], v_all[:, :, S - T:]
+            roll = jnp.mod(S - T, T)
+            k_ring = jnp.roll(tail_k, roll, axis=2)
+            v_ring = jnp.roll(tail_v, roll, axis=2)
+            cache = DecodeCache(k=k_ring, v=v_ring,
+                                pos=jnp.full((B,), S, jnp.int32))
+        else:
+            pad = T - S
+            if pad < 0:
+                raise ValueError("prefill longer than cache")
+            k_all = jnp.pad(k_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v_all = jnp.pad(v_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cache = DecodeCache(k=k_all.astype(cache.k.dtype),
+                                v=v_all.astype(cache.v.dtype),
+                                pos=jnp.full((B,), S, jnp.int32))
+        return logits, cache

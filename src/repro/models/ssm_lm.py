@@ -1,0 +1,112 @@
+"""Mamba-1 LM (falcon-mamba family): attention-free selective-SSM stack.
+
+Decode keeps O(1) state per layer — (conv window, SSM state) — so the
+long_500k shape needs no KV cache at all (DESIGN §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import _remat_policy
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # [L, B, d_conv-1, d_inner]
+    ssm: jax.Array  # [L, B, d_inner, d_state]
+    pos: jax.Array  # [B]
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.ssm is not None
+        self.cfg = cfg
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+
+        def layer_init(k):
+            return {"ln": L.init_norm(cfg), "mamba": L.init_mamba(k, cfg)}
+
+        k_emb, k_layers = jax.random.split(key)
+        return {
+            "embedding": L.init_embedding(k_emb, cfg),
+            "layers": jax.vmap(layer_init)(
+                jax.random.split(k_layers, cfg.num_layers)),
+            "final_norm": L.init_norm(cfg),
+        }
+
+    def forward(self, params: Params, tokens: jax.Array,
+                impl: str = "reference") -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        x = L.embed(params["embedding"], cfg, tokens)
+
+        def body(x, p):
+            y = L.mamba(p["mamba"], cfg, L.norm(cfg, p["ln"], x), impl=impl)
+            return x + y, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, _ = L.scan_or_unroll(body, x, params["layers"], cfg.scan_layers)
+        x = L.norm(cfg, params["final_norm"], x)
+        return L.unembed(params["embedding"], cfg, x), {}
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int) -> MambaCache:
+        cfg = self.cfg
+        s = cfg.ssm
+        dt = jnp.dtype(cfg.dtype)
+        return MambaCache(
+            conv=jnp.zeros(
+                (cfg.num_layers, batch, s.d_conv - 1, cfg.d_inner), dt),
+            ssm=jnp.zeros(
+                (cfg.num_layers, batch, cfg.d_inner, s.d_state), jnp.float32),
+            pos=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def prefill(self, params: Params, tokens: jax.Array, max_len: int,
+                impl: str = "reference") -> Tuple[jax.Array, MambaCache]:
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = L.embed(params["embedding"], cfg, tokens)
+
+        def body(x, p):
+            y, (conv, ssm) = L.mamba(
+                p["mamba"], cfg, L.norm(cfg, p["ln"], x),
+                return_state=True, impl=impl)
+            return x + y, (conv, ssm)
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, (conv, ssm) = L.scan_or_unroll(body, x, params["layers"],
+                                          cfg.scan_layers)
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x[:, -1:])
+        cache = MambaCache(conv=conv.astype(jnp.dtype(cfg.dtype)), ssm=ssm,
+                           pos=jnp.full((B,), S, jnp.int32))
+        return logits, cache
+
+    def decode_step(self, params: Params, tokens: jax.Array,
+                    cache: MambaCache, impl: str = "reference"
+                    ) -> Tuple[jax.Array, MambaCache]:
+        cfg = self.cfg
+        x = L.embed(params["embedding"], cfg, tokens)
+
+        def body(x, scanned):
+            p, conv, ssm = scanned
+            y, new_conv, new_ssm = L.mamba_decode_step(
+                p["mamba"], cfg, L.norm(cfg, p["ln"], x), conv, ssm)
+            return x + y, (new_conv, new_ssm)
+
+        x, (conv, ssm) = L.scan_or_unroll(
+            body, x, (params["layers"], cache.conv, cache.ssm),
+            cfg.scan_layers)
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x)
+        return logits, MambaCache(conv=conv, ssm=ssm, pos=cache.pos + 1)

@@ -1,0 +1,219 @@
+"""Llama-3.2-Vision-style VLM backbone: gated cross-attention image layers.
+
+Every ``cfg.cross_attn_every``-th layer is a cross-attention layer reading
+stubbed vision-patch embeddings (the modality frontend is a stub per the
+assignment: ``input_specs()`` supplies precomputed patch embeddings).
+Gates (tanh, init 0) make the cross layers identity at init, as in the
+reference architecture.  The stack scans over groups of
+(every-1 self layers + 1 cross layer).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import _remat_policy
+from repro.parallel import act_sharding as act
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+class VLMCache(NamedTuple):
+    k: jax.Array  # [G, Ls, B, T, KV, Dh]   self-attn layers per group
+    v: jax.Array
+    xk: jax.Array  # [G, B, Nv, KV, Dh]     static cross-attn kv
+    xv: jax.Array
+    pos: jax.Array  # [B]
+
+
+class VisionLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.is_vlm
+        self.cfg = cfg
+        e = cfg.cross_attn_every
+        if cfg.num_layers % e:
+            raise ValueError("num_layers must be a multiple of cross_attn_every")
+        self.num_groups = cfg.num_layers // e
+        self.self_per_group = e - 1
+
+    # ------------------------------------------------------------- init
+    def _group_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2 * self.self_per_group + 3)
+
+        def self_layer(i):
+            return {
+                "ln1": L.init_norm(cfg),
+                "attn": L.init_attention(ks[2 * i], cfg),
+                "ln2": L.init_norm(cfg),
+                "mlp": L.init_mlp(ks[2 * i + 1], cfg.d_model, cfg.d_ff),
+            }
+
+        layers = [self_layer(i) for i in range(self.self_per_group)]
+        return {
+            "self": jax.tree.map(lambda *a: jnp.stack(a), *layers),
+            "cross": {
+                "ln1": L.init_norm(cfg),
+                "attn": L.init_attention(ks[-2], cfg),
+                "gate_attn": jnp.zeros((), jnp.float32),
+                "ln2": L.init_norm(cfg),
+                "mlp": L.init_mlp(ks[-1], cfg.d_model, cfg.d_ff),
+                "gate_mlp": jnp.zeros((), jnp.float32),
+            },
+        }
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        k_emb, k_groups = jax.random.split(key)
+        return {
+            "embedding": L.init_embedding(k_emb, cfg),
+            "groups": jax.vmap(self._group_init)(
+                jax.random.split(k_groups, self.num_groups)),
+            "final_norm": L.init_norm(cfg),
+        }
+
+    # ------------------------------------------------------------- apply
+    def _cross_apply(self, p: Params, x: jax.Array, vision: jax.Array,
+                     impl: str):
+        cfg = self.cfg
+        attn_out = L.attention(p["attn"], cfg, L.norm(cfg, p["ln1"], x),
+                               kv_input=vision, impl=impl)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * attn_out
+        y = L.mlp(p["mlp"], L.norm(cfg, p["ln2"], x))
+        return x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * y
+
+    def forward(self, params: Params, tokens: jax.Array,
+                vision_embeds: jax.Array, impl: str = "reference"
+                ) -> Tuple[jax.Array, Dict]:
+        """tokens [B,S]; vision_embeds [B,Nv,D] (stub frontend output)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        x = L.embed(params["embedding"], cfg, tokens)
+        vis = vision_embeds.astype(x.dtype)
+
+        def body(x, gp):
+            for i in range(self.self_per_group):
+                p = jax.tree.map(lambda a: a[i], gp["self"])
+                x = x + L.attention(p["attn"], cfg, L.norm(cfg, p["ln1"], x),
+                                    positions=positions, impl=impl)
+                x = x + L.mlp(p["mlp"], L.norm(cfg, p["ln2"], x))
+            x = self._cross_apply(gp["cross"], x, vis, impl)
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, _ = L.scan_or_unroll(body, x, params["groups"], cfg.scan_layers)
+        x = L.norm(cfg, params["final_norm"], x)
+        return L.unembed(params["embedding"], cfg, x), {}
+
+    # ------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int) -> VLMCache:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        G, Ls = self.num_groups, self.self_per_group
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        return VLMCache(
+            k=jnp.zeros((G, Ls, batch, max_len, kv, hd), dt),
+            v=jnp.zeros((G, Ls, batch, max_len, kv, hd), dt),
+            xk=jnp.zeros((G, batch, cfg.num_vision_tokens, kv, hd), dt),
+            xv=jnp.zeros((G, batch, cfg.num_vision_tokens, kv, hd), dt),
+            pos=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def prefill(self, params: Params, tokens: jax.Array,
+                vision_embeds: jax.Array, max_len: int,
+                impl: str = "reference") -> Tuple[jax.Array, VLMCache]:
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        x = L.embed(params["embedding"], cfg, tokens)
+        vis = vision_embeds.astype(x.dtype)
+        pad = max_len - S
+
+        def body(x, gp):
+            ks, vs = [], []
+            for i in range(self.self_per_group):
+                p = jax.tree.map(lambda a: a[i], gp["self"])
+                hn = L.norm(cfg, p["ln1"], x)
+                q, k, v = L._project_qkv(p["attn"], cfg, hn)
+                q = L.apply_rope(q, positions, cfg.rope_theta)
+                k = L.apply_rope(k, positions, cfg.rope_theta)
+                out = L.sdpa_reference(q, k, v, causal=True)
+                out = act.constrain_attn_out(out).reshape(B, S, cfg.num_heads * cfg.head_dim)
+                x = x + out @ p["attn"]["wo"].astype(x.dtype)
+                x = x + L.mlp(p["mlp"], L.norm(cfg, p["ln2"], x))
+                ks.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))))
+                vs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+            cp = gp["cross"]
+            _, xk, xv = L._project_qkv(cp["attn"], cfg,
+                                       L.norm(cfg, cp["ln1"], x), kv_input=vis)
+            x = self._cross_apply(cp, x, vis, impl)
+            return x, (jnp.stack(ks), jnp.stack(vs), xk, xv)
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, (k, v, xk, xv) = L.scan_or_unroll(body, x, params["groups"],
+                                             cfg.scan_layers)
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x[:, -1:])
+        dt = jnp.dtype(cfg.dtype)
+        cache = VLMCache(k=k.astype(dt), v=v.astype(dt), xk=xk.astype(dt),
+                         xv=xv.astype(dt), pos=jnp.full((B,), S, jnp.int32))
+        return logits, cache
+
+    def decode_step(self, params: Params, tokens: jax.Array,
+                    cache: VLMCache, impl: str = "reference"
+                    ) -> Tuple[jax.Array, VLMCache]:
+        cfg = self.cfg
+        B = tokens.shape[0]
+        T = cache.k.shape[3]
+        pos = cache.pos
+        x = L.embed(params["embedding"], cfg, tokens)
+        j = jnp.arange(T, dtype=jnp.int32)[None, :]
+        kv_valid = j < (pos + 1)[:, None]
+
+        def body(x, scanned):
+            gp, gk, gv, gxk, gxv = scanned
+            new_k, new_v = [], []
+            for i in range(self.self_per_group):
+                p = jax.tree.map(lambda a: a[i], gp["self"])
+                hn = L.norm(cfg, p["ln1"], x)
+                q, k, v = L._project_qkv(p["attn"], cfg, hn)
+                q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+                k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+                write = lambda buf, val: jax.vmap(
+                    lambda b, s, w: jax.lax.dynamic_update_slice(b, w, (s, 0, 0))
+                )(buf, pos, val)
+                lk, lv = write(gk[i], k), write(gv[i], v)
+                out = L.sdpa_reference(q, lk, lv, causal=True, q_offset=pos,
+                                       kv_valid=kv_valid)
+                out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+                x = x + out @ p["attn"]["wo"].astype(x.dtype)
+                x = x + L.mlp(p["mlp"], L.norm(cfg, p["ln2"], x))
+                new_k.append(lk)
+                new_v.append(lv)
+            cp = gp["cross"]
+            hn = L.norm(cfg, cp["ln1"], x)
+            q = (hn @ cp["attn"]["wq"].astype(x.dtype)).reshape(
+                B, 1, cfg.num_heads, cfg.head_dim)
+            out = L.sdpa_reference(q, gxk, gxv, causal=False)
+            out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+            out = out @ cp["attn"]["wo"].astype(x.dtype)
+            x = x + jnp.tanh(cp["gate_attn"]).astype(x.dtype) * out
+            y = L.mlp(cp["mlp"], L.norm(cfg, cp["ln2"], x))
+            x = x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * y
+            return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+        x, (k, v) = L.scan_or_unroll(
+            body, x,
+            (params["groups"], cache.k, cache.v, cache.xk, cache.xv),
+            cfg.scan_layers)
+        x = L.norm(cfg, params["final_norm"], x)
+        logits = L.unembed(params["embedding"], cfg, x)
+        return logits, VLMCache(k=k, v=v, xk=cache.xk, xv=cache.xv,
+                                pos=pos + 1)

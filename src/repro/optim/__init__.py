@@ -1,0 +1,14 @@
+from repro.optim.adafactor import Adafactor, AdafactorState
+from repro.optim.adamw import AdamW, AdamWState, global_norm
+
+
+def make_optimizer(name: str, **kwargs):
+    if name == "adamw":
+        return AdamW(**kwargs)
+    if name == "adafactor":
+        return Adafactor(**kwargs)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+__all__ = ["AdamW", "AdamWState", "Adafactor", "AdafactorState",
+           "global_norm", "make_optimizer"]

@@ -1,0 +1,88 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments.
+
+Default optimizer for the 100B+ configs (llama3-405b, jamba-398b): the
+second-moment estimate for a [m, n] matrix costs m+n instead of m·n, so
+optimizer state for 405B params drops from ~3.2 TB (Adam fp32) to ~0.8 TB
+params+state — the difference between fitting and not fitting a single
+v5e pod (DESIGN §hardware-adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    # per-leaf: dict with either {"vr","vc"} (factored) or {"v"} (full)
+    stats: Any
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    learning_rate: float = 1e-2
+    decay_offset: float = 0.8  # beta2_t = 1 - step^-decay_offset
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    warmup_steps: int = 0
+
+    def init(self, params: Params) -> AdafactorState:
+        def leaf_state(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        stats = jax.tree.map(leaf_state, params)
+        return AdafactorState(step=jnp.zeros((), jnp.int32), stats=stats)
+
+    def update(self, grads: Params, state: AdafactorState, params: Params
+               ) -> Tuple[Params, AdafactorState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-self.decay_offset)
+        lr = jnp.asarray(self.learning_rate, jnp.float32)
+        if self.warmup_steps > 0:
+            lr = lr * jnp.minimum(1.0, t / self.warmup_steps)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                rden = jnp.mean(vr, axis=-1, keepdims=True)
+                u = g * jax.lax.rsqrt(vr / rden)[..., None] \
+                    * jax.lax.rsqrt(vc)[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            # update clipping (RMS of update <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            new_p = p - lr * u
+            if self.weight_decay:
+                new_p = new_p - lr * self.weight_decay * p
+            return new_p.astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state.stats)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_stats = treedef.unflatten([o[1] for o in out])
+        return new_params, AdafactorState(step=step, stats=new_stats)

@@ -1,0 +1,77 @@
+"""AdamW with decoupled weight decay and global-norm clipping (pure JAX)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Params  # first moment
+    nu: Params  # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    # lr schedule hooks: linear warmup then cosine decay to lr_min.
+    warmup_steps: int = 0
+    total_steps: int = 0
+    lr_min_ratio: float = 0.1
+
+    def init(self, params: Params) -> AdamWState:
+        zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=zeros(params), nu=zeros(params))
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        lr = jnp.asarray(self.learning_rate, jnp.float32)
+        if self.warmup_steps > 0:
+            warm = jnp.minimum(1.0, (step + 1) / self.warmup_steps)
+            lr = lr * warm
+        if self.total_steps > 0:
+            frac = jnp.clip(
+                (step - self.warmup_steps)
+                / max(1, self.total_steps - self.warmup_steps), 0.0, 1.0)
+            cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+            lr = lr * (self.lr_min_ratio + (1 - self.lr_min_ratio) * cos)
+        return lr
+
+    def update(self, grads: Params, state: AdamWState, params: Params
+               ) -> Tuple[Params, AdamWState]:
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.schedule(state.step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                             + self.weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))

@@ -1,0 +1,172 @@
+"""Activation sharding constraints (logical-axis rules, MaxText-style).
+
+GSPMD propagation alone can lose the batch sharding at reshapes whose
+dims don't divide the mesh (e.g. qwen2's 14 heads on a 16-way model
+axis) — observed as 120 GB fp32 attention-score all-reduces in the
+un-constrained qwen2 train cell (EXPERIMENTS §Perf, iteration 1).  The
+layers therefore pin down the key intermediates explicitly.
+
+Models stay pure: the dry-run/launcher activates a context with the
+current ShardingPolicy; without a context every helper is a no-op, so
+CPU smoke tests and single-device runs are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_LOCAL = threading.local()
+
+
+def current() -> Optional["ActivationSharding"]:
+    return getattr(_LOCAL, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(policy, serve: bool = False, sp: bool = False):
+    prev = current()
+    _LOCAL.ctx = ActivationSharding(policy, serve, sp)
+    try:
+        yield _LOCAL.ctx
+    finally:
+        _LOCAL.ctx = prev
+
+
+@dataclasses.dataclass
+class ActivationSharding:
+    policy: object  # repro.parallel.policy.ShardingPolicy
+    # serve mode (single-token decode): batch stays REPLICATED so dense
+    # matmuls consume the 2D-sharded (data × model) weights in place —
+    # GSPMD then moves megabytes of activations instead of gathering
+    # gigabytes of FSDP weight shards per token (EXPERIMENTS §Perf,
+    # iteration 3).  Attention keeps batch-over-data (cache locality).
+    serve: bool = False
+    # Megatron-SP residual sharding (iteration 4): cuts activation temp
+    # memory ~9x but raises counted collective bytes; opt-in per cell.
+    sp: bool = False
+
+    def _axes(self, role: Optional[str], dim: int, what: str):
+        if role is None:
+            return None
+        table = {"dp": self.policy.dp, "tp": self.policy.tp}
+        axes = self.policy._shardable(dim, table[role], f"act:{what}")
+        if axes is None:
+            return None
+        return axes[0] if len(axes) == 1 else axes
+
+    def constrain(self, x: jax.Array, roles: Sequence[Optional[str]],
+                  what: str = "") -> jax.Array:
+        spec = P(*[self._axes(r, d, what) for r, d in zip(roles, x.shape)])
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.policy.mesh, spec))
+
+    def divides(self, dim: int, role: str) -> bool:
+        table = {"dp": self.policy.dp, "tp": self.policy.tp}
+        return dim % self.policy._axis_size(table[role]) == 0
+
+
+# ----------------------------------------------------------- public API
+
+def constrain(x: jax.Array, *roles: Optional[str], what: str = ""
+              ) -> jax.Array:
+    """Pin ``x``'s dims to mesh axes by role ('dp' | 'tp' | None)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    return ctx.constrain(x, roles, what)
+
+
+def constrain_qkv(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Attention heads sharding with the qwen2-style fallback.
+
+    Prefer head-sharding over `model`; when the head count doesn't
+    divide, shard the *query sequence* over `model` instead (keeps the
+    O(S²) score tensor fully distributed; k/v stay batch-sharded and are
+    all-gathered — cheap relative to scores).  Single-token decode
+    (S == 1) keeps batch sharding only.
+    """
+    ctx = current()
+    if ctx is None:
+        return q, k, v
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    if ctx.divides(H, "tp"):
+        kv_role = "tp" if ctx.divides(KV, "tp") else None
+        q = ctx.constrain(q, ("dp", None, "tp", None), "q")
+        k = ctx.constrain(k, ("dp", None, kv_role, None), "k")
+        v = ctx.constrain(v, ("dp", None, kv_role, None), "v")
+    elif S > 1 and ctx.divides(S, "tp"):
+        q = ctx.constrain(q, ("dp", "tp", None, None), "q.seq")
+        k = ctx.constrain(k, ("dp", None, None, None), "k.rep")
+        v = ctx.constrain(v, ("dp", None, None, None), "v.rep")
+    else:
+        q = ctx.constrain(q, ("dp", None, None, None), "q.rep")
+        k = ctx.constrain(k, ("dp", None, None, None), "k.rep")
+        v = ctx.constrain(v, ("dp", None, None, None), "v.rep")
+    return q, k, v
+
+
+def constrain_attn_out(out: jax.Array) -> jax.Array:
+    """Attention context [B, S, H, Dh] before the output projection.
+
+    Pinned to the same layout as q (heads over model, full seq) so the
+    Megatron-SP boundary stays on [B,S,D] tensors — without this the
+    partitioner pushes the seq sharding into the attention backward and
+    fully rematerializes fp32 score tensors (iteration 4 log).
+    """
+    ctx = current()
+    if ctx is None:
+        return out
+    B, S, H, Dh = out.shape
+    if ctx.divides(H, "tp"):
+        return ctx.constrain(out, ("dp", None, "tp", None), "attn_out")
+    if S > 1 and ctx.divides(S, "tp"):
+        return ctx.constrain(out, ("dp", "tp", None, None), "attn_out.seq")
+    return ctx.constrain(out, ("dp", None, None, None), "attn_out.rep")
+
+
+def constrain_tokens(x: jax.Array) -> jax.Array:
+    """Residual stream [B, S, D]: batch over dp (replicated in serve)."""
+    ctx = current()
+    if ctx is not None and ctx.serve:
+        # features over data: forces partial-D matmuls + [B,F/16] psums
+        # instead of per-layer weight gathers (iteration 3b).
+        return constrain(x, None, None, "dp", what="resid.serve")
+    if ctx is not None and x.ndim == 3 and x.shape[1] > 1             and ctx.divides(x.shape[1], "tp"):
+        # Megatron-SP: residual stream sequence-sharded over `model`
+        # between blocks — TP boundary all-reduces become reduce-scatter
+        # + all-gather pairs and norms/elementwise run 1/|tp| wide
+        # (iteration 4).
+        return constrain(x, "dp", "tp", None, what="resid.sp")
+    return constrain(x, "dp", None, None, what="resid")
+
+
+def constrain_ff(h: jax.Array) -> jax.Array:
+    """MLP hidden [B, S, F] (or [B,S,2di]): batch over dp, F over tp."""
+    ctx = current()
+    if ctx is not None and ctx.serve:
+        return constrain(h, None, None, "tp", what="ff.serve")
+    return constrain(h, "dp", None, "tp", what="ff")
+
+
+def constrain_logits(x: jax.Array) -> jax.Array:
+    """Logits [B, S, V]: batch over dp, vocab over tp."""
+    ctx = current()
+    if ctx is not None and ctx.serve:
+        return constrain(x, None, None, "tp", what="logits.serve")
+    return constrain(x, "dp", None, "tp", what="logits")
+
+
+def constrain_expert(x: jax.Array) -> jax.Array:
+    """MoE expert-major tensors [E, C, D]: experts over tp."""
+    return constrain(x, "tp", None, None, what="experts")
+
+
+def constrain_dispatch(d: jax.Array) -> jax.Array:
+    """MoE dispatch/combine [T, E, C]: tokens over dp, experts over tp."""
+    return constrain(d, "dp", "tp", None, what="dispatch")

@@ -1,0 +1,91 @@
+"""Gradient compression for cross-pod reductions (int8 quantized psum).
+
+At 512+ chips the inter-pod DCN hop is the thinnest link in the gradient
+all-reduce.  ``int8_allreduce`` quantizes each gradient leaf to int8 with
+a per-leaf fp32 scale before the ``pod``-axis psum and dequantizes after
+— 4× less DCN traffic for fp32 grads.  Intra-pod reductions stay full
+precision (ICI is cheap).  Stochastic rounding keeps the quantizer
+unbiased; an optional error-feedback buffer folds the residual into the
+next step (Karimireddy et al., 2019).
+
+Used through ``make_train_step(compress_grads=...)`` or standalone under
+shard_map.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def quantize_int8(x: jax.Array, key: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization, optionally stochastic."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    y = xf / scale
+    if key is not None:
+        y = jnp.floor(y + jax.random.uniform(key, y.shape))
+    else:
+        y = jnp.round(y)
+    return jnp.clip(y, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def simulate_roundtrip(grads: Params, key: Optional[jax.Array] = None
+                       ) -> Params:
+    """Quantize→dequantize every leaf (what the wire sees), no psum.
+
+    Useful as ``compress_grads`` in single-process tests and to measure
+    the quantization-noise impact on convergence.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    out = []
+    for i, g in enumerate(leaves):
+        k = None if key is None else jax.random.fold_in(key, i)
+        q, s = quantize_int8(g, k)
+        out.append(dequantize_int8(q, s).astype(g.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def int8_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """Quantized cross-replica sum (call inside shard_map).
+
+    Implemented as all-gather of int8 payloads + per-rank fp32 scales,
+    then a local dequantize-and-sum — each rank's scale travels with its
+    payload (ranks cannot share a scale without an extra round-trip).
+    Wire bytes: N·(size/4 + 4) vs. ~2·N·size for a ring fp32 all-reduce.
+    """
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)  # [N, ...] int8
+    ss = jax.lax.all_gather(scale, axis_name)  # [N]
+    deq = qs.astype(jnp.float32) * ss.reshape(
+        (-1,) + (1,) * (qs.ndim - 1))
+    return jnp.sum(deq, axis=0)
+
+
+def make_pod_compressor(mesh, error_feedback: bool = False):
+    """Return ``compress(grads) -> grads`` that int8-round-trips every
+    leaf, modelling the inter-pod quantized all-reduce.  With
+    ``error_feedback`` the quantization residual is carried in a closure
+    buffer and added before the next quantization (stateful; test-scale
+    only — production would thread it through TrainState)."""
+    state = {"residual": None}
+
+    def compress(grads: Params) -> Params:
+        g = grads
+        if error_feedback and state["residual"] is not None:
+            g = jax.tree.map(lambda a, r: a + r, g, state["residual"])
+        out = simulate_roundtrip(g)
+        if error_feedback:
+            state["residual"] = jax.tree.map(lambda a, o: a - o, g, out)
+        return out
+
+    return compress

@@ -1,0 +1,210 @@
+"""Sharding policy: parameter/activation/cache PartitionSpecs per mesh.
+
+Strategy (GSPMD logical axes):
+
+* ``dp`` = data-parallel axes — ``("data",)`` single-pod,
+  ``("pod", "data")`` multi-pod (DP spans pods; within-pod stays the
+  bandwidth-rich 2D torus);
+* ``model`` = tensor/expert-parallel axis.
+
+Parameters are FSDP-sharded: every weight matrix shards its input-feature
+dim over ``dp`` and its output/TP dim over ``model`` (ZeRO-3-style — an
+all-gather per layer materializes weights, reduce-scatter folds grads).
+Experts shard over ``model`` (EP).  Mamba channel dims shard over
+``model``.
+
+Every rule passes through :meth:`ShardingPolicy._shardable`, which *drops*
+an axis that does not divide the dim and records the fallback — no config
+can make the dry-run fail on divisibility (e.g. qwen2's 14 heads never
+shard; its fused QKV output dim 896 does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger(__name__)
+
+AxisSpec = Optional[Tuple[str, ...]]  # names for ONE dim (None = replicate)
+
+# symbolic per-dim axis assignment: "dp" | "tp" | None per dimension
+_NAME_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "emb": ("tp", "dp"),  # [V, D]: vocab over model, features FSDP
+    "unemb": ("dp", "tp"),  # [D, V]
+    "wq": ("dp", "tp"), "wk": ("dp", "tp"), "wv": ("dp", "tp"),
+    "wg": ("dp", "tp"), "wu": ("dp", "tp"), "w_in": ("dp", "tp"),
+    "wo": ("tp", "dp"), "wd": ("tp", "dp"), "w_out": ("tp", "dp"),
+    "w_dt": (None, "tp"),  # [r, di]
+    "bq": ("tp",), "bk": ("tp",), "bv": ("tp",),
+    "conv_b": ("tp",), "b_dt": ("tp",), "D": ("tp",),
+    "router": ("dp", None),  # [D, E] — experts dim replicated (small)
+    "experts_wg": ("tp", "dp", None),  # [E, D, F]: EP + FSDP
+    "experts_wu": ("tp", "dp", None),
+    "experts_wd": ("tp", None, "dp"),  # [E, F, D]
+    "conv_w": (None, "tp"),  # [k, di]
+    "w_x": ("tp", None),  # [di, r+2n]
+    "A_log": ("tp", None),  # [di, n]
+}
+
+# pytree containers whose leading dim(s) are layer stacks (scan axes)
+_STACK_KEYS = ("layers", "groups", "enc_layers", "dec_layers",
+               "mamba_moe", "mamba_mlp", "self")
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    fallbacks: List[str] = dataclasses.field(default_factory=list)
+
+    # ----------------------------------------------------------- helpers
+    @property
+    def dp(self) -> Tuple[str, ...]:
+        return tuple(n for n in ("pod", "data") if n in self.mesh.axis_names)
+
+    @property
+    def tp(self) -> Tuple[str, ...]:
+        return ("model",) if "model" in self.mesh.axis_names else ()
+
+    def _axis_size(self, axes: Sequence[str]) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in axes], initial=1))
+
+    def _shardable(self, dim: int, axes: Sequence[str], what: str) -> AxisSpec:
+        """Keep `axes` only if they divide `dim`; else fall back."""
+        axes = tuple(axes)
+        if not axes:
+            return None
+        if dim % self._axis_size(axes) == 0:
+            return axes
+        # try a prefix (e.g. ('pod','data') -> ('pod',))
+        for cut in range(len(axes) - 1, 0, -1):
+            if dim % self._axis_size(axes[:cut]) == 0:
+                self.fallbacks.append(
+                    f"{what}: dim {dim} % {axes} != 0 -> {axes[:cut]}")
+                return axes[:cut]
+        self.fallbacks.append(f"{what}: dim {dim} % {axes} != 0 -> replicated")
+        return None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # ------------------------------------------------------------ params
+    def _symbolic_axes(self, path: str, ndim: int
+                       ) -> Tuple[Optional[str], ...]:
+        parts = path.split("/")
+        name = parts[-1]
+        if name == "vr":  # adafactor row stat: param axes minus last
+            return self._symbolic_axes("/".join(parts[:-1]), ndim + 1)[:-1]
+        if name == "vc":  # column stat: param axes minus second-to-last
+            base = self._symbolic_axes("/".join(parts[:-1]), ndim + 1)
+            return base[:-2] + base[-1:]
+        # adam moments' paths start with mu/nu, so the final dict key is
+        # the parameter name either way.
+        return _NAME_AXES.get(name, (None,) * ndim)
+
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        """PartitionSpec for one parameter leaf, dispatched on its name."""
+        sym = self._symbolic_axes(path, len(shape))
+        if len(sym) != len(shape):  # unknown name or scalar: replicate
+            return P(*([None] * len(shape)))
+        table = {"dp": self.dp, "tp": self.tp}
+        parts = []
+        for dim, s in zip(shape, sym):
+            if s is None:
+                parts.append(None)
+            else:
+                parts.append(_one(self._shardable(dim, table[s],
+                                                  f"{path}[{s}]")))
+        return P(*parts)
+
+    def tree_specs(self, tree: Any) -> Any:
+        """Map a pytree of arrays/ShapeDtypeStructs to PartitionSpecs.
+
+        Layer-stacked leaves ([L, ...] from scan stacking) are detected by
+        path components (layers/groups/...) and get a leading None dim.
+        """
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path, leaf in flat:
+            keys = [_key_str(k) for k in path]
+            pstr = "/".join(keys)
+            n_stack = sum(1 for k in keys if k in _STACK_KEYS)
+            shape = tuple(leaf.shape)
+            core = shape[n_stack:]
+            spec = self.param_spec(pstr, core) if core else P()
+            parts = [None] * n_stack + list(spec)
+            out.append(P(*parts))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------- activations
+    def batch_spec(self, batch: Any) -> Any:
+        """Input batch: leading batch dim over dp, rest replicated."""
+        def one(leaf):
+            b = leaf.shape[0]
+            axes = self._shardable(b, self.dp, "batch")
+            return P(*([_one(axes)] + [None] * (leaf.ndim - 1)))
+
+        return jax.tree.map(one, batch)
+
+    def cache_spec(self, cache: Any) -> Any:
+        """Decode-cache sharding.
+
+        KV caches [L, B, T, KV, Dh]: batch over dp; then prefer KV-head
+        sharding over `model` when divisible, else shard the *sequence*
+        dim over `model` (flash-decode style — see §Perf).  long_500k
+        (B=1) spreads the sequence over every axis.  SSM states shard
+        channels over `model`.
+        """
+        def one(path, leaf):
+            keys = "/".join(_key_str(k) for k in path)
+            shape = tuple(leaf.shape)
+            if leaf.ndim <= 1 or "pos" in keys:
+                return P(*([None] * leaf.ndim))
+            if "conv" in keys:  # [L(,M), B, k, di]
+                lead = leaf.ndim - 3
+                return P(*([None] * lead),
+                         _one(self._shardable(shape[lead], self.dp, "cacheB")),
+                         None,
+                         _one(self._shardable(shape[-1], self.tp, "cacheDi")))
+            if "ssm" in keys:  # [L(,M), B, di, n]
+                lead = leaf.ndim - 3
+                return P(*([None] * lead),
+                         _one(self._shardable(shape[lead], self.dp, "cacheB")),
+                         _one(self._shardable(shape[-2], self.tp, "cacheDi")),
+                         None)
+            # kv caches: [..., B, T, KV, Dh]
+            lead = leaf.ndim - 4
+            B, T, KV, Dh = shape[lead:]
+            b_axes = self._shardable(B, self.dp, "cacheB")
+            if B == 1 and b_axes is None:
+                # long_500k: no batch to shard; spread T over everything
+                t_axes = self._shardable(T, self.dp + self.tp, "cacheT")
+                return P(*([None] * lead), None, _one(t_axes), None, None)
+            if KV % self._axis_size(self.tp) == 0:
+                return P(*([None] * lead), _one(b_axes), None,
+                         _one(self.tp), None)
+            t_axes = self._shardable(T, self.tp, "cacheT")
+            return P(*([None] * lead), _one(b_axes), _one(t_axes),
+                     None, None)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        return jax.tree_util.tree_unflatten(
+            treedef, [one(p, l) for p, l in flat])
+
+
+def _one(axes: AxisSpec):
+    if axes is None:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _key_str(k) -> str:
+    m = re.match(r".*'(.*)'.*", str(k))
+    if m:
+        return m.group(1)
+    return str(k).strip(".[]")

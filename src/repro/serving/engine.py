@@ -1,0 +1,140 @@
+"""Serving engine: slot-based continuous batching over the decode cache.
+
+The engine owns ``n_slots`` cache lanes.  Each step either admits a queued
+request (prefill → scatter its cache into a free slot) or advances every
+active slot by one token (batched decode).  Slot admission is a resource
+allocation decision — ``repro.engine.mljobs`` can drive it through ARAS,
+scaling the *number of admitted lanes* exactly like the paper scales pod
+quotas under contention.
+
+Per-slot positions make the decode batch ragged-safe: finished or empty
+slots are masked out, so one compiled decode_step serves any occupancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ArchModel, Batch
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    n_slots: int = 4
+    max_len: int = 256
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, model: ArchModel, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * cfg.n_slots
+        self._req_ids = itertools.count()
+        self._rng = jax.random.key(cfg.seed)
+        self.cache = model.init_cache(cfg.n_slots, cfg.max_len)
+        # locate each cache leaf's batch axis structurally (robust even
+        # when n_slots == 1): the axis whose size tracks the batch arg.
+        c2 = jax.eval_shape(lambda: model.init_cache(2, cfg.max_len))
+        c3 = jax.eval_shape(lambda: model.init_cache(3, cfg.max_len))
+        self._batch_axes = jax.tree.map(
+            lambda a, b: int(next(
+                i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                if x != y)), c2, c3)
+        self._next_token = np.zeros((cfg.n_slots,), np.int32)
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode_step(p, t, c))
+        self._steps = 0
+
+    # --------------------------------------------------------------- API
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        rid = next(self._req_ids)
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens))
+        return rid
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    def has_work(self) -> bool:
+        return self.active > 0 or bool(self.queue)
+
+    # ------------------------------------------------------------- steps
+    def _admit(self, slot: int, req: Request) -> None:
+        """Prefill the request and scatter its lane into the batch cache."""
+        batch: Batch = {"tokens": jnp.asarray(req.prompt[None])}
+        logits, cache1 = self.model.prefill(self.params, batch,
+                                            max_len=self.cfg.max_len)
+
+        def scatter(full, lane, axis):
+            idx = [slice(None)] * full.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return full.at[tuple(idx)].set(lane.astype(full.dtype))
+
+        self.cache = jax.tree.map(scatter, self.cache, cache1,
+                                  self._batch_axes)
+        self.slots[slot] = req
+        self._next_token[slot] = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(int(self._next_token[slot]))
+
+    def step(self) -> Dict[int, List[int]]:
+        """One engine iteration; returns newly finished request outputs."""
+        self._steps += 1
+        # admission: fill free slots from the queue (prefill phase)
+        for slot in range(self.cfg.n_slots):
+            if self.slots[slot] is None and self.queue:
+                self._admit(slot, self.queue.popleft())
+
+        finished: Dict[int, List[int]] = {}
+        if self.active == 0:
+            return finished
+
+        tokens = jnp.asarray(self._next_token[:, None])
+        logits, self.cache = self._decode(self.params, tokens, self.cache)
+        if self.cfg.greedy:
+            nxt = jnp.argmax(logits[:, 0], axis=-1)
+        else:
+            self._rng, sub = jax.random.split(self._rng)
+            nxt = jax.random.categorical(
+                sub, logits[:, 0] / self.cfg.temperature, axis=-1)
+        nxt = np.asarray(nxt, np.int32)
+
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.generated.append(int(nxt[slot]))
+            self._next_token[slot] = nxt[slot]
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                finished[req.request_id] = req.generated
+                self.slots[slot] = None
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000
+                          ) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        steps = 0
+        while self.has_work() and steps < max_steps:
+            out.update(self.step())
+            steps += 1
+        return out

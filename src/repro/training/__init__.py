@@ -1,0 +1,9 @@
+from repro.training.loop import LoopConfig, SimulatedFailure, train
+from repro.training.train_step import (
+    TrainState,
+    init_train_state,
+    make_train_step,
+)
+
+__all__ = ["LoopConfig", "SimulatedFailure", "train", "TrainState",
+           "init_train_state", "make_train_step"]

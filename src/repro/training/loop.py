@@ -1,0 +1,89 @@
+"""Training loop with checkpoint/restart, failure injection, and MAPE-K
+self-healing — the workload-plane mirror of the paper's Fig. 9 behaviour.
+
+The loop is deliberately small: scheduling/queueing of *many* training
+jobs belongs to the engine (``repro.engine.mljobs``); this file owns one
+job's lifecycle:
+
+    restore-if-possible → step* → periodic async checkpoint → on simulated
+    failure: restart from last checkpoint (bit-exact: step-indexed data).
+
+The OOM self-healing path (allocation below the activation-memory floor →
+halve microbatch and relaunch) reuses the same restart mechanics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data.synthetic import SyntheticDataset
+from repro.models.api import ArchModel
+from repro.training.train_step import TrainState, init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 25
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    # fault injection: raise at this step (once) to exercise restart
+    fail_at_step: Optional[int] = None
+    grad_accum: int = 1
+    seed: int = 0
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+def train(
+    model: ArchModel,
+    optimizer,
+    dataset: SyntheticDataset,
+    cfg: LoopConfig,
+    *,
+    on_metrics: Optional[Callable[[int, Dict], None]] = None,
+) -> TrainState:
+    """Run (or resume) one training job to ``total_steps``."""
+    ckpt = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep)
+    step_fn = jax.jit(make_train_step(model, optimizer,
+                                      grad_accum=cfg.grad_accum))
+
+    state = init_train_state(model, optimizer, jax.random.key(cfg.seed))
+    restored = ckpt.restore_latest(state)
+    if restored is not None:
+        _, state = restored
+
+    failed_once = False
+    history: List[float] = []
+    step = int(state.step)
+    while step < cfg.total_steps:
+        if cfg.fail_at_step is not None and step == cfg.fail_at_step \
+                and not failed_once:
+            failed_once = True
+            # crash-restart: lose in-memory state, restore from checkpoint
+            state = init_train_state(model, optimizer,
+                                     jax.random.key(cfg.seed))
+            restored = ckpt.restore_latest(state)
+            if restored is not None:
+                _, state = restored
+            step = int(state.step)
+            continue
+        batch = dataset.batch_at(step)
+        state, metrics = step_fn(state, batch)
+        step = int(state.step)
+        history.append(float(metrics["loss"]))
+        if on_metrics and (step % cfg.log_every == 0 or step == 1):
+            on_metrics(step, jax.tree.map(float, metrics))
+        if step % cfg.checkpoint_every == 0 or step == cfg.total_steps:
+            ckpt.save(state, step)
+    ckpt.wait()
+    train.last_history = history  # exposed for tests/examples
+    return state

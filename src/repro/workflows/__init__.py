@@ -1,0 +1,15 @@
+from repro.workflows.arrival import PATTERNS, constant, linear, pyramid
+from repro.workflows.dags import (
+    WORKFLOW_BUILDERS,
+    cybershake,
+    epigenomics,
+    ligo,
+    montage,
+)
+from repro.workflows.spec import TaskSpec, WorkflowSpec, make_task
+
+__all__ = [
+    "PATTERNS", "constant", "linear", "pyramid",
+    "WORKFLOW_BUILDERS", "montage", "epigenomics", "cybershake", "ligo",
+    "TaskSpec", "WorkflowSpec", "make_task",
+]

@@ -1,0 +1,47 @@
+"""Workflow arrival patterns (paper §6.1.4, Fig. 5(a-c))."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+# Each pattern is a list of (time_seconds, num_workflows) bursts.
+INTERVAL = 300.0
+
+
+def constant(y: int = 5, bursts: int = 6, interval: float = INTERVAL
+             ) -> List[Tuple[float, int]]:
+    """y workflows every `interval` s, `bursts` times (5×6 = 30)."""
+    return [(i * interval, y) for i in range(bursts)]
+
+
+def linear(k: int = 2, d: int = 2, bursts: int = 5, interval: float = INTERVAL
+           ) -> List[Tuple[float, int]]:
+    """y = k·x + d rising bursts (2,4,6,8,10 = 30)."""
+    return [(i * interval, d + k * i) for i in range(bursts)]
+
+
+def pyramid(start: int = 2, peak: int = 6, step: int = 2, total: int = 34,
+            interval: float = INTERVAL) -> List[Tuple[float, int]]:
+    """Grow start→peak by `step`, shrink back, repeat until `total` (=34).
+
+    Produces 2,4,6,4,2,2,4,6,4 for the defaults — Σ = 34, matching §6.1.4.
+    """
+    out: List[Tuple[float, int]] = []
+    sent, t, y, direction = 0, 0.0, start, +1
+    while sent < total:
+        y_emit = min(y, total - sent)
+        out.append((t, y_emit))
+        sent += y_emit
+        t += interval
+        if y >= peak:
+            direction = -1
+        y += direction * step
+        if y < start:
+            y, direction = start, +1
+    return out
+
+
+PATTERNS = {"constant": constant, "linear": linear, "pyramid": pyramid}
+
+
+def total_workflows(pattern: List[Tuple[float, int]]) -> int:
+    return sum(n for _, n in pattern)

@@ -1,0 +1,129 @@
+"""The four scientific-workflow topologies of the paper (§6.1.2, Fig. 4).
+
+Small-scale variants (≈20 tasks) derived from the Pegasus workflow gallery,
+with virtual entrance/exit nodes added exactly as the paper does.  Task
+counts match the paper: Montage 21, Epigenomics 20, CyberShake 22, LIGO 23.
+Structure coverage: out-tree + fan-in (Montage), pipeline (Epigenomics),
+fork-join wide/shallow (CyberShake), in-tree (LIGO).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.workflows.spec import TaskSpec, WorkflowSpec, make_task
+
+
+def _build(
+    workflow_id: str,
+    names: List[str],
+    edges: List[Tuple[str, str]],
+    rng: np.random.Generator,
+    task_kwargs: Optional[dict] = None,
+) -> WorkflowSpec:
+    kw = dict(task_kwargs or {})
+    tasks: Dict[str, TaskSpec] = {}
+    for name in names:
+        if name in ("entrance", "exit"):
+            # Virtual nodes: zero-cost bookkeeping tasks (paper §6.1.2).
+            tasks[name] = TaskSpec(
+                task_id=name, image="virtual", cpu=0.0, mem=0.0,
+                duration=0.0, min_cpu=0.0, min_mem=0.0,
+            )
+        else:
+            tasks[name] = make_task(name, rng, **kw)
+    return WorkflowSpec(workflow_id=workflow_id, tasks=tasks, edges=edges)
+
+
+def montage(workflow_id: str, rng: np.random.Generator,
+            task_kwargs: Optional[dict] = None) -> WorkflowSpec:
+    """21 tasks — out-tree into fan-in chains (Fig. 4(a))."""
+    proj = [f"mProject_{i}" for i in range(4)]
+    diff = [f"mDiffFit_{i}" for i in range(5)]
+    tail = ["mConcatFit", "mBgModel"]
+    bg = [f"mBackground_{i}" for i in range(4)]
+    post = ["mImgtbl", "mAdd", "mShrink", "mJPEG"]
+    names = ["entrance"] + proj + diff + tail + bg + post + ["exit"]
+    assert len(names) == 21
+
+    edges: List[Tuple[str, str]] = [("entrance", p) for p in proj]
+    # overlapping project pairs feed the difference fits
+    for i, d in enumerate(diff):
+        edges.append((proj[i % 4], d))
+        edges.append((proj[(i + 1) % 4], d))
+    edges += [(d, "mConcatFit") for d in diff]
+    edges.append(("mConcatFit", "mBgModel"))
+    edges += [("mBgModel", b) for b in bg]
+    edges += [(b, "mImgtbl") for b in bg]
+    edges += [("mImgtbl", "mAdd"), ("mAdd", "mShrink"), ("mShrink", "mJPEG"),
+              ("mJPEG", "exit")]
+    return _build(workflow_id, names, edges, rng, task_kwargs)
+
+
+def epigenomics(workflow_id: str, rng: np.random.Generator,
+                task_kwargs: Optional[dict] = None) -> WorkflowSpec:
+    """20 tasks — four parallel 4-stage pipelines (Fig. 4(b))."""
+    stages = ["filterContams", "sol2sanger", "fastq2bfq", "map"]
+    names = ["entrance", "fastqSplit"]
+    edges: List[Tuple[str, str]] = [("entrance", "fastqSplit")]
+    for lane in range(4):
+        prev = "fastqSplit"
+        for s in stages:
+            name = f"{s}_{lane}"
+            names.append(name)
+            edges.append((prev, name))
+            prev = name
+        edges.append((prev, "mapMerge"))
+    names += ["mapMerge", "exit"]
+    edges.append(("mapMerge", "exit"))
+    assert len(names) == 20
+    return _build(workflow_id, names, edges, rng, task_kwargs)
+
+
+def cybershake(workflow_id: str, rng: np.random.Generator,
+               task_kwargs: Optional[dict] = None) -> WorkflowSpec:
+    """22 tasks — wide, shallow fork-join (Fig. 4(c))."""
+    extract = [f"ExtractSGT_{i}" for i in range(2)]
+    synth = [f"SeisSynth_{i}" for i in range(15)]
+    peak = [f"PeakValCalc_{i}" for i in range(2)]
+    zips = ["ZipSeis"]
+    names = ["entrance"] + extract + synth + peak + zips + ["exit"]
+    assert len(names) == 22
+
+    edges: List[Tuple[str, str]] = [("entrance", e) for e in extract]
+    for i, s in enumerate(synth):
+        edges.append((extract[i % 2], s))
+        edges.append((s, peak[i % 2]))
+        edges.append((s, "ZipSeis"))
+    edges += [(p, "exit") for p in peak]
+    edges.append(("ZipSeis", "exit"))
+    return _build(workflow_id, names, edges, rng, task_kwargs)
+
+
+def ligo(workflow_id: str, rng: np.random.Generator,
+         task_kwargs: Optional[dict] = None) -> WorkflowSpec:
+    """23 tasks — two concurrent in-trees (Fig. 4(d))."""
+    tmplt = [f"TmpltBank_{i}" for i in range(8)]
+    insp = [f"Inspiral_{i}" for i in range(8)]
+    trig = [f"TrigBank_{i}" for i in range(2)]
+    thinca = [f"Thinca_{i}" for i in range(2)]
+    names = ["entrance"] + tmplt + insp + trig + thinca + ["Coire", "exit"]
+    assert len(names) == 23
+
+    edges: List[Tuple[str, str]] = [("entrance", t) for t in tmplt]
+    edges += [(tmplt[i], insp[i]) for i in range(8)]
+    for i, t in enumerate(trig):  # fan-in 4:1
+        edges += [(insp[4 * i + j], t) for j in range(4)]
+    edges += [(trig[i], thinca[i]) for i in range(2)]
+    edges += [(t, "Coire") for t in thinca]
+    edges.append(("Coire", "exit"))
+    return _build(workflow_id, names, edges, rng, task_kwargs)
+
+
+WORKFLOW_BUILDERS: Dict[str, Callable[..., WorkflowSpec]] = {
+    "montage": montage,
+    "epigenomics": epigenomics,
+    "cybershake": cybershake,
+    "ligo": ligo,
+}

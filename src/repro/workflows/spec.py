@@ -1,0 +1,112 @@
+"""Workflow specifications: DAGs of TaskSpecs (paper §3.1, Eq. 1-4)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.types import TaskSpec
+
+
+@dataclasses.dataclass
+class WorkflowSpec:
+    """w_i = {sla, s_1..s_n} with edges encoding task dependencies."""
+
+    workflow_id: str
+    tasks: Dict[str, TaskSpec]
+    edges: List[Tuple[str, str]]  # (parent, child)
+    deadline: Optional[float] = None  # sla_{w_i} (Eq. 3)
+
+    def __post_init__(self):
+        names = set(self.tasks)
+        for a, b in self.edges:
+            if a not in names or b not in names:
+                raise ValueError(f"edge ({a},{b}) references unknown task")
+        self._check_acyclic()
+
+    # --------------------------------------------------------------- graph
+    def parents(self, task_id: str) -> List[str]:
+        return [a for a, b in self.edges if b == task_id]
+
+    def children(self, task_id: str) -> List[str]:
+        return [b for a, b in self.edges if a == task_id]
+
+    def indegrees(self) -> Dict[str, int]:
+        deg = {t: 0 for t in self.tasks}
+        for _, b in self.edges:
+            deg[b] += 1
+        return deg
+
+    def roots(self) -> List[str]:
+        return [t for t, d in self.indegrees().items() if d == 0]
+
+    def topological_order(self) -> List[str]:
+        deg = self.indegrees()
+        ready = sorted([t for t, d in deg.items() if d == 0])
+        order: List[str] = []
+        while ready:
+            t = ready.pop(0)
+            order.append(t)
+            for c in self.children(t):
+                deg[c] -= 1
+                if deg[c] == 0:
+                    ready.append(c)
+            ready.sort()
+        if len(order) != len(self.tasks):
+            raise ValueError("cycle detected")
+        return order
+
+    def _check_acyclic(self) -> None:
+        self.topological_order()
+
+    # ------------------------------------------------------------ schedule
+    def earliest_starts(self, t0: float = 0.0) -> Dict[str, float]:
+        """Critical-path earliest start times (planning-phase knowledge).
+
+        The MAPE-K Plan step uses these projections as the ``t_start`` of
+        not-yet-launched tasks in the knowledge base, so Alg. 1 can see
+        *future* in-window competitors (paper Fig. 1: T2-T4 inside T1's
+        lifecycle).
+        """
+        est: Dict[str, float] = {}
+        for t in self.topological_order():
+            ps = self.parents(t)
+            if not ps:
+                est[t] = t0
+            else:
+                est[t] = max(est[p] + self.tasks[p].duration for p in ps)
+        return est
+
+    @property
+    def num_tasks(self) -> int:
+        return len(self.tasks)
+
+    def critical_path_length(self) -> float:
+        est = self.earliest_starts()
+        return max(est[t] + self.tasks[t].duration for t in self.tasks)
+
+
+def make_task(
+    task_id: str,
+    rng: np.random.Generator,
+    *,
+    cpu: float = 2000.0,
+    mem: float = 4000.0,
+    min_cpu: float = 100.0,
+    min_mem: float = 1000.0,
+    dur_range: Tuple[float, float] = (10.0, 20.0),
+    actual_min_mem: Optional[float] = None,
+) -> TaskSpec:
+    """Paper §6.1.3 instantiation: requests=limits=2000m/4000Mi, Stress
+    holds 1000Mi (= min_mem), duration ~ U(10, 20) s."""
+    return TaskSpec(
+        task_id=task_id,
+        image="task-emulator:stress",
+        cpu=cpu,
+        mem=mem,
+        duration=float(rng.uniform(*dur_range)),
+        min_cpu=min_cpu,
+        min_mem=min_mem,
+        actual_min_mem=actual_min_mem,
+    )

@@ -1,0 +1,136 @@
+"""Algorithm 2 (resource discovery) + Algorithm 1 window accumulation."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import discovery, lifecycle
+from repro.core.types import ClusterSnapshot, TaskWindow
+
+
+def make_snapshot(num_nodes, pod_node, pod_cpu, pod_mem, pod_active,
+                  cap_cpu=8000.0, cap_mem=16000.0):
+    return ClusterSnapshot(
+        allocatable_cpu=np.full((num_nodes,), cap_cpu, np.float32),
+        allocatable_mem=np.full((num_nodes,), cap_mem, np.float32),
+        pod_node=np.asarray(pod_node, np.int32),
+        pod_cpu=np.asarray(pod_cpu, np.float32),
+        pod_mem=np.asarray(pod_mem, np.float32),
+        pod_active=np.asarray(pod_active, bool),
+    )
+
+
+def test_residual_basic():
+    snap = make_snapshot(3, [0, 0, 1, 2], [1000, 500, 2000, 100],
+                         [2000, 1000, 4000, 200], [True, True, True, False])
+    rc, rm = discovery.discover(snap)
+    np.testing.assert_allclose(np.asarray(rc), [6500, 6000, 8000])
+    np.testing.assert_allclose(np.asarray(rm), [13000, 12000, 16000])
+
+
+def test_pending_counts_succeeded_does_not():
+    """Alg. 2 line 8: only Running|Pending pods consume."""
+    snap = make_snapshot(1, [0, 0], [1000, 1000], [1000, 1000], [True, False])
+    rc, rm = discovery.discover(snap)
+    assert float(rc[0]) == 7000.0
+
+
+def test_empty_cluster():
+    snap = ClusterSnapshot.empty(4)
+    rc, rm = discovery.discover(snap)
+    assert rc.shape == (4,)
+    np.testing.assert_allclose(np.asarray(rc), 0.0)
+
+
+def test_summary_max_node_tracks_cpu():
+    """Alg. 1 lines 19-22: Re_max_mem is read from the argmax-CPU node."""
+    snap = make_snapshot(2, [0], [1000], [15000], [True])
+    rc, rm = discovery.discover(snap)
+    s = discovery.summarize(rc, rm)
+    assert int(s["max_node"]) == 1
+    assert float(s["re_max_cpu"]) == 8000.0
+    assert float(s["re_max_mem"]) == 16000.0  # node 1's mem, not the global max
+    assert float(s["total_cpu"]) == 15000.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    num_nodes=st.integers(min_value=1, max_value=16),
+    pods=st.lists(
+        st.tuples(
+            st.integers(min_value=0, max_value=15),
+            st.floats(min_value=0, max_value=4000),
+            st.floats(min_value=0, max_value=8000),
+            st.booleans(),
+        ),
+        max_size=64,
+    ),
+)
+def test_discovery_matches_loop_oracle(num_nodes, pods):
+    """Vectorized segment-sum == the paper's O(m·p) double loop."""
+    pods = [(n % num_nodes, c, m, a) for (n, c, m, a) in pods]
+    snap = make_snapshot(
+        num_nodes,
+        [p[0] for p in pods] or np.zeros((0,), np.int32),
+        [p[1] for p in pods] or np.zeros((0,), np.float32),
+        [p[2] for p in pods] or np.zeros((0,), np.float32),
+        [p[3] for p in pods] or np.zeros((0,), bool),
+    )
+    rc, rm = discovery.discover(snap)
+    for v in range(num_nodes):  # the Go loop, literally
+        node_req_cpu = sum(c for (n, c, _, a) in pods if n == v and a)
+        node_req_mem = sum(m for (n, _, m, a) in pods if n == v and a)
+        assert float(rc[v]) == pytest.approx(8000.0 - node_req_cpu, rel=1e-4, abs=1e-2)
+        assert float(rm[v]) == pytest.approx(16000.0 - node_req_mem, rel=1e-4, abs=1e-2)
+
+
+# ------------------------------------------------------ lifecycle window
+
+def test_window_demand_includes_in_window_only():
+    win = TaskWindow(
+        t_start=np.array([0.0, 5.0, 14.9, 15.0, 20.0], np.float32),
+        cpu=np.array([100, 200, 400, 800, 1600], np.float32),
+        mem=np.array([1, 2, 4, 8, 16], np.float32),
+        done=np.array([False] * 5),
+    )
+    # window [5, 15): rows 1, 2 qualify (t=5 in, t=15 out — half-open).
+    cpu, mem = lifecycle.window_demand(win, 5.0, 15.0, 1000.0, 10.0)
+    assert cpu == pytest.approx(1000 + 200 + 400)
+    assert mem == pytest.approx(10 + 2 + 4)
+
+
+def test_window_demand_skips_done():
+    win = TaskWindow(
+        t_start=np.array([5.0, 6.0], np.float32),
+        cpu=np.array([100, 200], np.float32),
+        mem=np.array([1, 2], np.float32),
+        done=np.array([True, False]),
+    )
+    cpu, mem = lifecycle.window_demand(win, 0.0, 10.0, 0.0, 0.0)
+    assert cpu == pytest.approx(200)
+
+
+def test_window_demand_empty_store():
+    win = TaskWindow(*(np.zeros((0,), t) for t in (np.float32,) * 3 + (bool,)))
+    cpu, mem = lifecycle.window_demand(win, 0.0, 10.0, 123.0, 456.0)
+    assert (cpu, mem) == (123.0, 456.0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    starts=st.lists(st.floats(min_value=0, max_value=100), min_size=1, max_size=32),
+    w0=st.floats(min_value=0, max_value=100),
+    dur=st.floats(min_value=0.1, max_value=50),
+)
+def test_window_demand_matches_oracle(starts, w0, dur):
+    n = len(starts)
+    cpu_arr = np.arange(1, n + 1, dtype=np.float32) * 10
+    mem_arr = np.arange(1, n + 1, dtype=np.float32)
+    win = TaskWindow(np.asarray(starts, np.float32), cpu_arr, mem_arr,
+                     np.zeros((n,), bool))
+    cpu, mem = lifecycle.window_demand(win, w0, w0 + dur, 7.0, 3.0)
+    starts32 = np.asarray(starts, np.float32)
+    lo, hi = np.float32(w0), np.float32(w0) + np.float32(dur)
+    mask = (starts32 >= lo) & (starts32 < hi)
+    assert cpu == pytest.approx(7.0 + float(cpu_arr[mask].sum()), rel=1e-5)
+    assert mem == pytest.approx(3.0 + float(mem_arr[mask].sum()), rel=1e-5)

@@ -1,0 +1,195 @@
+"""Exhaustive branch coverage of Algorithm 3 + Eq. 9 properties."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.evaluation import EvalInputs, evaluate, evaluate_batch
+
+ALPHA = 0.8
+
+
+def ev(task_cpu, task_mem, req_cpu, req_mem, tot_cpu, tot_mem, remax_cpu, remax_mem):
+    return evaluate(
+        EvalInputs(
+            jnp.float32(task_cpu), jnp.float32(task_mem),
+            jnp.float32(req_cpu), jnp.float32(req_mem),
+            jnp.float32(tot_cpu), jnp.float32(tot_mem),
+            jnp.float32(remax_cpu), jnp.float32(remax_mem),
+        ),
+        ALPHA,
+    )
+
+
+def cuts(task_cpu, task_mem, req_cpu, req_mem, tot_cpu, tot_mem):
+    return task_cpu * tot_cpu / req_cpu, task_mem * tot_mem / req_mem
+
+
+# ---------------------------------------------------------------- scenario 1
+# A1 ∧ A2 (sufficient cluster residuals) — paper Alg.3 lines 5-23.
+
+def test_s1_b1_b2_full_request():
+    r = ev(2000, 4000, 6000, 12000, 20000, 40000, 7000, 14000)
+    assert (float(r.cpu), float(r.mem)) == (2000.0, 4000.0)
+    assert int(r.scenario) == 0
+
+
+def test_s1_not_b1_b2():  # request CPU exceeds best node -> α·Re_max_cpu
+    r = ev(8000, 4000, 9000, 12000, 20000, 40000, 7000, 14000)
+    assert float(r.cpu) == pytest.approx(7000 * ALPHA)
+    assert float(r.mem) == 4000.0
+
+
+def test_s1_b1_not_b2():
+    r = ev(2000, 16000, 6000, 17000, 20000, 40000, 7000, 14000)
+    assert float(r.cpu) == 2000.0
+    assert float(r.mem) == pytest.approx(14000 * ALPHA)
+
+
+def test_s1_not_b1_not_b2():
+    r = ev(8000, 16000, 9000, 17000, 20000, 40000, 7000, 14000)
+    assert float(r.cpu) == pytest.approx(7000 * ALPHA)
+    assert float(r.mem) == pytest.approx(14000 * ALPHA)
+
+
+# ---------------------------------------------------------------- scenario 2
+# ¬A1 ∧ A2 (CPU-insufficient) — lines 25-43. CPU side uses C1/cpu_cut.
+
+def test_s2_c1_b2_cpu_cut():
+    # demand 40000 > residual 20000 -> cpu_cut = 2000*20000/40000 = 1000
+    r = ev(2000, 4000, 40000, 12000, 20000, 40000, 7000, 14000)
+    assert float(r.cpu) == pytest.approx(1000.0)
+    assert float(r.mem) == 4000.0
+    assert int(r.scenario) == 1
+
+
+def test_s2_not_c1_b2():
+    # cpu_cut = 6000*30000/40000 = 4500 > remax 4000 -> α·4000
+    r = ev(6000, 4000, 40000, 12000, 30000, 40000, 4000, 14000)
+    assert float(r.cpu) == pytest.approx(4000 * ALPHA)
+    assert float(r.mem) == 4000.0
+
+
+def test_s2_c1_not_b2():
+    r = ev(2000, 16000, 40000, 17000, 20000, 40000, 7000, 14000)
+    assert float(r.cpu) == pytest.approx(1000.0)
+    assert float(r.mem) == pytest.approx(14000 * ALPHA)
+
+
+def test_s2_not_c1_not_b2():
+    r = ev(6000, 16000, 40000, 17000, 30000, 40000, 4000, 14000)
+    assert float(r.cpu) == pytest.approx(4000 * ALPHA)
+    assert float(r.mem) == pytest.approx(14000 * ALPHA)
+
+
+# ---------------------------------------------------------------- scenario 3
+# A1 ∧ ¬A2 (memory-insufficient) — lines 45-63. Mem side uses C2/mem_cut.
+
+def test_s3_b1_c2_mem_cut():
+    # mem demand 80000 > residual 40000 -> mem_cut = 4000*40000/80000 = 2000
+    r = ev(2000, 4000, 6000, 80000, 20000, 40000, 7000, 14000)
+    assert float(r.cpu) == 2000.0
+    assert float(r.mem) == pytest.approx(2000.0)
+    assert int(r.scenario) == 2
+
+
+def test_s3_not_b1_c2():
+    r = ev(8000, 4000, 9000, 80000, 20000, 40000, 7000, 14000)
+    assert float(r.cpu) == pytest.approx(7000 * ALPHA)
+    assert float(r.mem) == pytest.approx(2000.0)
+
+
+def test_s3_b1_not_c2():
+    # mem_cut = 12000*40000/80000 = 6000 > remax_mem 5000 -> α·5000
+    r = ev(2000, 12000, 6000, 80000, 20000, 40000, 7000, 5000)
+    assert float(r.cpu) == 2000.0
+    assert float(r.mem) == pytest.approx(5000 * ALPHA)
+
+
+def test_s3_not_b1_not_c2():
+    r = ev(8000, 12000, 9000, 80000, 20000, 40000, 7000, 5000)
+    assert float(r.cpu) == pytest.approx(7000 * ALPHA)
+    assert float(r.mem) == pytest.approx(5000 * ALPHA)
+
+
+# ---------------------------------------------------------------- scenario 4
+# ¬A1 ∧ ¬A2 — lines 65-67: both cuts, no node-level clamping in the paper.
+
+def test_s4_both_cuts():
+    r = ev(2000, 4000, 40000, 80000, 20000, 40000, 7000, 14000)
+    assert float(r.cpu) == pytest.approx(1000.0)
+    assert float(r.mem) == pytest.approx(2000.0)
+    assert int(r.scenario) == 3
+
+
+# ------------------------------------------------------------------ batched
+
+def test_batch_matches_scalar():
+    tasks = np.array([[2000, 4000], [8000, 16000], [500, 800]], np.float32)
+    reqs = np.array([[6000, 12000], [9000, 17000], [40000, 80000]], np.float32)
+    batch = evaluate_batch(
+        EvalInputs(
+            jnp.asarray(tasks[:, 0]), jnp.asarray(tasks[:, 1]),
+            jnp.asarray(reqs[:, 0]), jnp.asarray(reqs[:, 1]),
+            jnp.float32(20000), jnp.float32(40000),
+            jnp.float32(7000), jnp.float32(14000),
+        ),
+        0.8,
+    )
+    for i in range(3):
+        r = ev(tasks[i, 0], tasks[i, 1], reqs[i, 0], reqs[i, 1],
+               20000, 40000, 7000, 14000)
+        assert float(batch.cpu[i]) == pytest.approx(float(r.cpu))
+        assert float(batch.mem[i]) == pytest.approx(float(r.mem))
+
+
+# ----------------------------------------------------------------- property
+
+pos = st.floats(min_value=1.0, max_value=1e6, allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=200, deadline=None)
+@given(task_cpu=pos, task_mem=pos, extra_cpu=pos, extra_mem=pos,
+       tot_cpu=pos, tot_mem=pos, frac=st.floats(min_value=0.01, max_value=1.0))
+def test_allocation_invariants(task_cpu, task_mem, extra_cpu, extra_mem,
+                               tot_cpu, tot_mem, frac):
+    """Invariants of Alg. 3 that hold for ALL inputs:
+
+    1. allocations are strictly positive;
+    2. the CPU grant never exceeds max(request, α·Re_max, cpu_cut) — i.e.
+       the evaluator never invents resources beyond its three sources;
+    3. scenario-0 grants equal the request exactly.
+    """
+    remax_cpu, remax_mem = frac * tot_cpu, frac * tot_mem
+    req_cpu, req_mem = task_cpu + extra_cpu, task_mem + extra_mem
+    r = ev(task_cpu, task_mem, req_cpu, req_mem, tot_cpu, tot_mem,
+           remax_cpu, remax_mem)
+    cpu, mem = float(r.cpu), float(r.mem)
+    cpu_cut, mem_cut = cuts(task_cpu, task_mem, req_cpu, req_mem, tot_cpu, tot_mem)
+
+    assert cpu > 0 and mem > 0
+    assert cpu <= max(task_cpu, ALPHA * remax_cpu, cpu_cut) * (1 + 1e-5)
+    assert mem <= max(task_mem, ALPHA * remax_mem, mem_cut) * (1 + 1e-5)
+    if req_cpu < tot_cpu and req_mem < tot_mem:
+        if task_cpu < remax_cpu and task_mem < remax_mem:
+            assert cpu == pytest.approx(task_cpu, rel=1e-5)
+            assert mem == pytest.approx(task_mem, rel=1e-5)
+
+
+@settings(max_examples=100, deadline=None)
+@given(task_cpu=pos, task_mem=pos, mult=st.floats(min_value=1.5, max_value=100.0),
+       tot_cpu=pos, tot_mem=pos)
+def test_scaling_preserves_demand_ratio(task_cpu, task_mem, mult, tot_cpu, tot_mem):
+    """Eq. 9: in the both-insufficient scenario the grant equals the
+    request scaled by residual/demand — proportional fairness across
+    competing in-window tasks."""
+    req_cpu, req_mem = task_cpu * mult * 2, task_mem * mult * 2
+    # force ¬A1 ∧ ¬A2
+    tot_cpu = min(tot_cpu, req_cpu * 0.5)
+    tot_mem = min(tot_mem, req_mem * 0.5)
+    r = ev(task_cpu, task_mem, req_cpu, req_mem, tot_cpu, tot_mem,
+           tot_cpu, tot_mem)
+    assert int(r.scenario) == 3
+    assert float(r.cpu) == pytest.approx(task_cpu * tot_cpu / req_cpu, rel=1e-4)
+    assert float(r.mem) == pytest.approx(task_mem * tot_mem / req_mem, rel=1e-4)

@@ -1,0 +1,158 @@
+"""Layer-level unit + property tests (MoE routing, RoPE, norms, scan)."""
+import dataclasses
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def moe_cfg(dispatch="scatter", cf=1.25, k=2, E=8, shared=0):
+    return ModelConfig(
+        name="t", num_layers=1, d_model=32, num_heads=4, num_kv_heads=4,
+        d_ff=0, vocab_size=128,
+        moe=MoEConfig(num_experts=E, top_k=k, expert_d_ff=48,
+                      num_shared_experts=shared, capacity_factor=cf,
+                      dispatch_mode=dispatch))
+
+
+# ------------------------------------------------------------------ MoE
+
+def test_moe_capacity_drops_tokens():
+    """Tiny capacity factor must drop routing pairs (and report it)."""
+    cfg = moe_cfg(cf=0.1)
+    p = L.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32))
+    _, aux = L.moe(p, cfg, x)
+    assert float(aux.dropped_fraction) > 0.3
+
+
+def test_moe_dropless_never_drops():
+    cfg = moe_cfg(cf=0.01)
+    p = L.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32))
+    _, aux = L.moe(p, cfg, x, dropless=True)
+    assert float(aux.dropped_fraction) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    k=st.integers(1, 4),
+    cf=st.floats(0.5, 4.0),
+    T=st.sampled_from([8, 16, 24]),
+)
+def test_scatter_equals_einsum_dispatch(seed, k, cf, T):
+    """The two dispatch modes are the same function (property)."""
+    cfg_e = moe_cfg("einsum", cf=cf, k=k)
+    cfg_s = moe_cfg("scatter", cf=cf, k=k)
+    p = L.init_moe(jax.random.key(0), cfg_e)
+    x = jax.random.normal(jax.random.key(seed), (2, T, 32))
+    ye, auxe = L.moe(p, cfg_e, x)
+    ys, auxs = L.moe(p, cfg_s, x)
+    np.testing.assert_allclose(np.asarray(ye), np.asarray(ys),
+                               atol=1e-4, rtol=1e-4)
+    assert abs(float(auxe.dropped_fraction) -
+               float(auxs.dropped_fraction)) < 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), E=st.sampled_from([4, 8, 16]),
+       T=st.integers(2, 64), k=st.integers(1, 4))
+def test_positions_by_sort_is_exclusive_count(seed, E, T, k):
+    """pos[t,j] == number of earlier (token-major) pairs routed to the
+    same expert — the exclusive-cumsum definition."""
+    eidx = jax.random.randint(jax.random.key(seed), (T, k), 0, E)
+    pos = np.asarray(L._positions_by_sort(eidx, E))
+    e = np.asarray(eidx).reshape(-1)
+    expected = np.zeros_like(e)
+    seen = {}
+    for i, ei in enumerate(e):
+        expected[i] = seen.get(int(ei), 0)
+        seen[int(ei)] = expected[i] + 1
+    np.testing.assert_array_equal(pos.reshape(-1), expected)
+
+
+def test_moe_shared_experts_always_contribute():
+    cfg = moe_cfg(shared=1, cf=0.01)  # everything dropped except shared
+    p = L.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 16, 32))
+    y, aux = L.moe(p, cfg, x)
+    shared_only = L.mlp(p["shared"], x.reshape(16, 32)).reshape(1, 16, 32)
+    # with near-total dropping, output ≈ shared expert path
+    corr = float(jnp.sum(y * shared_only) /
+                 (jnp.linalg.norm(y) * jnp.linalg.norm(shared_only)))
+    assert corr > 0.9
+
+
+# ------------------------------------------------------------ RoPE/norm
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.key(0), (2, 8, 4, 64))
+    y = L.apply_rope(x, jnp.arange(8)[None], 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<RoPE(q,m), RoPE(k,n)> depends only on m-n."""
+    q = jax.random.normal(jax.random.key(1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.key(2), (1, 1, 1, 32))
+
+    def dot(m, n):
+        qm = L.apply_rope(q, jnp.array([[m]]), 10000.0)
+        kn = L.apply_rope(k, jnp.array([[n]]), 10000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert dot(3, 5) == pytest.approx(dot(10, 12), rel=1e-4)
+    assert dot(0, 4) == pytest.approx(dot(7, 11), rel=1e-4)
+
+
+def test_rmsnorm_scale_invariant_direction():
+    x = jax.random.normal(jax.random.key(3), (4, 32))
+    p = L.init_rmsnorm(32)
+    y1 = L.rmsnorm(p, x)
+    y2 = L.rmsnorm(p, 7.0 * x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+# --------------------------------------------------------------- scan
+
+def test_scan_or_unroll_equivalence():
+    xs = {"w": jax.random.normal(jax.random.key(4), (5, 8, 8))}
+
+    def body(c, p):
+        c = jnp.tanh(c @ p["w"])
+        return c, jnp.sum(c)
+
+    c0 = jax.random.normal(jax.random.key(5), (2, 8))
+    c1, y1 = L.scan_or_unroll(body, c0, xs, use_scan=True)
+    c2, y2 = L.scan_or_unroll(body, c0, xs, use_scan=False)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+def test_ssm_chunked_scan_matches_sequential():
+    B, S, di, n = 2, 50, 16, 4
+    ks = jax.random.split(jax.random.key(6), 3)
+    da = jax.random.uniform(ks[0], (B, S, di, n), jnp.float32, 0.6, 0.99)
+    dbx = jax.random.normal(ks[1], (B, S, di, n)) * 0.1
+    h0 = jax.random.normal(ks[2], (B, di, n))
+    h_c, hf_c = L._ssm_scan_chunked(da, dbx, h0, chunk=16)
+
+    h = h0
+    outs = []
+    for t in range(S):
+        h = da[:, t] * h + dbx[:, t]
+        outs.append(h)
+    h_ref = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_ref),
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf_c), np.asarray(h_ref[:, -1]),
+                               atol=1e-5, rtol=1e-4)

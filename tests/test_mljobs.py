@@ -1,0 +1,74 @@
+"""ML-workload plane: ARAS-managed training jobs + straggler mitigation."""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.engine.mljobs import MLJobResult, MLTaskSpec, run_ml_workflow
+from repro.engine.straggler import SpeculativeMonitor, simulate_makespan
+
+
+def _jobs(steps=12):
+    cfg = get_smoke_config("qwen2-0.5b")
+    return [
+        MLTaskSpec("pretrain", cfg, steps=steps, batch=8, seq=16),
+        MLTaskSpec("finetune-a", cfg, steps=steps, batch=8, seq=16,
+                   depends_on=("pretrain",)),
+        MLTaskSpec("finetune-b", cfg, steps=steps, batch=8, seq=16,
+                   depends_on=("pretrain",)),
+    ]
+
+
+def test_ml_workflow_runs_dag(tmp_path):
+    out = run_ml_workflow(_jobs(), cluster_mem=256.0,
+                          ckpt_root=str(tmp_path))
+    assert set(out) == {"pretrain", "finetune-a", "finetune-b"}
+    for r in out.values():
+        assert np.isfinite(r.final_loss)
+        assert r.batch_used >= 1
+
+
+def test_quota_scales_batch_under_contention(tmp_path):
+    """With scarce cluster memory, ARAS scales the microbatch down
+    (vertical autoscaling on the workload plane)."""
+    out = run_ml_workflow(_jobs(steps=6), cluster_mem=40.0,
+                          ckpt_root=str(tmp_path))
+    assert out["pretrain"].batch_used < 8  # scaled below request
+    assert all(np.isfinite(r.final_loss) for r in out.values())
+
+
+def test_oom_selfheal_halves_batch_and_completes(tmp_path):
+    out = run_ml_workflow(_jobs(steps=6), cluster_mem=256.0,
+                          ckpt_root=str(tmp_path), inject_oom_once=True)
+    assert out["pretrain"].restarts == 1
+    assert out["pretrain"].batch_used <= 4  # halved from 8
+    assert np.isfinite(out["pretrain"].final_loss)
+
+
+# ------------------------------------------------------------ straggler
+
+def test_speculation_reduces_heavy_tail_makespan():
+    rng = np.random.default_rng(0)
+    # 5% of tasks run 10-30x slower (environmental stragglers)
+    d = rng.uniform(10, 20, size=400)
+    stragglers = rng.random(400) < 0.05
+    d = np.where(stragglers, d * rng.uniform(10, 30, 400), d)
+
+    base = simulate_makespan(d, slots=16)
+    spec = simulate_makespan(d, slots=16, monitor=SpeculativeMonitor())
+    assert spec < base * 0.75, (base, spec)
+
+
+def test_speculation_budget_respected():
+    mon = SpeculativeMonitor(max_inflight_fraction=0.0)
+    for _ in range(20):
+        mon.observe(10.0)
+    assert not mon.should_speculate("t", elapsed=1000.0, inflight=1,
+                                    running=10)
+
+
+def test_no_speculation_before_enough_samples():
+    mon = SpeculativeMonitor(min_samples=8)
+    for _ in range(3):
+        mon.observe(10.0)
+    assert not mon.should_speculate("t", elapsed=1000.0, inflight=0,
+                                    running=10)

@@ -1,0 +1,122 @@
+"""End-to-end behaviour of the KubeAdaptor engine + ARAS (system tests).
+
+Covers the paper's behavioural claims: topological execution, capacity
+safety, ARAS-vs-FCFS dominance under contention, OOM self-healing, and
+simulator invariants under randomized workloads (hypothesis).
+"""
+import dataclasses
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.engine import EngineConfig, KubeAdaptor, run_experiment
+from repro.workflows import WORKFLOW_BUILDERS, arrival
+from repro.workflows.dags import cybershake, epigenomics, ligo, montage
+
+FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                    duration_multiplier=1.0)
+
+
+# ------------------------------------------------------------ workflows
+
+@pytest.mark.parametrize("builder,n", [(montage, 21), (epigenomics, 20),
+                                       (cybershake, 22), (ligo, 23)])
+def test_workflow_task_counts_match_paper(builder, n):
+    wf = builder("w", np.random.default_rng(0))
+    assert wf.num_tasks == n
+    wf.topological_order()  # acyclic
+
+
+def test_earliest_starts_respect_dependencies():
+    wf = montage("w", np.random.default_rng(0))
+    est = wf.earliest_starts(100.0)
+    for a, b in wf.edges:
+        assert est[b] >= est[a] + wf.tasks[a].duration - 1e-6
+
+
+def test_arrival_patterns_match_paper_totals():
+    assert arrival.total_workflows(arrival.constant()) == 30
+    assert arrival.total_workflows(arrival.linear()) == 30
+    assert arrival.total_workflows(arrival.pyramid()) == 34
+    assert [n for _, n in arrival.pyramid()] == [2, 4, 6, 4, 2, 2, 4, 6, 4]
+
+
+# --------------------------------------------------------------- engine
+
+def test_single_workflow_executes_topologically():
+    eng = KubeAdaptor(FAST)
+    wf = montage("m0", np.random.default_rng(0))
+    eng.submit(wf, 0.0)
+    eng.run()
+    run = eng.runs["m0"]
+    assert run.complete
+    # parents must finish before children start (via store records)
+    for a, b in wf.edges:
+        ra = eng.store.get(f"m0/{a}")
+        rb = eng.store.get(f"m0/{b}")
+        assert ra.flag and rb.flag
+        if wf.tasks[b].cpu > 0 and wf.tasks[a].cpu > 0:
+            assert rb.t_start >= ra.t_end - 1e-6, (a, b)
+
+
+def test_all_workflows_complete_under_contention():
+    m = run_experiment("ligo", [(0.0, 6)], "aras", seed=1, config=FAST)
+    assert len(m.workflow_durations) == 6
+    m = run_experiment("ligo", [(0.0, 6)], "fcfs", seed=1, config=FAST)
+    assert len(m.workflow_durations) == 6
+
+
+def test_aras_beats_fcfs_under_contention():
+    """The paper's core claim, at test scale."""
+    a = run_experiment("ligo", [(0.0, 8)], "aras", seed=0)
+    f = run_experiment("ligo", [(0.0, 8)], "fcfs", seed=0)
+    assert a.avg_workflow_duration < f.avg_workflow_duration
+    assert a.makespan <= f.makespan * 1.02
+
+
+def test_oom_selfheal_completes_workflows():
+    """Paper 6.2.2: allocations below the runtime floor OOM, heal, finish."""
+    kw = dict(mem=2600.0, min_mem=200.0, actual_min_mem=2000.0)
+    m = run_experiment("montage", [(0.0, 10)], "aras", seed=0,
+                       task_kwargs=kw)
+    assert len(m.oom_events) > 0
+    assert len(m.realloc_events) >= len(m.oom_events)
+    assert len(m.workflow_durations) == 10  # everything still finished
+
+
+def test_fcfs_never_scales_down():
+    m = run_experiment("montage", [(0.0, 5)], "fcfs", seed=0)
+    for _, _, cpu, mem, scen in m.alloc_trace:
+        assert scen == "fcfs"
+        assert cpu == 2000.0 and mem == 4000.0
+
+
+def test_aras_scales_under_pressure():
+    m = run_experiment("ligo", [(0.0, 8)], "aras", seed=0)
+    scens = {s for *_, s in m.alloc_trace}
+    assert scens - {"sufficient"}, "expected scaled allocations"
+    assert any(c < 2000.0 for _, _, c, _, s in m.alloc_trace
+               if s != "sufficient")
+
+
+# ----------------------------------------------------------- invariants
+
+@settings(max_examples=12, deadline=None)
+@given(
+    kind=st.sampled_from(list(WORKFLOW_BUILDERS)),
+    count=st.integers(min_value=1, max_value=6),
+    allocator=st.sampled_from(["aras", "fcfs"]),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_simulator_invariants_random(kind, count, allocator, seed):
+    """For arbitrary workloads: no overcommit (checked inside the engine
+    at every event), every workflow completes, utilization in [0, 1]."""
+    m = run_experiment(kind, [(0.0, count)], allocator, seed=seed,
+                       config=FAST)
+    assert len(m.workflow_durations) == count
+    assert 0.0 <= m.avg_cpu_usage <= 1.0
+    assert 0.0 <= m.avg_mem_usage <= 1.0
+    for _, c, mm in m.usage_series:
+        assert c <= 1.0 + 1e-9 and mm <= 1.0 + 1e-9
