@@ -2,13 +2,30 @@
 
 The paper's Go loops are O(nodes × pods) per allocation; our JAX
 implementation is one fused segment-sum + a branchless lattice, and the
-evaluator vmaps whole request bursts.  This benchmark measures the
-allocation-decision latency at 1k / 10k / 100k nodes (8 pods per node)
-with 1024 concurrent task requests — the 1000+-node fleet scenario the
-framework targets.
+engine decides an entire arrival burst in a single fused dispatch.
+
+Two benchmarks:
+
+* ``core``   — the evaluator kernel alone (discover + summarize +
+  vmapped Alg. 3), as in the seed: raw device throughput.
+* ``engine`` — the **engine-facing** allocation path: a KubeAdaptor at N
+  nodes takes a burst of ready tasks through window building, batch
+  assembly, the fused kernel, and pod binding.  Reported both ways:
+  ``batched`` (one ``allocate_batch`` drain for the whole burst) vs
+  ``per_task`` (the sequential reference loop, one dispatch per task) —
+  the per-decision latency ratio is the win of making the burst, not the
+  task, the allocation unit.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/allocator_scale.py                 # full sweep
+    PYTHONPATH=src python benchmarks/allocator_scale.py --nodes 1000    # one size
+    PYTHONPATH=src python benchmarks/allocator_scale.py --nodes 1000 --burst 256
 """
 from __future__ import annotations
 
+import argparse
+import heapq
 import time
 
 import jax
@@ -17,10 +34,13 @@ import numpy as np
 
 from repro.core.discovery import _residuals
 from repro.core.evaluation import EvalInputs, evaluate_batch
+from repro.engine import EngineConfig, KubeAdaptor
+from repro.workflows.spec import TaskSpec, WorkflowSpec
 
 
-def bench(num_nodes: int, pods_per_node: int = 8, burst: int = 1024,
-          iters: int = 20):
+def bench_core(num_nodes: int, pods_per_node: int = 8, burst: int = 1024,
+               iters: int = 20):
+    """Evaluator-core latency (seed benchmark): one fused decide dispatch."""
     rng = np.random.default_rng(0)
     P = num_nodes * pods_per_node
     alloc_cpu = jnp.full((num_nodes,), 8000.0, jnp.float32)
@@ -52,16 +72,102 @@ def bench(num_nodes: int, pods_per_node: int = 8, burst: int = 1024,
     for _ in range(iters):
         out = decide(*args)
     jax.block_until_ready(out)
-    dt = (time.perf_counter() - t0) / iters
-    return dt
+    return (time.perf_counter() - t0) / iters
+
+
+# ---------------------------------------------------------- engine-facing
+
+def _burst_spec(burst: int, rng: np.random.Generator) -> WorkflowSpec:
+    """One flat workflow of `burst` independent ready tasks."""
+    tasks = {
+        f"t{i}": TaskSpec(
+            task_id=f"t{i}", image="bench",
+            cpu=float(rng.uniform(500, 4000)),
+            mem=float(rng.uniform(1000, 8000)),
+            duration=float(rng.uniform(10, 20)),
+            min_cpu=100.0, min_mem=200.0,
+        )
+        for i in range(burst)
+    }
+    return WorkflowSpec(workflow_id="w", tasks=tasks, edges=[])
+
+
+def bench_engine(num_nodes: int, burst: int, batched: bool,
+                 repeats: int = 3) -> float:
+    """Engine-facing burst latency: inject `burst` ready tasks, time the
+    allocation drain (window build → batch assembly → fused dispatch →
+    bind) — everything between the READY events and the running pods."""
+    spec = _burst_spec(burst, np.random.default_rng(0))
+    cfg = EngineConfig(
+        num_nodes=num_nodes, node_cpu=8000.0, node_mem=16000.0,
+        batch_allocation=batched, invariant_checks=False,
+        pod_startup_delay=1.0, cleanup_delay=1.0, duration_multiplier=1.0,
+    )
+
+    def one_run() -> float:
+        eng = KubeAdaptor(cfg)
+        eng._inject(spec)  # registers records + queues READY events at t=0
+        t0 = time.perf_counter()
+        while eng._events:
+            t, kind, _, payload = heapq.heappop(eng._events)
+            if t > 0.0:  # completions etc.: beyond the burst decision
+                break
+            eng._now = t
+            if batched:
+                eng._drain_group(kind, payload)
+            else:
+                eng._ready(*payload)
+        dt = time.perf_counter() - t0
+        assert eng.metrics.num_allocations == burst, (
+            f"burst not fully placed: {eng.metrics.num_allocations}/{burst}"
+        )
+        return dt
+
+    one_run()  # compile warmup
+    return min(one_run() for _ in range(repeats))
+
+
+def report_engine(num_nodes: int, burst: int, repeats: int) -> None:
+    dt_b = bench_engine(num_nodes, burst, batched=True, repeats=repeats)
+    dt_p = bench_engine(num_nodes, burst, batched=False, repeats=repeats)
+    speedup = dt_p / dt_b
+    print(
+        f"engine_scale_{num_nodes}n,batched={1e6*dt_b/burst:.2f}us/decision,"
+        f"per_task={1e6*dt_p/burst:.2f}us/decision,"
+        f"nodes={num_nodes}|burst={burst}|speedup={speedup:.1f}x"
+    )
+
+
+def report_core(num_nodes: int, burst: int) -> None:
+    dt = bench_core(num_nodes, burst=burst)
+    print(f"allocator_scale_{num_nodes//1000}k,{1e6*dt:.0f},"
+          f"nodes={num_nodes}|pods={8*num_nodes}|burst={burst}|"
+          f"us_per_decision={1e6*dt/burst:.2f}")
 
 
 def main():
-    for n in (1_000, 10_000, 100_000):
-        dt = bench(n)
-        print(f"allocator_scale_{n//1000}k,{1e6*dt:.0f},"
-              f"nodes={n}|pods={8*n}|burst=1024|"
-              f"us_per_decision={1e6*dt/1024:.2f}")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=None,
+                    help="single cluster size (default: 1k/10k/100k sweep)")
+    ap.add_argument("--burst", type=int, default=1024,
+                    help="ready tasks per arrival burst")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--skip-engine", action="store_true")
+    ap.add_argument("--skip-core", action="store_true")
+    args = ap.parse_args()
+    if args.nodes is not None and args.nodes <= 0:
+        ap.error("--nodes must be positive")
+    if args.burst <= 0:
+        ap.error("--burst must be positive")
+
+    core_sizes = [args.nodes] if args.nodes is not None else [1_000, 10_000, 100_000]
+    engine_sizes = [args.nodes] if args.nodes is not None else [1_000, 10_000]
+    if not args.skip_core:
+        for n in core_sizes:
+            report_core(n, args.burst)
+    if not args.skip_engine:
+        for n in engine_sizes:
+            report_engine(n, args.burst, args.repeats)
 
 
 if __name__ == "__main__":

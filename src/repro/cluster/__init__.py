@@ -1,3 +1,3 @@
-from repro.cluster.simulator import ClusterSim, Node, Pod
+from repro.cluster.simulator import ClusterSim, Pod
 
-__all__ = ["ClusterSim", "Node", "Pod"]
+__all__ = ["ClusterSim", "Pod"]

@@ -12,6 +12,17 @@ same semantics the ARAS algorithms assume:
 * ``snapshot()`` is the Informer analogue — a cached, consistent view that
   the Resource Discovery reads instead of hitting the API server.
 
+State is struct-of-arrays and **incremental**: node accounting and the
+float32 residual cache are mutated in place on ``bind``/``finish``, and
+pods live in slot arrays with a free list, so ``snapshot()`` is a flat
+array copy instead of a per-call Python rebuild and ``residual_view()``
+costs nothing.  ``residual_view`` hands
+the allocator the exact float32 arrays the fused burst kernel carries in
+its scan, which is what makes batched and per-task decisions bit-for-bit
+identical: both see residuals produced by the same sequence of float32
+debits.  Pod capacity grows in powers of two so Informer consumers keep
+stable JIT shapes (free slots are ``active=False`` and numerically inert).
+
 Invariant (checked): at every instant, Σ quotas of consuming pods on a
 node ≤ the node's allocatable capacity.
 """
@@ -19,22 +30,11 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
 from repro.core.types import Allocation, ClusterSnapshot, PodPhase, Resources, TaskSpec
-
-
-@dataclasses.dataclass
-class Node:
-    index: int
-    allocatable: Resources
-    used: Resources = dataclasses.field(default_factory=lambda: Resources(0.0, 0.0))
-
-    @property
-    def residual(self) -> Resources:
-        return self.allocatable - self.used
 
 
 @dataclasses.dataclass
@@ -48,34 +48,84 @@ class Pod:
     t_started: float = 0.0
     t_finished: float = 0.0
     workflow_id: str = ""
+    slot: int = -1  # row in the pod arrays
 
 
 class ClusterSim:
     """Mutable cluster state + capacity accounting."""
 
     def __init__(self, num_nodes: int, node_cpu: float, node_mem: float):
-        self.nodes: List[Node] = [
-            Node(i, Resources(node_cpu, node_mem)) for i in range(num_nodes)
-        ]
+        self.num_nodes = num_nodes
+        # Node accounting: float64 is authoritative (overcommit guard,
+        # utilization); the float32 mirror feeds the JAX allocator.
+        self._alloc_cpu = np.full((num_nodes,), node_cpu, np.float64)
+        self._alloc_mem = np.full((num_nodes,), node_mem, np.float64)
+        self._used_cpu = np.zeros((num_nodes,), np.float64)
+        self._used_mem = np.zeros((num_nodes,), np.float64)
+        self._res_cpu32 = np.full((num_nodes,), node_cpu, np.float32)
+        self._res_mem32 = np.full((num_nodes,), node_mem, np.float32)
+        self._alloc_cpu32 = self._alloc_cpu.astype(np.float32)
+        self._alloc_mem32 = self._alloc_mem.astype(np.float32)
+        # Pod registry: dict for object access + slot arrays for the
+        # Informer view, mutated on bind/finish/delete.
         self.pods: Dict[int, Pod] = {}
         self._uid = itertools.count()
+        self._free_slots: List[int] = []
+        self._capacity = 0
+        self._pod_node = np.zeros((0,), np.int32)
+        self._pod_cpu = np.zeros((0,), np.float32)
+        self._pod_mem = np.zeros((0,), np.float32)
+        self._pod_active = np.zeros((0,), bool)
+
+    # ------------------------------------------------------------- plumbing
+    def _grow(self) -> None:
+        new_cap = max(1, self._capacity * 2)
+        self._free_slots.extend(range(self._capacity, new_cap))
+        for name in ("_pod_node", "_pod_cpu", "_pod_mem", "_pod_active"):
+            old = getattr(self, name)
+            grown = np.zeros((new_cap,), old.dtype)
+            grown[: self._capacity] = old
+            setattr(self, name, grown)
+        self._capacity = new_cap
 
     # ------------------------------------------------------------- pod ops
+    # The allocator decides against the float32 mirror, whose rounding can
+    # sit a few ULPs above the float64 books; quotas within this slack are
+    # admitted (the books may then exceed capacity by up to the epsilon)
+    # instead of crashing the run, while genuine overcommits (a real
+    # allocator bug) still raise.  0.5 millicores/MiB is far above float32
+    # noise and far below any real request.
+    _OVERCOMMIT_EPS = 0.5
+
     def bind(self, task: TaskSpec, alloc: Allocation, now: float,
              workflow_id: str = "") -> Pod:
         """Create a pod with the allocated quota on the chosen node."""
-        node = self.nodes[alloc.node]
-        quota = Resources(alloc.cpu, alloc.mem)
-        if not (quota + node.used).fits_in(node.allocatable):
+        i = alloc.node
+        if (self._used_cpu[i] + alloc.cpu
+                > self._alloc_cpu[i] + self._OVERCOMMIT_EPS
+                or self._used_mem[i] + alloc.mem
+                > self._alloc_mem[i] + self._OVERCOMMIT_EPS):
             raise RuntimeError(
-                f"overcommit on node {node.index}: used={node.used} "
-                f"quota={quota} cap={node.allocatable}"
+                f"overcommit on node {i}: "
+                f"used=({self._used_cpu[i]}, {self._used_mem[i]}) "
+                f"quota=({alloc.cpu}, {alloc.mem}) "
+                f"cap=({self._alloc_cpu[i]}, {self._alloc_mem[i]})"
             )
-        node.used = node.used + quota
+        self._used_cpu[i] += alloc.cpu
+        self._used_mem[i] += alloc.mem
+        self._res_cpu32[i] -= np.float32(alloc.cpu)
+        self._res_mem32[i] -= np.float32(alloc.mem)
+        if not self._free_slots:
+            self._grow()
+        slot = self._free_slots.pop()
+        self._pod_node[slot] = i
+        self._pod_cpu[slot] = alloc.cpu
+        self._pod_mem[slot] = alloc.mem
+        self._pod_active[slot] = True
         pod = Pod(
-            uid=next(self._uid), task=task, quota=quota, node=alloc.node,
-            phase=PodPhase.RUNNING, t_created=now, t_started=now,
-            workflow_id=workflow_id,
+            uid=next(self._uid), task=task, quota=Resources(alloc.cpu, alloc.mem),
+            node=i, phase=PodPhase.RUNNING, t_created=now, t_started=now,
+            workflow_id=workflow_id, slot=slot,
         )
         self.pods[pod.uid] = pod
         return pod
@@ -84,9 +134,18 @@ class ClusterSim:
         """Transition a Running pod to a terminal phase, releasing quota."""
         pod = self.pods[uid]
         assert pod.phase == PodPhase.RUNNING, pod
-        node = self.nodes[pod.node]
-        node.used = node.used - pod.quota
-        assert node.used.nonneg(), (node, pod)
+        i = pod.node
+        self._used_cpu[i] -= pod.quota.cpu
+        self._used_mem[i] -= pod.quota.mem
+        assert self._used_cpu[i] >= 0 and self._used_mem[i] >= 0, (i, pod)
+        # Resync the float32 mirror from the float64 books on every
+        # release: per-op rounding then cannot accumulate across pod
+        # lifetimes, keeping the allocator's view within ULPs of truth.
+        # Deterministic, and identical for batched and per-task modes
+        # (releases only ever happen between bursts).
+        self._res_cpu32[i] = np.float32(self._alloc_cpu[i] - self._used_cpu[i])
+        self._res_mem32[i] = np.float32(self._alloc_mem[i] - self._used_mem[i])
+        self._pod_active[pod.slot] = False
         pod.phase = phase
         pod.t_finished = now
         return pod
@@ -95,43 +154,67 @@ class ClusterSim:
         """Task Container Cleaner: remove terminal pods from the registry."""
         pod = self.pods.pop(uid)
         assert not pod.phase.consumes_resources, pod
+        self._pod_cpu[pod.slot] = 0.0
+        self._pod_mem[pod.slot] = 0.0
+        self._free_slots.append(pod.slot)
 
     # ----------------------------------------------------------- informer
+    def residual_view(self):
+        """Float32 per-node residuals — the allocator's Monitor input.
+
+        These are the live incrementally-maintained arrays (treat as
+        read-only); identical to what Alg. 2 would recompute, without the
+        O(pods) pass.
+        """
+        return self._res_cpu32, self._res_mem32
+
     def snapshot(self) -> ClusterSnapshot:
-        """Informer-style struct-of-arrays view for the JAX algorithms."""
-        pods = list(self.pods.values())
+        """Informer-style struct-of-arrays view for the JAX algorithms.
+
+        A consistent point-in-time copy (later ``bind``/``finish`` calls
+        do not mutate it), as callers of an Informer cache expect.  Pod
+        arrays are capacity-sized (stable JIT shapes); free slots are
+        ``active=False`` with zero quota, so Alg. 2 sees the same totals.
+        The engine's hot path uses ``residual_view`` instead and never
+        pays this copy.
+        """
         return ClusterSnapshot(
-            allocatable_cpu=np.array(
-                [n.allocatable.cpu for n in self.nodes], np.float32
-            ),
-            allocatable_mem=np.array(
-                [n.allocatable.mem for n in self.nodes], np.float32
-            ),
-            pod_node=np.array([p.node for p in pods], np.int32),
-            pod_cpu=np.array([p.quota.cpu for p in pods], np.float32),
-            pod_mem=np.array([p.quota.mem for p in pods], np.float32),
-            pod_active=np.array(
-                [p.phase.consumes_resources for p in pods], bool
-            ),
+            allocatable_cpu=self._alloc_cpu32,
+            allocatable_mem=self._alloc_mem32,
+            pod_node=self._pod_node.copy(),
+            pod_cpu=self._pod_cpu.copy(),
+            pod_mem=self._pod_mem.copy(),
+            pod_active=self._pod_active.copy(),
         )
 
     # ------------------------------------------------------------- metrics
     def utilization(self) -> Resources:
         """Fraction of allocatable capacity currently held by quotas."""
-        cap_cpu = sum(n.allocatable.cpu for n in self.nodes)
-        cap_mem = sum(n.allocatable.mem for n in self.nodes)
-        used_cpu = sum(n.used.cpu for n in self.nodes)
-        used_mem = sum(n.used.mem for n in self.nodes)
-        return Resources(used_cpu / cap_cpu, used_mem / cap_mem)
+        return Resources(
+            float(self._used_cpu.sum() / self._alloc_cpu.sum()),
+            float(self._used_mem.sum() / self._alloc_mem.sum()),
+        )
 
     def check_invariants(self) -> None:
-        for n in self.nodes:
-            assert n.used.nonneg(), n
-            assert n.used.fits_in(n.allocatable), n
-        # cross-check node accounting against the pod registry
-        for n in self.nodes:
-            cpu = sum(
-                p.quota.cpu for p in self.pods.values()
-                if p.node == n.index and p.phase.consumes_resources
-            )
-            assert abs(cpu - n.used.cpu) < 1e-3, (n, cpu)
+        assert (self._used_cpu >= 0).all() and (self._used_mem >= 0).all(), \
+            (self._used_cpu, self._used_mem)
+        eps = self._OVERCOMMIT_EPS
+        assert (self._used_cpu <= self._alloc_cpu + eps).all(), self._used_cpu
+        assert (self._used_mem <= self._alloc_mem + eps).all(), self._used_mem
+        # cross-check node accounting against the pod slot arrays
+        active = self._pod_active
+        cpu = np.zeros((self.num_nodes,), np.float64)
+        mem = np.zeros((self.num_nodes,), np.float64)
+        np.add.at(cpu, self._pod_node[active], self._pod_cpu[active])
+        np.add.at(mem, self._pod_node[active], self._pod_mem[active])
+        assert np.abs(cpu - self._used_cpu).max(initial=0.0) < 1e-3, \
+            (cpu, self._used_cpu)
+        assert np.abs(mem - self._used_mem).max(initial=0.0) < 1e-3, \
+            (mem, self._used_mem)
+        # the float32 residual caches must track the float64 books
+        for res32, alloc, used in (
+            (self._res_cpu32, self._alloc_cpu, self._used_cpu),
+            (self._res_mem32, self._alloc_mem, self._used_mem),
+        ):
+            drift = np.abs(res32.astype(np.float64) - (alloc - used))
+            assert drift.max(initial=0.0) < 1.0, drift

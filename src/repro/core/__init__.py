@@ -3,13 +3,16 @@
 from repro.core.allocator import AdaptiveAllocator, FCFSAllocator, make_allocator
 from repro.core.evaluation import EvalInputs, EvalResult, evaluate, evaluate_batch
 from repro.core.mapek import MapeK
+from repro.core.placement import PLACEMENT_POLICIES, pick_node
 from repro.core.types import (
     DEFAULT_ALPHA,
     DEFAULT_BETA,
     Allocation,
+    BatchAllocation,
     ClusterSnapshot,
     PodPhase,
     Resources,
+    TaskBatch,
     TaskSpec,
     TaskWindow,
 )
@@ -23,10 +26,14 @@ __all__ = [
     "evaluate",
     "evaluate_batch",
     "MapeK",
+    "PLACEMENT_POLICIES",
+    "pick_node",
     "Allocation",
+    "BatchAllocation",
     "ClusterSnapshot",
     "PodPhase",
     "Resources",
+    "TaskBatch",
     "TaskSpec",
     "TaskWindow",
     "DEFAULT_ALPHA",

@@ -6,61 +6,272 @@ summaries (Alg. 1), and the Resource Evaluator (Alg. 3).  The baseline
 (``FCFSAllocator``) reproduces the paper's §6.1.6 comparison strategy: it
 allocates the *full* declared request if some node can host it, otherwise
 reports infeasible so the engine queues the task until resources free up.
+
+The allocation unit is the **burst**, not the task: ``allocate_batch``
+decides a whole batch of ready requests in one fused JAX dispatch.  A
+``lax.scan`` walks the batch in admission order so each accepted
+allocation debits node residuals and marks its knowledge-base record as
+started *before* the next task is evaluated — sequentially consistent
+with the paper's one-task-at-a-time loop (gated by the parity suite in
+``tests/test_batch_parity.py``).  The per-request loop body is:
+
+    window demand (Alg. 1 lines 4-13, masked reduction)
+    → cluster summary (Alg. 1 lines 15-23 over the carried residuals)
+    → Resource Evaluator (Alg. 3 branchless lattice)
+    → acceptance gate (Alg. 1 line 27)
+    → pluggable placement (worst_fit | best_fit | first_fit)
+
+The scalar ``allocate`` API is the same kernel at batch size 1, so there
+is exactly one decision path; it also means one host↔device round trip
+per *burst* instead of the seed's ~3 per task.
+
+Batch and record-table lengths are padded to power-of-two buckets so JIT
+caches stay warm as the knowledge base grows (padding rows carry
+``attempt=False`` / ``done=True`` and are numerically inert).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import discovery, lifecycle
-from repro.core.evaluation import SCENARIO_NAMES, EvalInputs, evaluate_jit
+from repro.core.evaluation import (
+    FCFS_SCENARIO,
+    SCENARIO_NAMES,
+    EvalInputs,
+    evaluate,
+)
+from repro.core.placement import pick_node
 from repro.core.types import (
     DEFAULT_ALPHA,
     DEFAULT_BETA,
     Allocation,
+    BatchAllocation,
     ClusterSnapshot,
+    TaskBatch,
     TaskSpec,
     TaskWindow,
 )
 
 
-def _best_node_for(
-    residual_cpu: np.ndarray,
-    residual_mem: np.ndarray,
-    cpu: float,
-    mem: float,
-) -> int:
-    """Worst-fit placement: max-residual-CPU node that fits (cpu, mem).
+def _pow2(n: int) -> int:
+    """Smallest power of two ≥ max(n, 1) — the JIT shape bucket."""
+    return 1 << max(n - 1, 0).bit_length()
 
-    The paper delegates placement to the K8s scheduler; worst-fit mirrors
-    ARAS's own orientation toward the max-residual node (Alg. 1 lines
-    19-22).  Returns -1 when nothing fits.
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "beta", "policy", "mode")
+)
+def _fused_burst(
+    residual_cpu: jax.Array,  # [m] f32 per-node residuals (Alg. 2 output)
+    residual_mem: jax.Array,  # [m] f32
+    rec_t_start: jax.Array,  # [T] f32 knowledge-base record table
+    rec_cpu: jax.Array,  # [T] f32
+    rec_mem: jax.Array,  # [T] f32
+    rec_done: jax.Array,  # [T] bool
+    b_cpu: jax.Array,  # [B] f32 batch rows, admission order
+    b_mem: jax.Array,  # [B] f32
+    b_min_cpu: jax.Array,  # [B] f32
+    b_min_mem: jax.Array,  # [B] f32
+    b_wend: jax.Array,  # [B] f32 lifecycle window ends
+    b_self: jax.Array,  # [B] int32 record slot to exclude, -1 = none
+    b_attempt: jax.Array,  # [B] bool (False = padding row)
+    b_pending: jax.Array,  # [B] bool (retry-queue row: head-of-line rules)
+    now: jax.Array,  # scalar f32
+    *,
+    alpha: float,
+    beta: float,
+    policy: str,
+    mode: str,
+):
+    """One dispatch for a whole burst: discover→window→evaluate→place.
+
+    The scan carry holds (node residuals, record start times, head-of-line
+    flag).  Accepting a request debits its quota from the chosen node and
+    stamps its record's ``t_start = now`` — exactly the state transitions
+    the engine performs between two per-task decisions — so step *i+1*
+    observes the cluster precisely as the sequential loop would.
     """
-    fits = (residual_cpu >= cpu - 1e-6) & (residual_mem >= mem - 1e-6)
-    if not fits.any():
-        return -1
-    masked = np.where(fits, residual_cpu, -np.inf)
-    return int(np.argmax(masked))
+    num_slots = rec_t_start.shape[0]
+    slot_ids = jnp.arange(num_slots, dtype=jnp.int32)
+
+    def step(carry, row):
+        res_cpu, res_mem, t_start, blocked = carry
+        cpu, mem, min_cpu, min_mem, wend, self_slot, attempt_in, pending = row
+        # Head-of-line: once a pending row fails, later pending rows are
+        # skipped (the seed's retry loop breaks at the first failure).
+        attempt = attempt_in & ~(pending & blocked)
+        if mode == "aras":
+            # Alg. 1 lines 4-13: in-window accumulated demand.
+            req_cpu, req_mem = lifecycle.masked_demand(
+                t_start, rec_cpu, rec_mem, rec_done, slot_ids,
+                now, wend, cpu, mem, self_slot,
+            )
+            # Alg. 1 lines 15-23: totals + max-residual node.
+            tot_cpu = jnp.sum(res_cpu)
+            tot_mem = jnp.sum(res_mem)
+            imax = jnp.argmax(res_cpu)
+            result = evaluate(
+                EvalInputs(
+                    task_cpu=cpu,
+                    task_mem=mem,
+                    request_cpu=req_cpu,
+                    request_mem=req_mem,
+                    total_residual_cpu=tot_cpu,
+                    total_residual_mem=tot_mem,
+                    re_max_cpu=res_cpu[imax],
+                    re_max_mem=res_mem[imax],
+                ),
+                alpha,
+            )
+            alloc_cpu, alloc_mem = result.cpu, result.mem
+            scenario = result.scenario
+            # Alg. 1 line 27 acceptance gate.
+            ok = (alloc_cpu >= min_cpu) & (alloc_mem >= min_mem + beta)
+        else:  # fcfs: full declared request, placement-only feasibility
+            alloc_cpu, alloc_mem = cpu, mem
+            scenario = jnp.int32(FCFS_SCENARIO)
+            ok = jnp.bool_(True)
+
+        node, fits_any = pick_node(res_cpu, res_mem, alloc_cpu, alloc_mem,
+                                   policy)
+        accept = attempt & ok & fits_any
+        debit = accept.astype(res_cpu.dtype)
+        res_cpu = res_cpu.at[node].add(-alloc_cpu * debit)
+        res_mem = res_mem.at[node].add(-alloc_mem * debit)
+        # mark_started: the accepted record now competes at its actual
+        # start time, visible to every later request in the burst.
+        started = accept & (self_slot >= 0)
+        slot = jnp.clip(self_slot, 0, num_slots - 1)
+        t_start = t_start.at[slot].set(
+            jnp.where(started, now, t_start[slot])
+        )
+        blocked = blocked | (pending & attempt & ~(ok & fits_any))
+        out = (
+            alloc_cpu,
+            alloc_mem,
+            jnp.where(fits_any, node, jnp.int32(-1)),
+            accept,
+            attempt,
+            scenario,
+        )
+        return (res_cpu, res_mem, t_start, blocked), out
+
+    init = (residual_cpu, residual_mem, rec_t_start, jnp.bool_(False))
+    rows = (b_cpu, b_mem, b_min_cpu, b_min_mem, b_wend, b_self, b_attempt,
+            b_pending)
+    _, outs = jax.lax.scan(step, init, rows)
+    return outs
+
+
+def _pad_1d(arr: np.ndarray, size: int, fill) -> np.ndarray:
+    if arr.shape[0] == size:
+        return arr
+    out = np.full((size,), fill, dtype=arr.dtype)
+    out[: arr.shape[0]] = arr
+    return out
+
+
+def _dispatch_burst(
+    batch: TaskBatch,
+    residual_cpu,
+    residual_mem,
+    window: TaskWindow,
+    now: float,
+    *,
+    alpha: float,
+    beta: float,
+    policy: str,
+    mode: str,
+) -> BatchAllocation:
+    """Pad to shape buckets, run the fused kernel, sync back **once**."""
+    n = batch.size
+    if n == 0:
+        return BatchAllocation.empty()
+    nb = _pow2(n)
+    nt = _pow2(window.t_start.shape[0])
+    attempt = _pad_1d(np.ones((n,), bool), nb, False)
+    outs = _fused_burst(
+        jnp.asarray(residual_cpu, jnp.float32),
+        jnp.asarray(residual_mem, jnp.float32),
+        # Padding records are complete zero-demand rows: numerically inert.
+        jnp.asarray(_pad_1d(np.asarray(window.t_start, np.float32), nt, 0.0)),
+        jnp.asarray(_pad_1d(np.asarray(window.cpu, np.float32), nt, 0.0)),
+        jnp.asarray(_pad_1d(np.asarray(window.mem, np.float32), nt, 0.0)),
+        jnp.asarray(_pad_1d(np.asarray(window.done, bool), nt, True)),
+        jnp.asarray(_pad_1d(batch.cpu, nb, 0.0)),
+        jnp.asarray(_pad_1d(batch.mem, nb, 0.0)),
+        jnp.asarray(_pad_1d(batch.min_cpu, nb, 0.0)),
+        jnp.asarray(_pad_1d(batch.min_mem, nb, 0.0)),
+        jnp.asarray(_pad_1d(batch.window_end, nb, 0.0)),
+        jnp.asarray(_pad_1d(batch.self_slot, nb, -1)),
+        jnp.asarray(attempt),
+        jnp.asarray(_pad_1d(batch.pending, nb, False)),
+        jnp.float32(now),
+        alpha=alpha,
+        beta=beta,
+        policy=policy,
+        mode=mode,
+    )
+    # The one host↔device sync of the whole burst.
+    cpu, mem, node, feasible, attempted, scenario = jax.device_get(outs)
+    return BatchAllocation(
+        cpu=cpu[:n],
+        mem=mem[:n],
+        node=node[:n],
+        feasible=feasible[:n],
+        attempted=attempted[:n],
+        scenario=scenario[:n],
+    )
+
+
+def allocation_at(result: BatchAllocation, i: int) -> Allocation:
+    """Row ``i`` of a batch result as a scalar ``Allocation``."""
+    return Allocation(
+        cpu=float(result.cpu[i]),
+        mem=float(result.mem[i]),
+        node=int(result.node[i]),
+        feasible=bool(result.feasible[i]),
+        scenario=SCENARIO_NAMES[int(result.scenario[i])],
+    )
 
 
 @dataclasses.dataclass
 class AdaptiveAllocator:
-    """ARAS — Algorithm 1 (one round of the per-request loop).
+    """ARAS — Algorithm 1, burst-at-a-time.
 
-    The paper's ``for each task pod's resource request`` loop re-runs on
-    every engine retry event; each call here is one iteration, returning
-    ``feasible=False`` when the line-27 acceptance gate fails (allocation
-    below ``min_cpu`` / ``min_mem + β``), in which case the engine waits
-    for a cluster-state change and retries — identical to the paper's
-    blocking behaviour.
+    ``allocate_batch`` runs the paper's ``for each task pod's resource
+    request`` loop as one fused scan; rows rejected by the line-27
+    acceptance gate come back ``feasible=False`` and the engine re-queues
+    them until a cluster-state change — identical to the paper's blocking
+    behaviour.  ``allocate`` is the same kernel at batch size 1.
     """
 
     alpha: float = DEFAULT_ALPHA
     beta: float = DEFAULT_BETA
+    placement: str = "worst_fit"
 
     name: str = "aras"
+    mode = "aras"
+
+    def allocate_batch(
+        self,
+        batch: TaskBatch,
+        residual_cpu,
+        residual_mem,
+        window: TaskWindow,
+        now: float,
+    ) -> BatchAllocation:
+        return _dispatch_burst(
+            batch, residual_cpu, residual_mem, window, now,
+            alpha=self.alpha, beta=self.beta, policy=self.placement,
+            mode=self.mode,
+        )
 
     def allocate(
         self,
@@ -69,51 +280,14 @@ class AdaptiveAllocator:
         window: TaskWindow,
         now: float,
     ) -> Allocation:
-        # --- Monitor: Alg. 2 + Alg. 1 lines 15-23.
+        # Monitor (Alg. 2) for callers holding a raw snapshot; the engine's
+        # hot path hands residuals straight from its incremental cache.
         residual_cpu, residual_mem = discovery.discover(snapshot)
-        summary = discovery.summarize(residual_cpu, residual_mem)
-
-        # --- Alg. 1 lines 4-13: in-window demand. The lifecycle window is
-        # [now, now + duration) — bounded by the deadline when declared.
-        window_end = now + task.duration
-        if task.deadline is not None:
-            window_end = min(window_end, task.deadline)
-        req_cpu, req_mem = lifecycle.window_demand(
-            window, now, window_end, task.cpu, task.mem
+        result = self.allocate_batch(
+            TaskBatch.from_tasks([task], now), residual_cpu, residual_mem,
+            window, now,
         )
-
-        # --- Analyse/Plan: Alg. 3.
-        result = evaluate_jit(
-            EvalInputs(
-                task_cpu=task.cpu,
-                task_mem=task.mem,
-                request_cpu=req_cpu,
-                request_mem=req_mem,
-                total_residual_cpu=summary["total_cpu"],
-                total_residual_mem=summary["total_mem"],
-                re_max_cpu=summary["re_max_cpu"],
-                re_max_mem=summary["re_max_mem"],
-            ),
-            self.alpha,
-        )
-        alloc_cpu = float(result.cpu)
-        alloc_mem = float(result.mem)
-        scenario = SCENARIO_NAMES[int(result.scenario)]
-
-        # --- Alg. 1 line 27 acceptance gate.
-        feasible = (alloc_cpu >= task.min_cpu) and (
-            alloc_mem >= task.min_mem + self.beta
-        )
-
-        node = _best_node_for(
-            np.asarray(residual_cpu), np.asarray(residual_mem), alloc_cpu, alloc_mem
-        )
-        if node < 0:
-            feasible = False
-        return Allocation(
-            cpu=alloc_cpu, mem=alloc_mem, node=node, feasible=feasible,
-            scenario=scenario,
-        )
+        return allocation_at(result, 0)
 
 
 @dataclasses.dataclass
@@ -125,7 +299,23 @@ class FCFSAllocator:
     release resources.
     """
 
+    placement: str = "worst_fit"
+
     name: str = "fcfs"
+    mode = "fcfs"
+
+    def allocate_batch(
+        self,
+        batch: TaskBatch,
+        residual_cpu,
+        residual_mem,
+        window: TaskWindow,
+        now: float,
+    ) -> BatchAllocation:
+        return _dispatch_burst(
+            batch, residual_cpu, residual_mem, window, now,
+            alpha=0.0, beta=0.0, policy=self.placement, mode=self.mode,
+        )
 
     def allocate(
         self,
@@ -135,21 +325,18 @@ class FCFSAllocator:
         now: float,
     ) -> Allocation:
         residual_cpu, residual_mem = discovery.discover(snapshot)
-        node = _best_node_for(
-            np.asarray(residual_cpu), np.asarray(residual_mem), task.cpu, task.mem
+        result = self.allocate_batch(
+            TaskBatch.from_tasks([task], now), residual_cpu, residual_mem,
+            window, now,
         )
-        return Allocation(
-            cpu=task.cpu,
-            mem=task.mem,
-            node=node,
-            feasible=node >= 0,
-            scenario="fcfs",
-        )
+        return allocation_at(result, 0)
 
 
 def make_allocator(name: str, **kwargs) -> AdaptiveAllocator | FCFSAllocator:
     if name == "aras":
         return AdaptiveAllocator(**kwargs)
     if name in ("fcfs", "baseline"):
-        return FCFSAllocator()
+        return FCFSAllocator(
+            **{k: v for k, v in kwargs.items() if k == "placement"}
+        )
     raise ValueError(f"unknown allocator {name!r} (want 'aras' or 'fcfs')")

@@ -98,9 +98,14 @@ evaluate_batch = jax.jit(
     static_argnames=("alpha",),
 )
 
+# Sentinel scenario code emitted by the fused kernel in FCFS mode, where
+# Alg. 3 never runs (the baseline always grants the full request).
+FCFS_SCENARIO = -1
+
 SCENARIO_NAMES = {
     0: "sufficient",  # A1 ∧ A2   (paper case 1)
     1: "cpu_insufficient",  # ¬A1 ∧ A2  (case 2)
     2: "mem_insufficient",  # A1 ∧ ¬A2  (case 3)
     3: "both_insufficient",  # ¬A1 ∧ ¬A2 (case 4)
+    FCFS_SCENARIO: "fcfs",
 }

@@ -5,6 +5,20 @@ task whose start time falls inside the current task's lifecycle window
 ``[t_start, t_end)`` — the set of pods that will *compete* with the current
 request (paper Fig. 1).  The Go original iterates the Redis task map; here
 it is one masked reduction.
+
+Three entry points share one masked kernel:
+
+* :func:`masked_demand` — traced helper used *inside* the fused
+  burst-allocation scan (``repro.core.allocator``), where a task's record
+  must be excluded by slot index (the knowledge base keeps every record,
+  including the requester's own) and accepted allocations update
+  ``t_start`` between scan steps.
+* :func:`window_demand` — legacy scalar API (one task, pre-filtered
+  window), kept for ``MapeK`` / ``mljobs`` / direct callers.
+* :func:`window_demand_batch` — one dispatch for a whole burst: a
+  tasks × records mask matrix reduced along the record axis.  This is the
+  static form (no inter-task residual coupling); the engine's fused path
+  uses the scan form so each accepted allocation is visible to the next.
 """
 from __future__ import annotations
 
@@ -15,6 +29,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import TaskWindow
+
+
+def masked_demand(
+    rec_t_start: jax.Array,  # [T] f32
+    rec_cpu: jax.Array,  # [T] f32
+    rec_mem: jax.Array,  # [T] f32
+    rec_done: jax.Array,  # [T] bool
+    slot_ids: jax.Array,  # [T] int32 (arange; hoisted so scans reuse it)
+    window_start: jax.Array,  # scalar f32
+    window_end: jax.Array,  # scalar f32
+    own_cpu: jax.Array,  # scalar f32
+    own_mem: jax.Array,  # scalar f32
+    self_slot: jax.Array,  # scalar int32; -1 = no own record to exclude
+) -> Tuple[jax.Array, jax.Array]:
+    """Alg. 1 lines 5-13: own request + Σ in-window competitor requests.
+
+    Alg.1 line 9: competitor.t_start ∈ [window_start, window_end) and not
+    yet complete.  ``self_slot`` masks the requester's own knowledge-base
+    record (the seed filtered it out host-side, rebuilding the arrays per
+    request; masking keeps the array view persistent).
+    """
+    in_window = (rec_t_start >= window_start) & (rec_t_start < window_end) & (
+        ~rec_done
+    )
+    w = (in_window & (slot_ids != self_slot)).astype(rec_cpu.dtype)
+    req_cpu = own_cpu + jnp.sum(rec_cpu * w)
+    req_mem = own_mem + jnp.sum(rec_mem * w)
+    return req_cpu, req_mem
 
 
 @jax.jit
@@ -28,12 +70,22 @@ def _window_demand(
     own_cpu: jax.Array,
     own_mem: jax.Array,
 ) -> Tuple[jax.Array, jax.Array]:
-    # Alg.1 line 9: task.t_start ∈ [task_req.t_start, task_req.t_end).
-    in_window = (t_start >= window_start) & (t_start < window_end) & (~done)
-    w = in_window.astype(cpu.dtype)
-    req_cpu = own_cpu + jnp.sum(cpu * w)
-    req_mem = own_mem + jnp.sum(mem * w)
-    return req_cpu, req_mem
+    slot_ids = jnp.arange(t_start.shape[0], dtype=jnp.int32)
+    return masked_demand(
+        t_start, cpu, mem, done, slot_ids, window_start, window_end,
+        own_cpu, own_mem, jnp.int32(-1),
+    )
+
+
+# Batched form: [B] windows × [T] records in one dispatch — the mask is a
+# [B, T] matrix reduced along the record axis.  Shared-window terms
+# broadcast; per-task terms batch on the leading axis.
+_window_demand_batch = jax.jit(
+    jax.vmap(
+        masked_demand,
+        in_axes=(None, None, None, None, None, None, 0, 0, 0, 0),
+    )
+)
 
 
 def window_demand(
@@ -62,3 +114,42 @@ def window_demand(
         jnp.float32(own_mem),
     )
     return float(req_cpu), float(req_mem)
+
+
+def window_demand_batch(
+    window: TaskWindow,
+    window_start: float,
+    window_ends,
+    own_cpu,
+    own_mem,
+    self_slots=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """In-window demand for a burst of B tasks against one record table.
+
+    ``window_ends`` / ``own_cpu`` / ``own_mem`` are [B] arrays; the
+    optional ``self_slots`` ([B] int32) excludes each task's own record by
+    slot index (-1 = nothing to exclude).  Returns ([B], [B]) demands.
+    """
+    ends = jnp.asarray(window_ends, jnp.float32)
+    own_c = jnp.asarray(own_cpu, jnp.float32)
+    own_m = jnp.asarray(own_mem, jnp.float32)
+    slots = (
+        jnp.full(ends.shape, -1, jnp.int32)
+        if self_slots is None
+        else jnp.asarray(self_slots, jnp.int32)
+    )
+    if window.t_start.shape[0] == 0:
+        return own_c, own_m
+    slot_ids = jnp.arange(window.t_start.shape[0], dtype=jnp.int32)
+    return _window_demand_batch(
+        jnp.asarray(window.t_start, jnp.float32),
+        jnp.asarray(window.cpu, jnp.float32),
+        jnp.asarray(window.mem, jnp.float32),
+        jnp.asarray(window.done),
+        slot_ids,
+        jnp.float32(window_start),
+        ends,
+        own_c,
+        own_m,
+        slots,
+    )

@@ -1,0 +1,63 @@
+"""Pluggable pod-placement policies, branchless for the fused dispatch.
+
+The paper delegates placement to the default K8s scheduler; the seed
+hard-coded worst-fit (max-residual-CPU node, mirroring ARAS's orientation
+toward the max-residual node, Alg. 1 lines 19-22).  Placement is now a
+policy selected via ``EngineConfig.placement``:
+
+* ``worst_fit``  — max residual CPU among fitting nodes (seed behaviour;
+  spreads load, keeps the max-residual node large for ARAS scaling)
+* ``best_fit``   — min residual CPU among fitting nodes (packs tightly,
+  preserves large holes for big requests)
+* ``first_fit``  — lowest node index that fits (cheapest mental model,
+  matches kube-scheduler's score-less fallback)
+
+Each policy reduces to ``argmax(where(fits, score, -inf))`` over a
+per-node score, so the choice compiles into the single fused allocation
+dispatch with no host round-trip and no data-dependent branching.  Ties
+resolve to the lowest node index (argmax-first semantics), identical to
+the seed's ``np.argmax``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Fit slack mirroring the seed's ``_best_node_for`` epsilon.
+_FIT_EPS = 1e-6
+
+PLACEMENT_POLICIES = ("worst_fit", "best_fit", "first_fit")
+
+
+def placement_score(policy: str, residual_cpu: jax.Array) -> jax.Array:
+    """Per-node score whose argmax (over fitting nodes) picks the pod host."""
+    if policy == "worst_fit":
+        return residual_cpu
+    if policy == "best_fit":
+        return -residual_cpu
+    if policy == "first_fit":
+        # Strictly decreasing in the index: argmax = first fitting node.
+        return -jnp.arange(residual_cpu.shape[0], dtype=residual_cpu.dtype)
+    raise ValueError(
+        f"unknown placement policy {policy!r} (want one of {PLACEMENT_POLICIES})"
+    )
+
+
+def pick_node(
+    residual_cpu: jax.Array,
+    residual_mem: jax.Array,
+    cpu: jax.Array,
+    mem: jax.Array,
+    policy: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """Choose a host for a (cpu, mem) quota; vmap/scan-safe.
+
+    Returns ``(node, fits_any)`` where ``node`` is the policy's argmax over
+    fitting nodes (0 when nothing fits — callers must gate on ``fits_any``).
+    """
+    fits = (residual_cpu >= cpu - _FIT_EPS) & (residual_mem >= mem - _FIT_EPS)
+    score = placement_score(policy, residual_cpu)
+    node = jnp.argmax(jnp.where(fits, score, -jnp.inf)).astype(jnp.int32)
+    return node, jnp.any(fits)

@@ -139,6 +139,86 @@ class TaskWindow:
 
 
 @dataclasses.dataclass(frozen=True)
+class TaskBatch:
+    """Struct-of-arrays view of one arrival burst of ready task requests.
+
+    One row per task, in decision order (pending retries first in FIFO
+    admission order, then newly-ready tasks in event order).  ``self_slot``
+    is each task's slot in the knowledge-base array view (-1 when the task
+    has no record to exclude, e.g. the legacy scalar path where callers
+    pre-filter the window).  ``pending`` marks retry-queue rows, which keep
+    the seed's head-of-line discipline: once one pending row fails, later
+    pending rows are skipped, not attempted.
+    """
+
+    cpu: np.ndarray  # [B] float32 declared request
+    mem: np.ndarray  # [B] float32
+    min_cpu: np.ndarray  # [B] float32 acceptance floor (Alg. 1 line 27)
+    min_mem: np.ndarray  # [B] float32
+    window_end: np.ndarray  # [B] float32 lifecycle window end per task
+    self_slot: np.ndarray  # [B] int32 slot in the record table, -1 = none
+    pending: np.ndarray  # [B] bool — retry-queue row (head-of-line rules)
+
+    @property
+    def size(self) -> int:
+        return int(self.cpu.shape[0])
+
+    @staticmethod
+    def from_tasks(tasks, now, self_slots=None, pending=None) -> "TaskBatch":
+        """Build a batch from TaskSpecs; window ends follow Alg. 1
+        ([now, now + duration) bounded by the task deadline)."""
+        ends = [
+            min(now + t.duration, t.deadline)
+            if t.deadline is not None else now + t.duration
+            for t in tasks
+        ]
+        n = len(tasks)
+        return TaskBatch(
+            cpu=np.array([t.cpu for t in tasks], np.float32),
+            mem=np.array([t.mem for t in tasks], np.float32),
+            min_cpu=np.array([t.min_cpu for t in tasks], np.float32),
+            min_mem=np.array([t.min_mem for t in tasks], np.float32),
+            window_end=np.array(ends, np.float32),
+            self_slot=np.full((n,), -1, np.int32) if self_slots is None
+            else np.asarray(self_slots, np.int32),
+            pending=np.zeros((n,), bool) if pending is None
+            else np.asarray(pending, bool),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchAllocation:
+    """Result of one fused burst decision — one row per TaskBatch row.
+
+    ``attempted`` is False for pending rows skipped by head-of-line
+    blocking (the engine keeps them queued without counting a wait).
+    ``scenario`` holds Alg. 3 scenario codes (0-3) or ``FCFS_SCENARIO``.
+    """
+
+    cpu: np.ndarray  # [B] float32 granted quota
+    mem: np.ndarray  # [B] float32
+    node: np.ndarray  # [B] int32 target node, -1 if nothing fits
+    feasible: np.ndarray  # [B] bool — accepted (gate + placement)
+    attempted: np.ndarray  # [B] bool
+    scenario: np.ndarray  # [B] int32
+
+    @property
+    def size(self) -> int:
+        return int(self.cpu.shape[0])
+
+    @staticmethod
+    def empty() -> "BatchAllocation":
+        return BatchAllocation(
+            cpu=np.zeros((0,), np.float32),
+            mem=np.zeros((0,), np.float32),
+            node=np.zeros((0,), np.int32),
+            feasible=np.zeros((0,), bool),
+            attempted=np.zeros((0,), bool),
+            scenario=np.zeros((0,), np.int32),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class Allocation:
     """Result of one ARAS / baseline decision."""
 

@@ -13,6 +13,17 @@ Components map 1:1 to the paper:
 Fault-tolerance semantics follow §6.2.2: a pod whose memory quota is below
 its *runtime* requirement + β turns OOMKilled mid-run; the engine deletes
 it, re-allocates with the learned floor, and relaunches (self-healing).
+
+The allocation unit is the **arrival burst**: all retry/ready/heal events
+at one timestamp drain into a single ``allocate_batch`` dispatch (one
+fused MAPE-K cycle for the whole burst) instead of one cycle per task.
+The batched retry preserves the seed's FIFO admission order *and* its
+head-of-line discipline (§6.1.6: the engine "waits ... for the CURRENT
+task request"): pending rows go first, and once one fails the rest of the
+queue is skipped, exactly as the sequential loop would.  Decisions are
+bit-for-bit identical to the per-task path (``batch_allocation=False``)
+because both run the same fused kernel against the same incremental
+float32 caches — see ``tests/test_batch_parity.py``.
 """
 from __future__ import annotations
 
@@ -25,14 +36,25 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.cluster.simulator import ClusterSim
-from repro.core.allocator import make_allocator
-from repro.core.types import DEFAULT_BETA, Allocation, PodPhase, TaskSpec
+from repro.core.allocator import allocation_at, make_allocator
+from repro.core.types import (
+    DEFAULT_BETA,
+    Allocation,
+    BatchAllocation,
+    PodPhase,
+    TaskBatch,
+    TaskSpec,
+)
 from repro.engine.state_store import StateStore, TaskRecord
 from repro.workflows.spec import WorkflowSpec
 
 # Event kinds, ordered: deletions/completions before retries before arrivals
 # at equal timestamps so released resources are visible to retries.
 _COMPLETE, _OOM, _DELETE, _RETRY, _INJECT, _READY = range(6)
+_HEAL = _READY + 100  # sorts after same-time READY events
+
+# Same-timestamp events that fold into one burst-allocation dispatch.
+_DRAIN_KINDS = frozenset((_RETRY, _READY, _HEAL))
 
 
 @dataclasses.dataclass
@@ -45,6 +67,16 @@ class EngineConfig:
     allocator: str = "aras"  # "aras" | "fcfs"
     alpha: float = 0.8
     beta: float = DEFAULT_BETA
+    # Placement policy inside the fused dispatch (repro.core.placement):
+    # "worst_fit" (seed behaviour) | "best_fit" | "first_fit".
+    placement: str = "worst_fit"
+    # Burst-at-a-time allocation (one fused dispatch per timestamp burst).
+    # False falls back to one dispatch per task — same kernel at batch
+    # size 1, kept as the parity reference and for bisecting regressions.
+    batch_allocation: bool = True
+    # Per-event O(nodes+pods) accounting cross-checks; disable for
+    # large-scale benchmarking.
+    invariant_checks: bool = True
     pod_startup_delay: float = 40.0  # schedule + image pull + start (Fig. 9)
     cleanup_delay: float = 5.0  # Task Container Cleaner latency
     restart_delay: float = 2.0  # OOM watch → regenerate latency
@@ -110,11 +142,10 @@ class KubeAdaptor:
     def __init__(self, config: EngineConfig):
         self.cfg = config
         self.cluster = ClusterSim(config.num_nodes, config.node_cpu, config.node_mem)
-        self.allocator = make_allocator(
-            config.allocator,
-            **({"alpha": config.alpha, "beta": config.beta}
-               if config.allocator == "aras" else {}),
-        )
+        kwargs = {"placement": config.placement}
+        if config.allocator == "aras":
+            kwargs.update(alpha=config.alpha, beta=config.beta)
+        self.allocator = make_allocator(config.allocator, **kwargs)
         self.store = StateStore()
         self.runs: Dict[str, WorkflowRun] = {}
         self.metrics = EngineMetrics()
@@ -158,16 +189,32 @@ class KubeAdaptor:
         for tid in spec.roots():
             self._push(self._now, _READY, (spec.workflow_id, tid))
 
-    def _try_allocate(self, wf_id: str, task: TaskSpec) -> bool:
-        """One MAPE-K cycle: Monitor → Analyse → Plan → Execute."""
+    # --------------------------------------------------- burst allocation
+    def _decide(self, entries: List[Tuple[str, TaskSpec, str]]
+                ) -> BatchAllocation:
+        """One fused MAPE-K cycle for a burst of task requests.
+
+        Monitor reads the incremental caches (no snapshot rebuild);
+        Analyse/Plan run inside the allocator's single dispatch; Execute
+        happens in ``_apply``/``_bind`` from the one synced result.
+        """
+        batch = TaskBatch.from_tasks(
+            [task for _, task, _ in entries],
+            self._now,
+            self_slots=[
+                self.store.index_of(f"{wf_id}/{task.task_id}")
+                for wf_id, task, _ in entries
+            ],
+            pending=[origin == "pending" for _, _, origin in entries],
+        )
+        res_cpu, res_mem = self.cluster.residual_view()
+        return self.allocator.allocate_batch(
+            batch, res_cpu, res_mem, self.store.window(), self._now
+        )
+
+    def _bind(self, wf_id: str, task: TaskSpec, alloc: Allocation) -> None:
+        """Execute phase: Containerized Executor creates the pod."""
         key = f"{wf_id}/{task.task_id}"
-        snapshot = self.cluster.snapshot()  # Monitor (Informer)
-        window = self.store.window(exclude=key)  # Knowledge
-        alloc = self.allocator.allocate(task, snapshot, window, self._now)
-        if not alloc.feasible:
-            self.metrics.num_waits += 1
-            return False
-        # Execute: Containerized Executor creates the pod.
         pod = self.cluster.bind(task, alloc, self._now, workflow_id=wf_id)
         self.store.mark_started(key, self._now)
         run = self.runs[wf_id]
@@ -188,6 +235,79 @@ class KubeAdaptor:
             t_done = self._now + self.cfg.pod_startup_delay + wall
             self._push(t_done, _COMPLETE, (pod.uid, wf_id))
         self._sample_usage()
+
+    def _allocate_group(self, entries: List[Tuple[str, TaskSpec, str]],
+                        include_pending: bool) -> None:
+        """Decide a drained burst and apply the results in admission order."""
+        if include_pending:
+            entries = [(wf_id, task, "pending")
+                       for wf_id, task in self._pending] + entries
+        if not entries:
+            return
+        result = self._decide(entries)
+        kept: Deque[Tuple[str, TaskSpec]] = deque()
+        failed: List[Tuple[str, TaskSpec]] = []
+        for i, (wf_id, task, origin) in enumerate(entries):
+            if result.feasible[i]:
+                self._bind(wf_id, task, allocation_at(result, i))
+            elif origin == "pending":
+                # Skipped rows (head-of-line) were never attempted and do
+                # not count as waits, matching the sequential retry loop.
+                if result.attempted[i]:
+                    self.metrics.num_waits += 1
+                kept.append((wf_id, task))
+            else:
+                self.metrics.num_waits += 1
+                failed.append((wf_id, task))
+        if include_pending:
+            kept.extend(failed)
+            self._pending = kept
+        else:
+            self._pending.extend(failed)
+
+    def _drain_group(self, kind: int, payload: tuple) -> None:
+        """Fold every same-timestamp retry/ready/heal event into one burst.
+
+        Events are consumed in heap order (kind, then sequence), so the
+        batch rows land in exactly the order the per-task loop would have
+        decided them; virtual tasks complete inline, which may surface
+        more same-timestamp READY events — the loop keeps draining until
+        the next event belongs to a later timestamp or another kind.
+        """
+        include_pending = False
+        entries: List[Tuple[str, TaskSpec, str]] = []
+        while True:
+            if kind == _RETRY:
+                include_pending = True
+            elif kind == _READY:
+                wf_id, tid = payload
+                task = self.runs[wf_id].spec.tasks[tid]
+                if task.cpu == 0 and task.mem == 0:
+                    # Virtual entrance/exit: complete instantly, no pod.
+                    self._task_done(wf_id, tid)
+                else:
+                    entries.append((wf_id, task, "ready"))
+            else:  # _HEAL
+                wf_id, task = payload
+                self.metrics.realloc_events.append(
+                    (self._now, f"{wf_id}/{task.task_id}")
+                )
+                entries.append((wf_id, task, "heal"))
+            if self._events and self._events[0][0] == self._now \
+                    and self._events[0][1] in _DRAIN_KINDS:
+                _, kind, _, payload = heapq.heappop(self._events)
+            else:
+                break
+        self._allocate_group(entries, include_pending)
+
+    # ------------------------------------------------- per-task reference
+    def _try_allocate(self, wf_id: str, task: TaskSpec) -> bool:
+        """One MAPE-K cycle for one task — the fused kernel at batch 1."""
+        result = self._decide([(wf_id, task, "ready")])
+        if not result.feasible[0]:
+            self.metrics.num_waits += 1
+            return False
+        self._bind(wf_id, task, allocation_at(result, 0))
         return True
 
     def _ready(self, wf_id: str, tid: str) -> None:
@@ -199,13 +319,35 @@ class KubeAdaptor:
         if not self._try_allocate(wf_id, task):
             self._pending.append((wf_id, task))
 
+    def _heal_one(self, wf_id: str, task: TaskSpec) -> None:
+        self.metrics.realloc_events.append(
+            (self._now, f"{wf_id}/{task.task_id}")
+        )
+        if not self._try_allocate(wf_id, task):
+            self._pending.append((wf_id, task))
+
+    def _retry_pending(self) -> None:
+        """Re-try the wait queue after a resource release.
+
+        Strict FIFO with head-of-line blocking, as in the paper's
+        baseline (§6.1.6: the engine "waits for other task pods to
+        complete and release resources to meet the resource reallocation
+        for the CURRENT task request") — if the head cannot allocate,
+        everything behind it keeps waiting.  Both allocators share the
+        discipline; ARAS rarely blocks because it scales instead.
+        """
+        while self._pending:
+            wf_id, task = self._pending[0]
+            if not self._try_allocate(wf_id, task):
+                break
+            self._pending.popleft()
+
+    # --------------------------------------------------------- completion
     def _task_done(self, wf_id: str, tid: str) -> None:
         run = self.runs[wf_id]
         key = f"{wf_id}/{tid}"
         self.store.mark_done(key, self._now)
         run.done.add(tid)
-        if run.first_start is None and run.spec.tasks[tid].cpu == 0:
-            pass  # virtual entrance does not count as a start
         for child in run.spec.children(tid):
             run.indegree[child] -= 1
             if run.indegree[child] == 0:
@@ -239,35 +381,13 @@ class KubeAdaptor:
         learned = dataclasses.replace(
             pod.task, min_mem=max(pod.task.min_mem, pod.task.runtime_min_mem())
         )
-        self._push(self._now + self.cfg.restart_delay, _READY + 100,
+        self._push(self._now + self.cfg.restart_delay, _HEAL,
                    (wf_id, learned))
-
-    def _heal(self, wf_id: str, task: TaskSpec) -> None:
-        self.metrics.realloc_events.append(
-            (self._now, f"{wf_id}/{task.task_id}")
-        )
-        if not self._try_allocate(wf_id, task):
-            self._pending.append((wf_id, task))
-
-    def _retry_pending(self) -> None:
-        """Re-try the wait queue after a resource release.
-
-        Strict FIFO with head-of-line blocking, as in the paper's
-        baseline (§6.1.6: the engine "waits for other task pods to
-        complete and release resources to meet the resource reallocation
-        for the CURRENT task request") — if the head cannot allocate,
-        everything behind it keeps waiting.  Both allocators share the
-        discipline; ARAS rarely blocks because it scales instead.
-        """
-        while self._pending:
-            wf_id, task = self._pending[0]
-            if not self._try_allocate(wf_id, task):
-                break
-            self._pending.popleft()
 
     # ------------------------------------------------------------ run loop
     def run(self) -> EngineMetrics:
         t_first: Optional[float] = None
+        batched = self.cfg.batch_allocation
         while self._events:
             t, kind, _, payload = heapq.heappop(self._events)
             if t > self.cfg.max_time:
@@ -277,19 +397,22 @@ class KubeAdaptor:
                 t_first = t
             if kind == _INJECT:
                 self._inject(*payload)
-            elif kind == _READY:
-                self._ready(*payload)
             elif kind == _COMPLETE:
                 self._complete(*payload)
             elif kind == _OOM:
                 self._oom(*payload)
             elif kind == _DELETE:
                 self.cluster.delete(*payload)
+            elif batched and kind in _DRAIN_KINDS:
+                self._drain_group(kind, payload)
+            elif kind == _READY:
+                self._ready(*payload)
             elif kind == _RETRY:
                 self._retry_pending()
-            elif kind == _READY + 100:
-                self._heal(*payload)
-            self.cluster.check_invariants()
+            elif kind == _HEAL:
+                self._heal_one(*payload)
+            if self.cfg.invariant_checks:
+                self.cluster.check_invariants()
 
         incomplete = [w for w, r in self.runs.items() if not r.complete]
         if incomplete or self._pending:

@@ -4,6 +4,16 @@ Holds one record per task: ``{t_start, duration, t_end, cpu, mem, flag}``.
 ``t_start`` is the *projected* earliest start (critical-path estimate from
 the Plan phase) until the task actually launches, then the actual start —
 this is what lets Alg. 1 see future in-window competitors (Fig. 1).
+
+The array view is **append-only with dirty-slot updates**: each record
+gets a permanent slot in power-of-two-capacity float32 arrays, and
+``mark_started`` / ``mark_done`` write that slot in place.  ``window()``
+therefore returns the persistent capacity-sized arrays (free tail slots
+are ``done=True`` with zero demand — numerically inert under the masked
+reduction) instead of rebuilding Python lists per request, and the JIT
+shapes the allocator sees only change when capacity doubles.  Requesters
+exclude their own record by slot index (``index_of``) rather than by
+filtering, so every caller shares the same arrays.
 """
 from __future__ import annotations
 
@@ -31,31 +41,78 @@ class StateStore:
 
     def __init__(self) -> None:
         self._records: Dict[str, TaskRecord] = {}
+        self._slots: Dict[str, int] = {}
+        self._count = 0
+        self._capacity = 0
+        self._t_start = np.zeros((0,), np.float32)
+        self._cpu = np.zeros((0,), np.float32)
+        self._mem = np.zeros((0,), np.float32)
+        self._done = np.zeros((0,), bool)
+
+    def _grow(self) -> None:
+        new_cap = max(1, self._capacity * 2)
+        for name, fill in (("_t_start", 0.0), ("_cpu", 0.0), ("_mem", 0.0),
+                           ("_done", True)):
+            old = getattr(self, name)
+            grown = np.full((new_cap,), fill, old.dtype)
+            grown[: self._capacity] = old
+            setattr(self, name, grown)
+        self._capacity = new_cap
 
     def put(self, rec: TaskRecord) -> None:
+        slot = self._slots.get(rec.key)
+        if slot is None:
+            if self._count == self._capacity:
+                self._grow()
+            slot = self._count
+            self._count += 1
+            self._slots[rec.key] = slot
         self._records[rec.key] = rec
+        self._t_start[slot] = rec.t_start
+        self._cpu[slot] = rec.cpu
+        self._mem[slot] = rec.mem
+        self._done[slot] = rec.flag
 
     def get(self, key: str) -> Optional[TaskRecord]:
         return self._records.get(key)
+
+    def index_of(self, key: str) -> int:
+        """Record slot in the array view (for self-exclusion masks)."""
+        return self._slots[key]
 
     def mark_started(self, key: str, t_start: float) -> None:
         rec = self._records[key]
         rec.t_start = t_start
         rec.t_end = t_start + rec.duration
+        self._t_start[self._slots[key]] = t_start
 
     def mark_done(self, key: str, t_end: float) -> None:
         rec = self._records[key]
         rec.flag = True
         rec.t_end = t_end
+        self._done[self._slots[key]] = True
 
     def window(self, exclude: Optional[str] = None) -> TaskWindow:
-        """Struct-of-arrays view for Alg. 1 (excluding the requester)."""
-        recs = [r for k, r in self._records.items() if k != exclude]
+        """Struct-of-arrays view for Alg. 1.
+
+        Without ``exclude`` this is the persistent capacity-sized view
+        (zero copies; treat as read-only) — pair it with ``index_of`` to
+        mask the requester.  The ``exclude`` form is the legacy API and
+        materializes a filtered copy.
+        """
+        if exclude is None:
+            return TaskWindow(
+                t_start=self._t_start, cpu=self._cpu, mem=self._mem,
+                done=self._done,
+            )
+        keep = np.ones((self._capacity,), bool)
+        slot = self._slots.get(exclude)
+        if slot is not None:
+            keep[slot] = False
+        keep[self._count:] = False
         return TaskWindow(
-            t_start=np.array([r.t_start for r in recs], np.float32),
-            cpu=np.array([r.cpu for r in recs], np.float32),
-            mem=np.array([r.mem for r in recs], np.float32),
-            done=np.array([r.flag for r in recs], bool),
+            t_start=self._t_start[keep], cpu=self._cpu[keep],
+            mem=self._mem[keep], done=self._done[keep],
         )
 
     def __len__(self) -> int:

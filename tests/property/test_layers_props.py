@@ -1,0 +1,59 @@
+"""Property tests for MoE routing layers (requires hypothesis)."""
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def moe_cfg(dispatch="scatter", cf=1.25, k=2, E=8, shared=0):
+    return ModelConfig(
+        name="t", num_layers=1, d_model=32, num_heads=4, num_kv_heads=4,
+        d_ff=0, vocab_size=128,
+        moe=MoEConfig(num_experts=E, top_k=k, expert_d_ff=48,
+                      num_shared_experts=shared, capacity_factor=cf,
+                      dispatch_mode=dispatch))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    k=st.integers(1, 4),
+    cf=st.floats(0.5, 4.0),
+    T=st.sampled_from([8, 16, 24]),
+)
+def test_scatter_equals_einsum_dispatch(seed, k, cf, T):
+    """The two dispatch modes are the same function (property)."""
+    cfg_e = moe_cfg("einsum", cf=cf, k=k)
+    cfg_s = moe_cfg("scatter", cf=cf, k=k)
+    p = L.init_moe(jax.random.key(0), cfg_e)
+    x = jax.random.normal(jax.random.key(seed), (2, T, 32))
+    ye, auxe = L.moe(p, cfg_e, x)
+    ys, auxs = L.moe(p, cfg_s, x)
+    np.testing.assert_allclose(np.asarray(ye), np.asarray(ys),
+                               atol=1e-4, rtol=1e-4)
+    assert abs(float(auxe.dropped_fraction) -
+               float(auxs.dropped_fraction)) < 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), E=st.sampled_from([4, 8, 16]),
+       T=st.integers(2, 64), k=st.integers(1, 4))
+def test_positions_by_sort_is_exclusive_count(seed, E, T, k):
+    """pos[t,j] == number of earlier (token-major) pairs routed to the
+    same expert — the exclusive-cumsum definition."""
+    eidx = jax.random.randint(jax.random.key(seed), (T, k), 0, E)
+    pos = np.asarray(L._positions_by_sort(eidx, E))
+    e = np.asarray(eidx).reshape(-1)
+    expected = np.zeros_like(e)
+    seen = {}
+    for i, ei in enumerate(e):
+        expected[i] = seen.get(int(ei), 0)
+        seen[int(ei)] = expected[i] + 1
+    np.testing.assert_array_equal(pos.reshape(-1), expected)

@@ -1,0 +1,37 @@
+"""Randomized engine/simulator invariants (requires hypothesis)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.engine import EngineConfig, run_experiment
+from repro.workflows import WORKFLOW_BUILDERS
+
+FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                    duration_multiplier=1.0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    kind=st.sampled_from(list(WORKFLOW_BUILDERS)),
+    count=st.integers(min_value=1, max_value=6),
+    allocator=st.sampled_from(["aras", "fcfs"]),
+    seed=st.integers(min_value=0, max_value=10_000),
+    batched=st.booleans(),
+)
+def test_simulator_invariants_random(kind, count, allocator, seed, batched):
+    """For arbitrary workloads: no overcommit (checked inside the engine
+    at every event), every workflow completes, utilization in [0, 1] —
+    in both burst-batched and per-task allocation modes."""
+    import dataclasses
+
+    cfg = dataclasses.replace(FAST, batch_allocation=batched)
+    m = run_experiment(kind, [(0.0, count)], allocator, seed=seed,
+                       config=cfg)
+    assert len(m.workflow_durations) == count
+    assert 0.0 <= m.avg_cpu_usage <= 1.0
+    assert 0.0 <= m.avg_mem_usage <= 1.0
+    for _, c, mm in m.usage_series:
+        assert c <= 1.0 + 1e-9 and mm <= 1.0 + 1e-9

@@ -1,0 +1,222 @@
+"""Batched burst allocation ≡ the per-task loop, bit for bit.
+
+The correctness crux of the fused ``allocate_batch`` pipeline: driving
+the engine one fused dispatch per arrival burst must reproduce the
+sequential MAPE-K loop exactly — same makespan, same per-workflow
+durations, same allocation trace (values *and* order), same OOM/
+reallocation events, same utilization integrals.  Both modes execute the
+same kernel against the same incremental float32 caches, so equality is
+exact, not approximate.
+
+(`num_waits` is deliberately not compared: the sequential loop counts a
+wait per coalesced same-timestamp retry event, the batched drain counts
+one per attempted row — the decisions themselves are identical.)
+
+Also covers: the three placement policies, and batch edge cases (empty
+batch, single task, all-infeasible burst).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.allocator import AdaptiveAllocator, FCFSAllocator
+from repro.core.types import TaskBatch, TaskSpec, TaskWindow
+from repro.core.placement import pick_node
+from repro.engine import EngineConfig, run_experiment
+from repro.workflows import arrival
+
+FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                    duration_multiplier=1.0)
+
+# Scaled-down versions of the paper's three §6.1.4 arrival patterns so
+# each run stays test-sized while still producing multi-workflow bursts.
+PATTERNS = {
+    "constant": arrival.constant(y=2, bursts=3, interval=30.0),
+    "linear": arrival.linear(k=1, d=1, bursts=3, interval=30.0),
+    "pyramid": arrival.pyramid(start=1, peak=3, step=1, total=8,
+                               interval=30.0),
+}
+
+
+def _run(kind, pattern, allocator, batched, task_kwargs=None, seed=0):
+    cfg = dataclasses.replace(FAST, batch_allocation=batched)
+    return run_experiment(kind, pattern, allocator, seed=seed, config=cfg,
+                          task_kwargs=task_kwargs)
+
+
+def _assert_identical(batched, per_task):
+    assert batched.makespan == per_task.makespan
+    assert batched.workflow_durations == per_task.workflow_durations
+    assert batched.alloc_trace == per_task.alloc_trace
+    assert batched.oom_events == per_task.oom_events
+    assert batched.realloc_events == per_task.realloc_events
+    assert batched.num_allocations == per_task.num_allocations
+    assert batched.avg_cpu_usage == per_task.avg_cpu_usage
+    assert batched.avg_mem_usage == per_task.avg_mem_usage
+    assert batched.usage_series == per_task.usage_series
+    assert batched.sla_violations == per_task.sla_violations
+
+
+@pytest.mark.parametrize("pattern_name", sorted(PATTERNS))
+@pytest.mark.parametrize("kind", ["montage", "ligo"])
+@pytest.mark.parametrize("allocator", ["aras", "fcfs"])
+def test_engine_parity(pattern_name, kind, allocator):
+    pattern = PATTERNS[pattern_name]
+    _assert_identical(
+        _run(kind, pattern, allocator, batched=True),
+        _run(kind, pattern, allocator, batched=False),
+    )
+
+
+@pytest.mark.parametrize("allocator", ["aras", "fcfs"])
+def test_engine_parity_other_kinds_burst(allocator):
+    """Dense same-timestamp burst (max batch pressure) on the other DAGs."""
+    for kind in ("epigenomics", "cybershake"):
+        _assert_identical(
+            _run(kind, [(0.0, 6)], allocator, batched=True, seed=3),
+            _run(kind, [(0.0, 6)], allocator, batched=False, seed=3),
+        )
+
+
+def test_engine_parity_with_oom_selfheal():
+    """Heal events flow through the batched drain identically (§6.2.2)."""
+    kw = dict(mem=2600.0, min_mem=200.0, actual_min_mem=2000.0)
+    b = _run("montage", [(0.0, 10)], "aras", batched=True, task_kwargs=kw)
+    p = _run("montage", [(0.0, 10)], "aras", batched=False, task_kwargs=kw)
+    assert len(b.oom_events) > 0  # the scenario actually exercises healing
+    _assert_identical(b, p)
+
+
+# ------------------------------------------------------------- placement
+
+def _residuals():
+    cpu = np.array([3000.0, 5000.0, 4000.0, 5000.0], np.float32)
+    mem = np.array([8000.0, 500.0, 8000.0, 8000.0], np.float32)
+    return cpu, mem
+
+
+@pytest.mark.parametrize("policy,expected", [
+    # node 1 has max CPU but not enough memory; among fitting {0, 2, 3}:
+    ("worst_fit", 3),   # max residual CPU (ties → lowest index, so 3)
+    ("best_fit", 0),    # min residual CPU
+    ("first_fit", 0),   # lowest index
+])
+def test_placement_policies(policy, expected):
+    cpu, mem = _residuals()
+    node, fits = pick_node(cpu, mem, 2000.0, 1000.0, policy)
+    assert bool(fits)
+    assert int(node) == expected
+
+
+def test_placement_worst_fit_prefers_max_cpu():
+    cpu, mem = _residuals()
+    # memory fits everywhere now -> worst-fit picks node 1 (5000, first max)
+    mem = np.full_like(mem, 8000.0)
+    node, fits = pick_node(cpu, mem, 2000.0, 1000.0, "worst_fit")
+    assert (bool(fits), int(node)) == (True, 1)
+
+
+def test_placement_nothing_fits():
+    cpu, mem = _residuals()
+    node, fits = pick_node(cpu, mem, 10000.0, 1000.0, "worst_fit")
+    assert not bool(fits)
+
+
+def test_placement_unknown_policy_raises():
+    with pytest.raises(ValueError, match="unknown placement policy"):
+        pick_node(*_residuals(), 1.0, 1.0, "wat")
+
+
+@pytest.mark.parametrize("policy", ["worst_fit", "best_fit", "first_fit"])
+def test_engine_runs_under_every_policy(policy):
+    cfg = dataclasses.replace(FAST, placement=policy)
+    m = run_experiment("montage", [(0.0, 3)], "aras", seed=0, config=cfg)
+    assert len(m.workflow_durations) == 3
+
+
+# ------------------------------------------------------------ edge cases
+
+def _cluster(n=2, cpu=8000.0, mem=16000.0):
+    return (np.full((n,), cpu, np.float32), np.full((n,), mem, np.float32))
+
+
+def _window_empty():
+    z = np.zeros((0,), np.float32)
+    return TaskWindow(t_start=z, cpu=z, mem=z, done=np.zeros((0,), bool))
+
+
+def _task(i, cpu=2000.0, mem=4000.0, min_cpu=100.0, min_mem=1000.0):
+    return TaskSpec(task_id=f"t{i}", image="i", cpu=cpu, mem=mem,
+                    duration=10.0, min_cpu=min_cpu, min_mem=min_mem)
+
+
+@pytest.mark.parametrize("alloc_cls", [AdaptiveAllocator, FCFSAllocator])
+def test_empty_batch(alloc_cls):
+    res_cpu, res_mem = _cluster()
+    out = alloc_cls().allocate_batch(
+        TaskBatch.from_tasks([], 0.0), res_cpu, res_mem, _window_empty(), 0.0
+    )
+    assert out.size == 0
+
+
+@pytest.mark.parametrize("alloc_cls", [AdaptiveAllocator, FCFSAllocator])
+def test_single_task_batch(alloc_cls):
+    res_cpu, res_mem = _cluster()
+    out = alloc_cls().allocate_batch(
+        TaskBatch.from_tasks([_task(0)], 0.0), res_cpu, res_mem,
+        _window_empty(), 0.0,
+    )
+    assert out.size == 1
+    assert bool(out.feasible[0]) and bool(out.attempted[0])
+    assert float(out.cpu[0]) == 2000.0 and float(out.mem[0]) == 4000.0
+    assert int(out.node[0]) == 0
+
+
+@pytest.mark.parametrize("alloc_cls", [AdaptiveAllocator, FCFSAllocator])
+def test_all_infeasible_batch(alloc_cls):
+    """Nothing fits: every row rejected, no node assigned, no debits
+    corrupting later rows (row 2's view equals row 0's)."""
+    res_cpu, res_mem = _cluster(n=2, cpu=50.0, mem=50.0)
+    tasks = [_task(i, cpu=4000.0, mem=8000.0, min_cpu=3000.0,
+                   min_mem=6000.0) for i in range(3)]
+    out = alloc_cls().allocate_batch(
+        TaskBatch.from_tasks(tasks, 0.0), res_cpu, res_mem,
+        _window_empty(), 0.0,
+    )
+    assert not out.feasible.any()
+    assert (out.node == -1).all()
+    assert out.attempted.all()  # ready rows are always attempted
+
+
+def test_batch_debits_are_sequential():
+    """Each accepted row shrinks the residuals seen by the next one: a
+    burst that collectively overflows one node spills onto the other, and
+    once both are full the remaining rows are infeasible."""
+    res_cpu, res_mem = _cluster(n=2, cpu=5000.0, mem=10000.0)
+    tasks = [_task(i, cpu=4000.0, mem=8000.0, min_cpu=4000.0,
+                   min_mem=7000.0) for i in range(3)]
+    out = FCFSAllocator().allocate_batch(
+        TaskBatch.from_tasks(tasks, 0.0), res_cpu, res_mem,
+        _window_empty(), 0.0,
+    )
+    assert list(out.feasible) == [True, True, False]
+    assert {int(out.node[0]), int(out.node[1])} == {0, 1}
+
+
+def test_pending_head_of_line_blocking():
+    """Pending rows keep the seed's FIFO head-of-line discipline: after
+    the first pending failure, later pending rows are skipped (not
+    attempted), while ready rows are still tried."""
+    res_cpu, res_mem = _cluster(n=1, cpu=3000.0, mem=6000.0)
+    big = _task(0, cpu=4000.0, mem=8000.0, min_cpu=4000.0, min_mem=7000.0)
+    small = _task(1, cpu=1000.0, mem=2000.0)
+    ready = _task(2, cpu=1000.0, mem=2000.0)
+    batch = TaskBatch.from_tasks(
+        [big, small, ready], 0.0, pending=[True, True, False]
+    )
+    out = FCFSAllocator().allocate_batch(
+        batch, res_cpu, res_mem, _window_empty(), 0.0
+    )
+    assert list(out.attempted) == [True, False, True]
+    assert list(out.feasible) == [False, False, True]

@@ -1,8 +1,11 @@
-"""Algorithm 2 (resource discovery) + Algorithm 1 window accumulation."""
-import hypothesis.strategies as st
+"""Algorithm 2 (resource discovery) + Algorithm 1 window accumulation.
+
+Property-based (hypothesis) companions live in
+``tests/property/test_discovery_props.py`` so this module collects on a
+bare jax+pytest environment.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core import discovery, lifecycle
 from repro.core.types import ClusterSnapshot, TaskWindow
@@ -53,37 +56,6 @@ def test_summary_max_node_tracks_cpu():
     assert float(s["total_cpu"]) == 15000.0
 
 
-@settings(max_examples=100, deadline=None)
-@given(
-    num_nodes=st.integers(min_value=1, max_value=16),
-    pods=st.lists(
-        st.tuples(
-            st.integers(min_value=0, max_value=15),
-            st.floats(min_value=0, max_value=4000),
-            st.floats(min_value=0, max_value=8000),
-            st.booleans(),
-        ),
-        max_size=64,
-    ),
-)
-def test_discovery_matches_loop_oracle(num_nodes, pods):
-    """Vectorized segment-sum == the paper's O(m·p) double loop."""
-    pods = [(n % num_nodes, c, m, a) for (n, c, m, a) in pods]
-    snap = make_snapshot(
-        num_nodes,
-        [p[0] for p in pods] or np.zeros((0,), np.int32),
-        [p[1] for p in pods] or np.zeros((0,), np.float32),
-        [p[2] for p in pods] or np.zeros((0,), np.float32),
-        [p[3] for p in pods] or np.zeros((0,), bool),
-    )
-    rc, rm = discovery.discover(snap)
-    for v in range(num_nodes):  # the Go loop, literally
-        node_req_cpu = sum(c for (n, c, _, a) in pods if n == v and a)
-        node_req_mem = sum(m for (n, _, m, a) in pods if n == v and a)
-        assert float(rc[v]) == pytest.approx(8000.0 - node_req_cpu, rel=1e-4, abs=1e-2)
-        assert float(rm[v]) == pytest.approx(16000.0 - node_req_mem, rel=1e-4, abs=1e-2)
-
-
 # ------------------------------------------------------ lifecycle window
 
 def test_window_demand_includes_in_window_only():
@@ -116,21 +88,36 @@ def test_window_demand_empty_store():
     assert (cpu, mem) == (123.0, 456.0)
 
 
-@settings(max_examples=100, deadline=None)
-@given(
-    starts=st.lists(st.floats(min_value=0, max_value=100), min_size=1, max_size=32),
-    w0=st.floats(min_value=0, max_value=100),
-    dur=st.floats(min_value=0.1, max_value=50),
-)
-def test_window_demand_matches_oracle(starts, w0, dur):
-    n = len(starts)
-    cpu_arr = np.arange(1, n + 1, dtype=np.float32) * 10
-    mem_arr = np.arange(1, n + 1, dtype=np.float32)
-    win = TaskWindow(np.asarray(starts, np.float32), cpu_arr, mem_arr,
-                     np.zeros((n,), bool))
-    cpu, mem = lifecycle.window_demand(win, w0, w0 + dur, 7.0, 3.0)
-    starts32 = np.asarray(starts, np.float32)
-    lo, hi = np.float32(w0), np.float32(w0) + np.float32(dur)
-    mask = (starts32 >= lo) & (starts32 < hi)
-    assert cpu == pytest.approx(7.0 + float(cpu_arr[mask].sum()), rel=1e-5)
-    assert mem == pytest.approx(3.0 + float(mem_arr[mask].sum()), rel=1e-5)
+def test_window_demand_batch_matches_scalar():
+    """The [B,T] mask-matrix form == B scalar reductions, one dispatch."""
+    win = TaskWindow(
+        t_start=np.array([0.0, 5.0, 14.9, 15.0, 20.0], np.float32),
+        cpu=np.array([100, 200, 400, 800, 1600], np.float32),
+        mem=np.array([1, 2, 4, 8, 16], np.float32),
+        done=np.array([False, False, True, False, False]),
+    )
+    ends = [6.0, 15.0, 25.0]
+    own_cpu = [10.0, 20.0, 30.0]
+    own_mem = [1.0, 2.0, 3.0]
+    bc, bm = lifecycle.window_demand_batch(win, 0.0, ends, own_cpu, own_mem)
+    for i in range(3):
+        sc, sm = lifecycle.window_demand(win, 0.0, ends[i], own_cpu[i],
+                                         own_mem[i])
+        assert float(bc[i]) == pytest.approx(sc)
+        assert float(bm[i]) == pytest.approx(sm)
+
+
+def test_window_demand_batch_self_exclusion():
+    """self_slots masks the requester's own record out of the demand."""
+    win = TaskWindow(
+        t_start=np.array([1.0, 2.0], np.float32),
+        cpu=np.array([100.0, 200.0], np.float32),
+        mem=np.array([10.0, 20.0], np.float32),
+        done=np.array([False, False]),
+    )
+    bc, bm = lifecycle.window_demand_batch(
+        win, 0.0, [10.0, 10.0], [0.0, 0.0], [0.0, 0.0], self_slots=[0, 1]
+    )
+    assert float(bc[0]) == pytest.approx(200.0)  # row 0 excluded itself
+    assert float(bc[1]) == pytest.approx(100.0)
+    assert float(bm[1]) == pytest.approx(10.0)

@@ -1,9 +1,12 @@
-"""Exhaustive branch coverage of Algorithm 3 + Eq. 9 properties."""
-import hypothesis.strategies as st
+"""Exhaustive branch coverage of Algorithm 3 + Eq. 9 properties.
+
+Property-based (hypothesis) companions live in
+``tests/property/test_evaluation_props.py`` so this module collects on a
+bare jax+pytest environment.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core.evaluation import EvalInputs, evaluate, evaluate_batch
 
@@ -142,54 +145,3 @@ def test_batch_matches_scalar():
                20000, 40000, 7000, 14000)
         assert float(batch.cpu[i]) == pytest.approx(float(r.cpu))
         assert float(batch.mem[i]) == pytest.approx(float(r.mem))
-
-
-# ----------------------------------------------------------------- property
-
-pos = st.floats(min_value=1.0, max_value=1e6, allow_nan=False, allow_infinity=False)
-
-
-@settings(max_examples=200, deadline=None)
-@given(task_cpu=pos, task_mem=pos, extra_cpu=pos, extra_mem=pos,
-       tot_cpu=pos, tot_mem=pos, frac=st.floats(min_value=0.01, max_value=1.0))
-def test_allocation_invariants(task_cpu, task_mem, extra_cpu, extra_mem,
-                               tot_cpu, tot_mem, frac):
-    """Invariants of Alg. 3 that hold for ALL inputs:
-
-    1. allocations are strictly positive;
-    2. the CPU grant never exceeds max(request, α·Re_max, cpu_cut) — i.e.
-       the evaluator never invents resources beyond its three sources;
-    3. scenario-0 grants equal the request exactly.
-    """
-    remax_cpu, remax_mem = frac * tot_cpu, frac * tot_mem
-    req_cpu, req_mem = task_cpu + extra_cpu, task_mem + extra_mem
-    r = ev(task_cpu, task_mem, req_cpu, req_mem, tot_cpu, tot_mem,
-           remax_cpu, remax_mem)
-    cpu, mem = float(r.cpu), float(r.mem)
-    cpu_cut, mem_cut = cuts(task_cpu, task_mem, req_cpu, req_mem, tot_cpu, tot_mem)
-
-    assert cpu > 0 and mem > 0
-    assert cpu <= max(task_cpu, ALPHA * remax_cpu, cpu_cut) * (1 + 1e-5)
-    assert mem <= max(task_mem, ALPHA * remax_mem, mem_cut) * (1 + 1e-5)
-    if req_cpu < tot_cpu and req_mem < tot_mem:
-        if task_cpu < remax_cpu and task_mem < remax_mem:
-            assert cpu == pytest.approx(task_cpu, rel=1e-5)
-            assert mem == pytest.approx(task_mem, rel=1e-5)
-
-
-@settings(max_examples=100, deadline=None)
-@given(task_cpu=pos, task_mem=pos, mult=st.floats(min_value=1.5, max_value=100.0),
-       tot_cpu=pos, tot_mem=pos)
-def test_scaling_preserves_demand_ratio(task_cpu, task_mem, mult, tot_cpu, tot_mem):
-    """Eq. 9: in the both-insufficient scenario the grant equals the
-    request scaled by residual/demand — proportional fairness across
-    competing in-window tasks."""
-    req_cpu, req_mem = task_cpu * mult * 2, task_mem * mult * 2
-    # force ¬A1 ∧ ¬A2
-    tot_cpu = min(tot_cpu, req_cpu * 0.5)
-    tot_mem = min(tot_mem, req_mem * 0.5)
-    r = ev(task_cpu, task_mem, req_cpu, req_mem, tot_cpu, tot_mem,
-           tot_cpu, tot_mem)
-    assert int(r.scenario) == 3
-    assert float(r.cpu) == pytest.approx(task_cpu * tot_cpu / req_cpu, rel=1e-4)
-    assert float(r.mem) == pytest.approx(task_mem * tot_mem / req_mem, rel=1e-4)
