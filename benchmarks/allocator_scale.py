@@ -21,11 +21,14 @@ Usage::
     PYTHONPATH=src python benchmarks/allocator_scale.py                 # full sweep
     PYTHONPATH=src python benchmarks/allocator_scale.py --nodes 1000    # one size
     PYTHONPATH=src python benchmarks/allocator_scale.py --nodes 1000 --burst 256
+    PYTHONPATH=src python benchmarks/allocator_scale.py --json BENCH_allocator.json
 """
 from __future__ import annotations
 
 import argparse
 import heapq
+import json
+import platform
 import time
 
 import jax
@@ -113,10 +116,7 @@ def bench_engine(num_nodes: int, burst: int, batched: bool,
             if t > 0.0:  # completions etc.: beyond the burst decision
                 break
             eng._now = t
-            if batched:
-                eng._drain_group(kind, payload)
-            else:
-                eng._ready(*payload)
+            eng._drain_group(kind, payload)
         dt = time.perf_counter() - t0
         assert eng.metrics.num_allocations == burst, (
             f"burst not fully placed: {eng.metrics.num_allocations}/{burst}"
@@ -127,7 +127,7 @@ def bench_engine(num_nodes: int, burst: int, batched: bool,
     return min(one_run() for _ in range(repeats))
 
 
-def report_engine(num_nodes: int, burst: int, repeats: int) -> None:
+def report_engine(num_nodes: int, burst: int, repeats: int) -> dict:
     dt_b = bench_engine(num_nodes, burst, batched=True, repeats=repeats)
     dt_p = bench_engine(num_nodes, burst, batched=False, repeats=repeats)
     speedup = dt_p / dt_b
@@ -136,13 +136,27 @@ def report_engine(num_nodes: int, burst: int, repeats: int) -> None:
         f"per_task={1e6*dt_p/burst:.2f}us/decision,"
         f"nodes={num_nodes}|burst={burst}|speedup={speedup:.1f}x"
     )
+    return {
+        "nodes": num_nodes,
+        "burst": burst,
+        "batched_us_per_decision": round(1e6 * dt_b / burst, 3),
+        "per_task_us_per_decision": round(1e6 * dt_p / burst, 3),
+        "speedup": round(speedup, 2),
+    }
 
 
-def report_core(num_nodes: int, burst: int) -> None:
+def report_core(num_nodes: int, burst: int) -> dict:
     dt = bench_core(num_nodes, burst=burst)
-    print(f"allocator_scale_{num_nodes//1000}k,{1e6*dt:.0f},"
+    print(f"allocator_scale_{num_nodes}n,{1e6*dt:.0f},"
           f"nodes={num_nodes}|pods={8*num_nodes}|burst={burst}|"
           f"us_per_decision={1e6*dt/burst:.2f}")
+    return {
+        "nodes": num_nodes,
+        "pods": 8 * num_nodes,
+        "burst": burst,
+        "dispatch_us": round(1e6 * dt, 1),
+        "us_per_decision": round(1e6 * dt / burst, 3),
+    }
 
 
 def main():
@@ -154,6 +168,8 @@ def main():
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-core", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write machine-readable results to PATH")
     args = ap.parse_args()
     if args.nodes is not None and args.nodes <= 0:
         ap.error("--nodes must be positive")
@@ -162,12 +178,26 @@ def main():
 
     core_sizes = [args.nodes] if args.nodes is not None else [1_000, 10_000, 100_000]
     engine_sizes = [args.nodes] if args.nodes is not None else [1_000, 10_000]
+    results = {
+        "benchmark": "allocator_scale",
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "burst": args.burst,
+        "core": [],
+        "engine": [],
+    }
     if not args.skip_core:
         for n in core_sizes:
-            report_core(n, args.burst)
+            results["core"].append(report_core(n, args.burst))
     if not args.skip_engine:
         for n in engine_sizes:
-            report_engine(n, args.burst, args.repeats)
+            results["engine"].append(report_engine(n, args.burst,
+                                                   args.repeats))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(results, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

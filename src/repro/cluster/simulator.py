@@ -62,6 +62,13 @@ class ClusterSim:
         self._alloc_mem = np.full((num_nodes,), node_mem, np.float64)
         self._used_cpu = np.zeros((num_nodes,), np.float64)
         self._used_mem = np.zeros((num_nodes,), np.float64)
+        # O(1) cluster-wide accounting for utilization sampling (the
+        # engine samples on every bind/finish — summing [m] arrays there
+        # dominated large-cluster benchmarks).
+        self._alloc_cpu_total = float(self._alloc_cpu.sum())
+        self._alloc_mem_total = float(self._alloc_mem.sum())
+        self._used_cpu_total = 0.0
+        self._used_mem_total = 0.0
         self._res_cpu32 = np.full((num_nodes,), node_cpu, np.float32)
         self._res_mem32 = np.full((num_nodes,), node_mem, np.float32)
         self._alloc_cpu32 = self._alloc_cpu.astype(np.float32)
@@ -113,6 +120,8 @@ class ClusterSim:
             )
         self._used_cpu[i] += alloc.cpu
         self._used_mem[i] += alloc.mem
+        self._used_cpu_total += alloc.cpu
+        self._used_mem_total += alloc.mem
         self._res_cpu32[i] -= np.float32(alloc.cpu)
         self._res_mem32[i] -= np.float32(alloc.mem)
         if not self._free_slots:
@@ -137,6 +146,8 @@ class ClusterSim:
         i = pod.node
         self._used_cpu[i] -= pod.quota.cpu
         self._used_mem[i] -= pod.quota.mem
+        self._used_cpu_total -= pod.quota.cpu
+        self._used_mem_total -= pod.quota.mem
         assert self._used_cpu[i] >= 0 and self._used_mem[i] >= 0, (i, pod)
         # Resync the float32 mirror from the float64 books on every
         # release: per-op rounding then cannot accumulate across pod
@@ -168,6 +179,14 @@ class ClusterSim:
         """
         return self._res_cpu32, self._res_mem32
 
+    def capacity_view(self):
+        """Float32 per-node allocatable capacity (read-only).
+
+        Feeds capacity-normalized placement scoring (the ``balanced``
+        policy) without a snapshot copy.
+        """
+        return self._alloc_cpu32, self._alloc_mem32
+
     def snapshot(self) -> ClusterSnapshot:
         """Informer-style struct-of-arrays view for the JAX algorithms.
 
@@ -189,10 +208,14 @@ class ClusterSim:
 
     # ------------------------------------------------------------- metrics
     def utilization(self) -> Resources:
-        """Fraction of allocatable capacity currently held by quotas."""
+        """Fraction of allocatable capacity currently held by quotas.
+
+        O(1): reads the incrementally-maintained cluster totals instead of
+        re-summing the node arrays (this runs on every bind/finish).
+        """
         return Resources(
-            float(self._used_cpu.sum() / self._alloc_cpu.sum()),
-            float(self._used_mem.sum() / self._alloc_mem.sum()),
+            self._used_cpu_total / self._alloc_cpu_total,
+            self._used_mem_total / self._alloc_mem_total,
         )
 
     def check_invariants(self) -> None:
@@ -211,6 +234,9 @@ class ClusterSim:
             (cpu, self._used_cpu)
         assert np.abs(mem - self._used_mem).max(initial=0.0) < 1e-3, \
             (mem, self._used_mem)
+        # the O(1) cluster totals must track the per-node books
+        assert abs(self._used_cpu_total - self._used_cpu.sum()) < 1e-3
+        assert abs(self._used_mem_total - self._used_mem.sum()) < 1e-3
         # the float32 residual caches must track the float64 books
         for res32, alloc, used in (
             (self._res_cpu32, self._alloc_cpu, self._used_cpu),

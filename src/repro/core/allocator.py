@@ -8,22 +8,30 @@ allocates the *full* declared request if some node can host it, otherwise
 reports infeasible so the engine queues the task until resources free up.
 
 The allocation unit is the **burst**, not the task: ``allocate_batch``
-decides a whole batch of ready requests in one fused JAX dispatch.  A
-``lax.scan`` walks the batch in admission order so each accepted
-allocation debits node residuals and marks its knowledge-base record as
-started *before* the next task is evaluated — sequentially consistent
-with the paper's one-task-at-a-time loop (gated by the parity suite in
-``tests/test_batch_parity.py``).  The per-request loop body is:
+decides a whole batch of ready requests in one fused JAX dispatch.  The
+paper's loop is sequential by construction — each accepted allocation
+must be visible to the next request — but only through three true carry
+dependencies: the per-node residuals, the cluster totals and the set of
+records stamped ``t_start = now`` mid-burst.  Everything else is hoisted
+into a parallel precompute:
 
-    window demand (Alg. 1 lines 4-13, masked reduction)
-    → cluster summary (Alg. 1 lines 15-23 over the carried residuals)
-    → Resource Evaluator (Alg. 3 branchless lattice)
-    → acceptance gate (Alg. 1 line 27)
-    → pluggable placement (worst_fit | best_fit | first_fit)
+* **window demand** (Alg. 1 lines 4-13) — one ``[B, T]`` masked reduction
+  over the record table at its pre-burst start times
+  (``lifecycle.masked_demand_batch``), plus a ``[B, B]`` *correction
+  table* whose row *i* holds what each mid-burst-stamped record adds to
+  request *i*'s window versus its pre-burst contribution.  The sequential
+  core folds the correction in with a triangular stamped mask — O(B) per
+  step instead of O(T).
+* **cluster totals** (Alg. 1 lines 15-18) — summed once per burst, then
+  debited O(1) per accepted row inside the carry.
 
-The scalar ``allocate`` API is the same kernel at batch size 1, so there
-is exactly one decision path; it also means one host↔device round trip
-per *burst* instead of the seed's ~3 per task.
+The remaining decide→debit→place recurrence runs on a pluggable backend
+(``repro.kernels.alloc_scan``): a ``lax.scan`` reference, or a Pallas TPU
+kernel that keeps the residual tiles resident in VMEM across the whole
+burst.  Decisions are bit-for-bit identical across backends *and* against
+the engine's per-task replay mode (one dispatch per decision, carry
+reconstructed from the engine's incremental caches), gated by
+``tests/test_batch_parity.py`` / ``tests/test_alloc_scan.py``.
 
 Batch and record-table lengths are padded to power-of-two buckets so JIT
 caches stay warm as the knowledge base grows (padding rows carry
@@ -40,13 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import discovery, lifecycle
-from repro.core.evaluation import (
-    FCFS_SCENARIO,
-    SCENARIO_NAMES,
-    EvalInputs,
-    evaluate,
-)
-from repro.core.placement import pick_node
+from repro.core.evaluation import SCENARIO_NAMES
 from repro.core.types import (
     DEFAULT_ALPHA,
     DEFAULT_BETA,
@@ -57,6 +59,8 @@ from repro.core.types import (
     TaskSpec,
     TaskWindow,
 )
+from repro.kernels.alloc_scan import alloc_scan, resolve_backend
+from repro.kernels.alloc_scan.ref import RES_PAD, alloc_step, pad_tiles
 
 
 def _pow2(n: int) -> int:
@@ -64,109 +68,111 @@ def _pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
-@functools.partial(
-    jax.jit, static_argnames=("alpha", "beta", "policy", "mode")
-)
-def _fused_burst(
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _burst_precompute(
     residual_cpu: jax.Array,  # [m] f32 per-node residuals (Alg. 2 output)
     residual_mem: jax.Array,  # [m] f32
+    cap_cpu: jax.Array,  # [m] f32 allocatable capacity (balanced scoring)
+    cap_mem: jax.Array,  # [m] f32
     rec_t_start: jax.Array,  # [T] f32 knowledge-base record table
     rec_cpu: jax.Array,  # [T] f32
     rec_mem: jax.Array,  # [T] f32
     rec_done: jax.Array,  # [T] bool
     b_cpu: jax.Array,  # [B] f32 batch rows, admission order
     b_mem: jax.Array,  # [B] f32
-    b_min_cpu: jax.Array,  # [B] f32
-    b_min_mem: jax.Array,  # [B] f32
     b_wend: jax.Array,  # [B] f32 lifecycle window ends
     b_self: jax.Array,  # [B] int32 record slot to exclude, -1 = none
-    b_attempt: jax.Array,  # [B] bool (False = padding row)
-    b_pending: jax.Array,  # [B] bool (retry-queue row: head-of-line rules)
     now: jax.Array,  # scalar f32
     *,
-    alpha: float,
-    beta: float,
-    policy: str,
     mode: str,
 ):
-    """One dispatch for a whole burst: discover→window→evaluate→place.
+    """Everything the sequential core does NOT need to recompute per step.
 
-    The scan carry holds (node residuals, record start times, head-of-line
-    flag).  Accepting a request debits its quota from the chosen node and
-    stamps its record's ``t_start = now`` — exactly the state transitions
-    the engine performs between two per-task decisions — so step *i+1*
-    observes the cluster precisely as the sequential loop would.
+    Returns residual/capacity tiles, the O(1)-carried totals, the hoisted
+    base window demand and the ``[B, B]`` stamp-correction tables.
     """
     num_slots = rec_t_start.shape[0]
+    num_rows = b_cpu.shape[0]
+    rc2 = pad_tiles(residual_cpu, RES_PAD)
+    rm2 = pad_tiles(residual_mem, RES_PAD)
+    cc2 = pad_tiles(cap_cpu, 0.0)
+    cm2 = pad_tiles(cap_mem, 0.0)
+    # Alg. 1 lines 15-18, hoisted: one [m] reduction per burst; the core
+    # debits the scalars O(1) on every accept.
+    tot_cpu = jnp.sum(residual_cpu)
+    tot_mem = jnp.sum(residual_mem)
+    if mode != "aras":
+        # FCFS never reads the demand terms; stream width-1 placeholders
+        # instead of dense [B, B] zero tables.
+        zeros_b = jnp.zeros((num_rows,), jnp.float32)
+        zeros_bb = jnp.zeros((num_rows, 1), jnp.float32)
+        return (rc2, rm2, cc2, cm2, tot_cpu, tot_mem,
+                zeros_b, zeros_b, zeros_bb, zeros_bb)
+    # Alg. 1 lines 4-13, hoisted: in-window demand of every row against
+    # the record table at its *pre-burst* start times.
     slot_ids = jnp.arange(num_slots, dtype=jnp.int32)
+    base_cpu, base_mem = lifecycle.masked_demand_batch(
+        rec_t_start, rec_cpu, rec_mem, rec_done, slot_ids,
+        now, b_wend, b_cpu, b_mem, b_self,
+    )
+    # Correction tables: delta[i, j] = row j's record demand seen by row
+    # i's window once j is stamped to t_start=now, minus its pre-burst
+    # contribution already inside base[i].  Row j's own column and
+    # slot-less rows are masked; self-exclusion (Alg. 1 line 9) carries
+    # over because slots are unique within a burst.
+    cs = jnp.clip(b_self, 0, num_slots - 1)
+    g_cpu = rec_cpu[cs]
+    g_mem = rec_mem[cs]
+    g_pre = rec_t_start[cs]
+    g_valid = (b_self >= 0) & ~rec_done[cs]
+    not_self = b_self[None, :] != b_self[:, None]
+    w_mask = g_valid[None, :] & not_self
+    w_now = (now < b_wend[:, None]) & w_mask
+    w_pre = ((g_pre[None, :] >= now) & (g_pre[None, :] < b_wend[:, None])
+             & w_mask)
+    dw = w_now.astype(jnp.float32) - w_pre.astype(jnp.float32)
+    delta_cpu = g_cpu[None, :] * dw
+    delta_mem = g_mem[None, :] * dw
+    return (rc2, rm2, cc2, cm2, tot_cpu, tot_mem,
+            base_cpu, base_mem, delta_cpu, delta_mem)
 
-    def step(carry, row):
-        res_cpu, res_mem, t_start, blocked = carry
-        cpu, mem, min_cpu, min_mem, wend, self_slot, attempt_in, pending = row
-        # Head-of-line: once a pending row fails, later pending rows are
-        # skipped (the seed's retry loop breaks at the first failure).
-        attempt = attempt_in & ~(pending & blocked)
-        if mode == "aras":
-            # Alg. 1 lines 4-13: in-window accumulated demand.
-            req_cpu, req_mem = lifecycle.masked_demand(
-                t_start, rec_cpu, rec_mem, rec_done, slot_ids,
-                now, wend, cpu, mem, self_slot,
-            )
-            # Alg. 1 lines 15-23: totals + max-residual node.
-            tot_cpu = jnp.sum(res_cpu)
-            tot_mem = jnp.sum(res_mem)
-            imax = jnp.argmax(res_cpu)
-            result = evaluate(
-                EvalInputs(
-                    task_cpu=cpu,
-                    task_mem=mem,
-                    request_cpu=req_cpu,
-                    request_mem=req_mem,
-                    total_residual_cpu=tot_cpu,
-                    total_residual_mem=tot_mem,
-                    re_max_cpu=res_cpu[imax],
-                    re_max_mem=res_mem[imax],
-                ),
-                alpha,
-            )
-            alloc_cpu, alloc_mem = result.cpu, result.mem
-            scenario = result.scenario
-            # Alg. 1 line 27 acceptance gate.
-            ok = (alloc_cpu >= min_cpu) & (alloc_mem >= min_mem + beta)
-        else:  # fcfs: full declared request, placement-only feasibility
-            alloc_cpu, alloc_mem = cpu, mem
-            scenario = jnp.int32(FCFS_SCENARIO)
-            ok = jnp.bool_(True)
 
-        node, fits_any = pick_node(res_cpu, res_mem, alloc_cpu, alloc_mem,
-                                   policy)
-        accept = attempt & ok & fits_any
-        debit = accept.astype(res_cpu.dtype)
-        res_cpu = res_cpu.at[node].add(-alloc_cpu * debit)
-        res_mem = res_mem.at[node].add(-alloc_mem * debit)
-        # mark_started: the accepted record now competes at its actual
-        # start time, visible to every later request in the burst.
-        started = accept & (self_slot >= 0)
-        slot = jnp.clip(self_slot, 0, num_slots - 1)
-        t_start = t_start.at[slot].set(
-            jnp.where(started, now, t_start[slot])
-        )
-        blocked = blocked | (pending & attempt & ~(ok & fits_any))
-        out = (
-            alloc_cpu,
-            alloc_mem,
-            jnp.where(fits_any, node, jnp.int32(-1)),
-            accept,
-            attempt,
-            scenario,
-        )
-        return (res_cpu, res_mem, t_start, blocked), out
+_core_dispatch = jax.jit(
+    alloc_scan,
+    static_argnames=("alpha", "beta", "policy", "mode", "backend"),
+)
 
-    init = (residual_cpu, residual_mem, rec_t_start, jnp.bool_(False))
-    rows = (b_cpu, b_mem, b_min_cpu, b_min_mem, b_wend, b_self, b_attempt,
-            b_pending)
-    _, outs = jax.lax.scan(step, init, rows)
-    return outs
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "beta", "policy", "mode")
+)
+def _replay_step(
+    residual_cpu, residual_mem, cap_cpu2, cap_mem2,
+    tot_cpu, tot_mem, stamped, blocked,
+    b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
+    delta_cpu, delta_mem, b_self, b_attempt, b_pending,
+    i,
+    *,
+    alpha, beta, policy, mode,
+):
+    """One decision of the per-task replay: the shared step at row ``i``.
+
+    The residual carry is rebuilt from the engine's live float32 caches
+    (tiling and block maxima are exact), so the replay independently
+    verifies that the fused core's in-scan debits and stamps track the
+    host-side state transitions bit-for-bit.
+    """
+    rc2 = pad_tiles(residual_cpu, RES_PAD)
+    rm2 = pad_tiles(residual_mem, RES_PAD)
+    carry = (rc2, rm2, jnp.max(rc2, axis=1), tot_cpu, tot_mem,
+             stamped, blocked)
+    row = (b_cpu[i], b_mem[i], b_min_cpu[i], b_min_mem[i],
+           base_cpu[i], base_mem[i], delta_cpu[i], delta_mem[i],
+           b_self[i], b_attempt[i], b_pending[i], i)
+    carry, out = alloc_step(carry, row, cap_cpu2, cap_mem2,
+                            alpha=alpha, beta=beta, policy=policy, mode=mode)
+    _, _, _, tot_cpu, tot_mem, stamped, blocked = carry
+    return out, tot_cpu, tot_mem, stamped, blocked
 
 
 def _pad_1d(arr: np.ndarray, size: int, fill) -> np.ndarray:
@@ -175,6 +181,49 @@ def _pad_1d(arr: np.ndarray, size: int, fill) -> np.ndarray:
     out = np.full((size,), fill, dtype=arr.dtype)
     out[: arr.shape[0]] = arr
     return out
+
+
+def _device_inputs(
+    batch: TaskBatch,
+    residual_cpu,
+    residual_mem,
+    window: TaskWindow,
+    now: float,
+    cap_cpu,
+    cap_mem,
+):
+    """Pad to shape buckets and stage the burst on device."""
+    n = batch.size
+    nb = _pow2(n)
+    nt = _pow2(window.t_start.shape[0])
+    res_c = jnp.asarray(residual_cpu, jnp.float32)
+    res_m = jnp.asarray(residual_mem, jnp.float32)
+    # Capacity defaults to the current residuals when the caller has no
+    # capacity view (legacy snapshot-less paths); only ``balanced``
+    # scoring reads it.
+    cap_c = res_c if cap_cpu is None else jnp.asarray(cap_cpu, jnp.float32)
+    cap_m = res_m if cap_mem is None else jnp.asarray(cap_mem, jnp.float32)
+    rows = dict(
+        b_cpu=jnp.asarray(_pad_1d(batch.cpu, nb, 0.0)),
+        b_mem=jnp.asarray(_pad_1d(batch.mem, nb, 0.0)),
+        b_min_cpu=jnp.asarray(_pad_1d(batch.min_cpu, nb, 0.0)),
+        b_min_mem=jnp.asarray(_pad_1d(batch.min_mem, nb, 0.0)),
+        b_wend=jnp.asarray(_pad_1d(batch.window_end, nb, 0.0)),
+        b_self=jnp.asarray(_pad_1d(batch.self_slot, nb, -1)),
+        b_attempt=jnp.asarray(_pad_1d(np.ones((n,), bool), nb, False)),
+        b_pending=jnp.asarray(_pad_1d(batch.pending, nb, False)),
+    )
+    recs = dict(
+        rec_t_start=jnp.asarray(
+            _pad_1d(np.asarray(window.t_start, np.float32), nt, 0.0)),
+        rec_cpu=jnp.asarray(
+            _pad_1d(np.asarray(window.cpu, np.float32), nt, 0.0)),
+        rec_mem=jnp.asarray(
+            _pad_1d(np.asarray(window.mem, np.float32), nt, 0.0)),
+        # Padding records are complete zero-demand rows: numerically inert.
+        rec_done=jnp.asarray(_pad_1d(np.asarray(window.done, bool), nt, True)),
+    )
+    return res_c, res_m, cap_c, cap_m, rows, recs, jnp.float32(now)
 
 
 def _dispatch_burst(
@@ -188,35 +237,32 @@ def _dispatch_burst(
     beta: float,
     policy: str,
     mode: str,
+    backend: str,
+    cap_cpu=None,
+    cap_mem=None,
 ) -> BatchAllocation:
-    """Pad to shape buckets, run the fused kernel, sync back **once**."""
+    """Precompute → sequential core → sync back **once**."""
     n = batch.size
     if n == 0:
         return BatchAllocation.empty()
-    nb = _pow2(n)
-    nt = _pow2(window.t_start.shape[0])
-    attempt = _pad_1d(np.ones((n,), bool), nb, False)
-    outs = _fused_burst(
-        jnp.asarray(residual_cpu, jnp.float32),
-        jnp.asarray(residual_mem, jnp.float32),
-        # Padding records are complete zero-demand rows: numerically inert.
-        jnp.asarray(_pad_1d(np.asarray(window.t_start, np.float32), nt, 0.0)),
-        jnp.asarray(_pad_1d(np.asarray(window.cpu, np.float32), nt, 0.0)),
-        jnp.asarray(_pad_1d(np.asarray(window.mem, np.float32), nt, 0.0)),
-        jnp.asarray(_pad_1d(np.asarray(window.done, bool), nt, True)),
-        jnp.asarray(_pad_1d(batch.cpu, nb, 0.0)),
-        jnp.asarray(_pad_1d(batch.mem, nb, 0.0)),
-        jnp.asarray(_pad_1d(batch.min_cpu, nb, 0.0)),
-        jnp.asarray(_pad_1d(batch.min_mem, nb, 0.0)),
-        jnp.asarray(_pad_1d(batch.window_end, nb, 0.0)),
-        jnp.asarray(_pad_1d(batch.self_slot, nb, -1)),
-        jnp.asarray(attempt),
-        jnp.asarray(_pad_1d(batch.pending, nb, False)),
-        jnp.float32(now),
-        alpha=alpha,
-        beta=beta,
-        policy=policy,
-        mode=mode,
+    res_c, res_m, cap_c, cap_m, rows, recs, now32 = _device_inputs(
+        batch, residual_cpu, residual_mem, window, now, cap_cpu, cap_mem
+    )
+    (rc2, rm2, cc2, cm2, tot_c, tot_m, base_c, base_m, dlt_c, dlt_m) = \
+        _burst_precompute(
+            res_c, res_m, cap_c, cap_m,
+            recs["rec_t_start"], recs["rec_cpu"], recs["rec_mem"],
+            recs["rec_done"],
+            rows["b_cpu"], rows["b_mem"], rows["b_wend"], rows["b_self"],
+            now32, mode=mode,
+        )
+    outs = _core_dispatch(
+        rc2, rm2, cc2, cm2, tot_c, tot_m,
+        rows["b_cpu"], rows["b_mem"], rows["b_min_cpu"], rows["b_min_mem"],
+        base_c, base_m, dlt_c, dlt_m,
+        rows["b_self"], rows["b_attempt"], rows["b_pending"],
+        alpha=alpha, beta=beta, policy=policy, mode=mode,
+        backend=resolve_backend(backend),
     )
     # The one host↔device sync of the whole burst.
     cpu, mem, node, feasible, attempted, scenario = jax.device_get(outs)
@@ -228,6 +274,69 @@ def _dispatch_burst(
         attempted=attempted[:n],
         scenario=scenario[:n],
     )
+
+
+class BurstReplay:
+    """Per-task replay of one drained burst — the parity reference.
+
+    The engine (``batch_allocation=False``) decides the same burst one
+    dispatch per row, rebuilding the residual carry from its own
+    incremental caches between decisions, while the demand/stamp carry
+    (totals, stamped mask, head-of-line flag) advances through the same
+    shared step function the fused core scans.  Decisions are therefore
+    bit-for-bit identical to one fused dispatch — that is precisely what
+    ``tests/test_batch_parity.py`` gates.
+    """
+
+    def __init__(self, batch, residual_cpu, residual_mem, window, now,
+                 cap_cpu, cap_mem, *, alpha, beta, policy, mode):
+        self._params = dict(alpha=alpha, beta=beta, policy=policy, mode=mode)
+        res_c, res_m, cap_c, cap_m, rows, recs, now32 = _device_inputs(
+            batch, residual_cpu, residual_mem, window, now, cap_cpu, cap_mem
+        )
+        pre = _burst_precompute(
+            res_c, res_m, cap_c, cap_m,
+            recs["rec_t_start"], recs["rec_cpu"], recs["rec_mem"],
+            recs["rec_done"],
+            rows["b_cpu"], rows["b_mem"], rows["b_wend"], rows["b_self"],
+            now32, mode=mode,
+        )
+        (_, _, self._cc2, self._cm2, self._tot_c, self._tot_m,
+         self._base_c, self._base_m, self._dlt_c, self._dlt_m) = pre
+        self._rows = rows
+        num_rows = rows["b_cpu"].shape[0]
+        self._stamped = jnp.zeros((num_rows,), jnp.float32)
+        self._blocked = jnp.bool_(False)
+
+    def step(self, i: int, residual_cpu, residual_mem
+             ) -> Tuple[Allocation, bool]:
+        """Decide row ``i`` against the engine's current residuals."""
+        rows = self._rows
+        out, self._tot_c, self._tot_m, self._stamped, self._blocked = \
+            _replay_step(
+                jnp.asarray(residual_cpu, jnp.float32),
+                jnp.asarray(residual_mem, jnp.float32),
+                self._cc2, self._cm2, self._tot_c, self._tot_m,
+                self._stamped, self._blocked,
+                rows["b_cpu"], rows["b_mem"], rows["b_min_cpu"],
+                rows["b_min_mem"], self._base_c, self._base_m,
+                self._dlt_c, self._dlt_m,
+                rows["b_self"], rows["b_attempt"], rows["b_pending"],
+                jnp.int32(i),
+                **self._params,
+            )
+        alloc_c, alloc_m, node, accept, attempted, scenario = \
+            jax.device_get(out)
+        return (
+            Allocation(
+                cpu=float(alloc_c),
+                mem=float(alloc_m),
+                node=int(node),
+                feasible=bool(accept),
+                scenario=SCENARIO_NAMES[int(scenario)],
+            ),
+            bool(attempted),
+        )
 
 
 def allocation_at(result: BatchAllocation, i: int) -> Allocation:
@@ -246,15 +355,18 @@ class AdaptiveAllocator:
     """ARAS — Algorithm 1, burst-at-a-time.
 
     ``allocate_batch`` runs the paper's ``for each task pod's resource
-    request`` loop as one fused scan; rows rejected by the line-27
+    request`` loop as one fused dispatch; rows rejected by the line-27
     acceptance gate come back ``feasible=False`` and the engine re-queues
     them until a cluster-state change — identical to the paper's blocking
-    behaviour.  ``allocate`` is the same kernel at batch size 1.
+    behaviour.  ``allocate`` is the same pipeline at batch size 1.
+    ``backend`` selects the sequential core: ``auto`` | ``scan`` |
+    ``pallas`` (see ``repro.kernels.alloc_scan``).
     """
 
     alpha: float = DEFAULT_ALPHA
     beta: float = DEFAULT_BETA
     placement: str = "worst_fit"
+    backend: str = "auto"
 
     name: str = "aras"
     mode = "aras"
@@ -266,9 +378,28 @@ class AdaptiveAllocator:
         residual_mem,
         window: TaskWindow,
         now: float,
+        cap_cpu=None,
+        cap_mem=None,
     ) -> BatchAllocation:
         return _dispatch_burst(
             batch, residual_cpu, residual_mem, window, now,
+            alpha=self.alpha, beta=self.beta, policy=self.placement,
+            mode=self.mode, backend=self.backend,
+            cap_cpu=cap_cpu, cap_mem=cap_mem,
+        )
+
+    def begin_replay(
+        self,
+        batch: TaskBatch,
+        residual_cpu,
+        residual_mem,
+        window: TaskWindow,
+        now: float,
+        cap_cpu=None,
+        cap_mem=None,
+    ) -> BurstReplay:
+        return BurstReplay(
+            batch, residual_cpu, residual_mem, window, now, cap_cpu, cap_mem,
             alpha=self.alpha, beta=self.beta, policy=self.placement,
             mode=self.mode,
         )
@@ -286,6 +417,7 @@ class AdaptiveAllocator:
         result = self.allocate_batch(
             TaskBatch.from_tasks([task], now), residual_cpu, residual_mem,
             window, now,
+            cap_cpu=snapshot.allocatable_cpu, cap_mem=snapshot.allocatable_mem,
         )
         return allocation_at(result, 0)
 
@@ -300,6 +432,7 @@ class FCFSAllocator:
     """
 
     placement: str = "worst_fit"
+    backend: str = "auto"
 
     name: str = "fcfs"
     mode = "fcfs"
@@ -311,9 +444,27 @@ class FCFSAllocator:
         residual_mem,
         window: TaskWindow,
         now: float,
+        cap_cpu=None,
+        cap_mem=None,
     ) -> BatchAllocation:
         return _dispatch_burst(
             batch, residual_cpu, residual_mem, window, now,
+            alpha=0.0, beta=0.0, policy=self.placement, mode=self.mode,
+            backend=self.backend, cap_cpu=cap_cpu, cap_mem=cap_mem,
+        )
+
+    def begin_replay(
+        self,
+        batch: TaskBatch,
+        residual_cpu,
+        residual_mem,
+        window: TaskWindow,
+        now: float,
+        cap_cpu=None,
+        cap_mem=None,
+    ) -> BurstReplay:
+        return BurstReplay(
+            batch, residual_cpu, residual_mem, window, now, cap_cpu, cap_mem,
             alpha=0.0, beta=0.0, policy=self.placement, mode=self.mode,
         )
 
@@ -328,6 +479,7 @@ class FCFSAllocator:
         result = self.allocate_batch(
             TaskBatch.from_tasks([task], now), residual_cpu, residual_mem,
             window, now,
+            cap_cpu=snapshot.allocatable_cpu, cap_mem=snapshot.allocatable_mem,
         )
         return allocation_at(result, 0)
 
@@ -337,6 +489,7 @@ def make_allocator(name: str, **kwargs) -> AdaptiveAllocator | FCFSAllocator:
         return AdaptiveAllocator(**kwargs)
     if name in ("fcfs", "baseline"):
         return FCFSAllocator(
-            **{k: v for k, v in kwargs.items() if k == "placement"}
+            **{k: v for k, v in kwargs.items()
+               if k in ("placement", "backend")}
         )
     raise ValueError(f"unknown allocator {name!r} (want 'aras' or 'fcfs')")

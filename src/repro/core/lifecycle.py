@@ -6,19 +6,21 @@ task whose start time falls inside the current task's lifecycle window
 request (paper Fig. 1).  The Go original iterates the Redis task map; here
 it is one masked reduction.
 
-Three entry points share one masked kernel:
+Entry points sharing one masked kernel:
 
-* :func:`masked_demand` — traced helper used *inside* the fused
-  burst-allocation scan (``repro.core.allocator``), where a task's record
-  must be excluded by slot index (the knowledge base keeps every record,
-  including the requester's own) and accepted allocations update
-  ``t_start`` between scan steps.
+* :func:`masked_demand` — traced scalar helper; a task's record is
+  excluded by slot index (the knowledge base keeps every record,
+  including the requester's own).
+* :func:`masked_demand_batch` — its vmapped ``[B, T]`` form.  The fused
+  burst allocator (``repro.core.allocator``) calls it inside its
+  precompute to hoist every row's *base* demand (record table at
+  pre-burst start times) out of the sequential core; mid-burst
+  ``t_start`` stamps are folded back in via a ``[B, B]`` correction
+  table, so each accepted allocation stays visible to later rows.
 * :func:`window_demand` — legacy scalar API (one task, pre-filtered
   window), kept for ``MapeK`` / ``mljobs`` / direct callers.
-* :func:`window_demand_batch` — one dispatch for a whole burst: a
-  tasks × records mask matrix reduced along the record axis.  This is the
-  static form (no inter-task residual coupling); the engine's fused path
-  uses the scan form so each accepted allocation is visible to the next.
+* :func:`window_demand_batch` — jitted host-facing wrapper of the
+  batched form.
 """
 from __future__ import annotations
 
@@ -79,13 +81,16 @@ def _window_demand(
 
 # Batched form: [B] windows × [T] records in one dispatch — the mask is a
 # [B, T] matrix reduced along the record axis.  Shared-window terms
-# broadcast; per-task terms batch on the leading axis.
-_window_demand_batch = jax.jit(
-    jax.vmap(
-        masked_demand,
-        in_axes=(None, None, None, None, None, None, 0, 0, 0, 0),
-    )
+# broadcast; per-task terms batch on the leading axis.  ``masked_demand_batch``
+# is the *traceable* form: the fused burst allocator calls it inside its own
+# jit to hoist the whole burst's base demand out of the sequential scan
+# (one [B, T] reduction instead of B per-step [T] reductions).
+masked_demand_batch = jax.vmap(
+    masked_demand,
+    in_axes=(None, None, None, None, None, None, 0, 0, 0, 0),
 )
+
+_window_demand_batch = jax.jit(masked_demand_batch)
 
 
 def window_demand(

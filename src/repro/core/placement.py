@@ -2,7 +2,7 @@
 
 The paper delegates placement to the default K8s scheduler; the seed
 hard-coded worst-fit (max-residual-CPU node, mirroring ARAS's orientation
-toward the max-residual node, Alg. 1 lines 19-22).  Placement is now a
+toward the max-residual node, Alg. 1 lines 19-22).  Placement is a
 policy selected via ``EngineConfig.placement``:
 
 * ``worst_fit``  — max residual CPU among fitting nodes (seed behaviour;
@@ -11,16 +11,24 @@ policy selected via ``EngineConfig.placement``:
   preserves large holes for big requests)
 * ``first_fit``  — lowest node index that fits (cheapest mental model,
   matches kube-scheduler's score-less fallback)
+* ``balanced``   — kube-scheduler NodeResourcesFit least-allocated score:
+  the mean of the post-placement free CPU and memory *fractions*
+  ``((res−req)/cap)``, so a node with slack in both dimensions beats one
+  maxed out on either.  Needs per-node allocatable capacities.
 
-Each policy reduces to ``argmax(where(fits, score, -inf))`` over a
-per-node score, so the choice compiles into the single fused allocation
-dispatch with no host round-trip and no data-dependent branching.  Ties
-resolve to the lowest node index (argmax-first semantics), identical to
-the seed's ``np.argmax``.
+Each policy reduces to ``argmax`` over a per-node *key* — the policy
+score where the pod fits, ``-inf`` elsewhere — so the choice compiles
+into the fused allocation dispatch with no host round-trip and no
+data-dependent branching.  ``placement_key`` is shape-polymorphic: the
+allocator's sequential core evaluates it over ``[num_blocks, lane]``
+residual tiles (two-stage block argmax on CPU/TPU-scan, flat min-index
+argmax inside the Pallas kernel — identical results, since max/compare
+are exact).  Ties resolve to the lowest node index (argmax-first
+semantics), identical to the seed's ``np.argmax``.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,21 +36,64 @@ import jax.numpy as jnp
 # Fit slack mirroring the seed's ``_best_node_for`` epsilon.
 _FIT_EPS = 1e-6
 
-PLACEMENT_POLICIES = ("worst_fit", "best_fit", "first_fit")
+PLACEMENT_POLICIES = ("worst_fit", "best_fit", "first_fit", "balanced")
 
 
-def placement_score(policy: str, residual_cpu: jax.Array) -> jax.Array:
-    """Per-node score whose argmax (over fitting nodes) picks the pod host."""
+def _node_index(residual_cpu: jax.Array) -> jax.Array:
+    """Flat node index per entry, whatever the tile shape ([m] or [nb, L])."""
+    if residual_cpu.ndim == 1:
+        return jnp.arange(residual_cpu.shape[0], dtype=jnp.int32)
+    nb, lane = residual_cpu.shape
+    blk = jax.lax.broadcasted_iota(jnp.int32, (nb, lane), 0)
+    off = jax.lax.broadcasted_iota(jnp.int32, (nb, lane), 1)
+    return blk * lane + off
+
+
+def placement_key(
+    policy: str,
+    residual_cpu: jax.Array,
+    residual_mem: jax.Array,
+    cpu: jax.Array,
+    mem: jax.Array,
+    cap_cpu: Optional[jax.Array] = None,
+    cap_mem: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Per-node argmax key for one (cpu, mem) quota: score or ``-inf``.
+
+    Works on flat ``[m]`` residuals and on ``[nb, lane]`` tiles alike
+    (padding entries must carry large-negative residuals so they never
+    fit).  ``balanced`` requires ``cap_cpu``/``cap_mem`` (allocatable
+    capacity, same shape as the residuals).
+    """
+    fits = (residual_cpu >= cpu - _FIT_EPS) & (residual_mem >= mem - _FIT_EPS)
     if policy == "worst_fit":
-        return residual_cpu
-    if policy == "best_fit":
-        return -residual_cpu
-    if policy == "first_fit":
+        score = residual_cpu
+    elif policy == "best_fit":
+        score = -residual_cpu
+    elif policy == "first_fit":
         # Strictly decreasing in the index: argmax = first fitting node.
-        return -jnp.arange(residual_cpu.shape[0], dtype=residual_cpu.dtype)
-    raise ValueError(
-        f"unknown placement policy {policy!r} (want one of {PLACEMENT_POLICIES})"
-    )
+        score = -_node_index(residual_cpu).astype(residual_cpu.dtype)
+    elif policy == "balanced":
+        if cap_cpu is None or cap_mem is None:
+            raise ValueError(
+                "placement policy 'balanced' needs per-node allocatable "
+                "capacities (cap_cpu/cap_mem)"
+            )
+        # NodeResourcesFit least-allocated: mean free fraction after
+        # hosting the pod.  Guard capacities so padding lanes (or an
+        # empty node) cannot poison the key with inf/nan — they are
+        # excluded by ``fits`` anyway.
+        safe_ccpu = jnp.maximum(cap_cpu, _FIT_EPS)
+        safe_cmem = jnp.maximum(cap_mem, _FIT_EPS)
+        score = 0.5 * (
+            (residual_cpu - cpu) / safe_ccpu + (residual_mem - mem) / safe_cmem
+        )
+    else:
+        raise ValueError(
+            f"unknown placement policy {policy!r} "
+            f"(want one of {PLACEMENT_POLICIES})"
+        )
+    return jnp.where(fits, score, -jnp.inf)
 
 
 def pick_node(
@@ -51,13 +102,15 @@ def pick_node(
     cpu: jax.Array,
     mem: jax.Array,
     policy: str,
+    cap_cpu: Optional[jax.Array] = None,
+    cap_mem: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Choose a host for a (cpu, mem) quota; vmap/scan-safe.
 
     Returns ``(node, fits_any)`` where ``node`` is the policy's argmax over
     fitting nodes (0 when nothing fits — callers must gate on ``fits_any``).
     """
-    fits = (residual_cpu >= cpu - _FIT_EPS) & (residual_mem >= mem - _FIT_EPS)
-    score = placement_score(policy, residual_cpu)
-    node = jnp.argmax(jnp.where(fits, score, -jnp.inf)).astype(jnp.int32)
-    return node, jnp.any(fits)
+    key = placement_key(policy, residual_cpu, residual_mem, cpu, mem,
+                        cap_cpu, cap_mem)
+    node = jnp.argmax(key).astype(jnp.int32)
+    return node, key[node] > -jnp.inf

@@ -20,10 +20,16 @@ fused MAPE-K cycle for the whole burst) instead of one cycle per task.
 The batched retry preserves the seed's FIFO admission order *and* its
 head-of-line discipline (§6.1.6: the engine "waits ... for the CURRENT
 task request"): pending rows go first, and once one fails the rest of the
-queue is skipped, exactly as the sequential loop would.  Decisions are
-bit-for-bit identical to the per-task path (``batch_allocation=False``)
-because both run the same fused kernel against the same incremental
-float32 caches — see ``tests/test_batch_parity.py``.
+queue is skipped, exactly as the sequential loop would.
+
+Per-task mode (``batch_allocation=False``) drains the same burst but
+*replays* it one dispatch per row — each decision syncs back to the host,
+binds, and the next row's residual carry is rebuilt from the engine's
+incremental float32 caches (``repro.core.allocator.BurstReplay``).  Both
+modes execute the same step arithmetic against the same caches, so
+decisions are bit-for-bit identical — see ``tests/test_batch_parity.py``
+— while the replay independently verifies that the fused core's in-scan
+debits and record stamps track the engine's host-side state transitions.
 """
 from __future__ import annotations
 
@@ -68,11 +74,15 @@ class EngineConfig:
     alpha: float = 0.8
     beta: float = DEFAULT_BETA
     # Placement policy inside the fused dispatch (repro.core.placement):
-    # "worst_fit" (seed behaviour) | "best_fit" | "first_fit".
+    # "worst_fit" (seed behaviour) | "best_fit" | "first_fit" | "balanced"
+    # (kube-scheduler NodeResourcesFit least-allocated scoring).
     placement: str = "worst_fit"
+    # Sequential-core backend (repro.kernels.alloc_scan): "auto" picks the
+    # Pallas kernel on TPU and the lax.scan reference elsewhere.
+    alloc_backend: str = "auto"
     # Burst-at-a-time allocation (one fused dispatch per timestamp burst).
-    # False falls back to one dispatch per task — same kernel at batch
-    # size 1, kept as the parity reference and for bisecting regressions.
+    # False replays the same burst one dispatch per row — the bit-for-bit
+    # parity reference and the bisecting tool for kernel regressions.
     batch_allocation: bool = True
     # Per-event O(nodes+pods) accounting cross-checks; disable for
     # large-scale benchmarking.
@@ -142,7 +152,8 @@ class KubeAdaptor:
     def __init__(self, config: EngineConfig):
         self.cfg = config
         self.cluster = ClusterSim(config.num_nodes, config.node_cpu, config.node_mem)
-        kwargs = {"placement": config.placement}
+        kwargs = {"placement": config.placement,
+                  "backend": config.alloc_backend}
         if config.allocator == "aras":
             kwargs.update(alpha=config.alpha, beta=config.beta)
         self.allocator = make_allocator(config.allocator, **kwargs)
@@ -190,15 +201,9 @@ class KubeAdaptor:
             self._push(self._now, _READY, (spec.workflow_id, tid))
 
     # --------------------------------------------------- burst allocation
-    def _decide(self, entries: List[Tuple[str, TaskSpec, str]]
-                ) -> BatchAllocation:
-        """One fused MAPE-K cycle for a burst of task requests.
-
-        Monitor reads the incremental caches (no snapshot rebuild);
-        Analyse/Plan run inside the allocator's single dispatch; Execute
-        happens in ``_apply``/``_bind`` from the one synced result.
-        """
-        batch = TaskBatch.from_tasks(
+    def _batch_of(self, entries: List[Tuple[str, TaskSpec, str]]
+                  ) -> TaskBatch:
+        return TaskBatch.from_tasks(
             [task for _, task, _ in entries],
             self._now,
             self_slots=[
@@ -207,10 +212,49 @@ class KubeAdaptor:
             ],
             pending=[origin == "pending" for _, _, origin in entries],
         )
+
+    def _decide(self, entries: List[Tuple[str, TaskSpec, str]]
+                ) -> BatchAllocation:
+        """One fused MAPE-K cycle for a burst of task requests.
+
+        Monitor reads the incremental caches (no snapshot rebuild);
+        Analyse/Plan run inside the allocator's single dispatch; Execute
+        happens in ``_allocate_group``/``_bind`` from the one synced
+        result.
+        """
         res_cpu, res_mem = self.cluster.residual_view()
+        cap_cpu, cap_mem = self.cluster.capacity_view()
         return self.allocator.allocate_batch(
-            batch, res_cpu, res_mem, self.store.window(), self._now
+            self._batch_of(entries), res_cpu, res_mem, self.store.window(),
+            self._now, cap_cpu=cap_cpu, cap_mem=cap_mem,
         )
+
+    def _decision_rows(self, entries: List[Tuple[str, TaskSpec, str]]):
+        """Yield (feasible, attempted, Allocation) per entry, in order.
+
+        Batched mode decides everything in one fused dispatch up front;
+        per-task mode replays the same burst one dispatch per row, reading
+        the engine's live residual caches *after* each preceding bind (the
+        generator suspends at ``yield`` while the consumer applies the
+        decision) — the sequential MAPE-K reference.
+        """
+        if self.cfg.batch_allocation:
+            result = self._decide(entries)
+            for i in range(len(entries)):
+                yield (bool(result.feasible[i]), bool(result.attempted[i]),
+                       allocation_at(result, i))
+        else:
+            res_cpu, res_mem = self.cluster.residual_view()
+            cap_cpu, cap_mem = self.cluster.capacity_view()
+            replay = self.allocator.begin_replay(
+                self._batch_of(entries), res_cpu, res_mem,
+                self.store.window(), self._now,
+                cap_cpu=cap_cpu, cap_mem=cap_mem,
+            )
+            for i in range(len(entries)):
+                res_cpu, res_mem = self.cluster.residual_view()
+                alloc, attempted = replay.step(i, res_cpu, res_mem)
+                yield alloc.feasible, attempted, alloc
 
     def _bind(self, wf_id: str, task: TaskSpec, alloc: Allocation) -> None:
         """Execute phase: Containerized Executor creates the pod."""
@@ -244,16 +288,17 @@ class KubeAdaptor:
                        for wf_id, task in self._pending] + entries
         if not entries:
             return
-        result = self._decide(entries)
         kept: Deque[Tuple[str, TaskSpec]] = deque()
         failed: List[Tuple[str, TaskSpec]] = []
-        for i, (wf_id, task, origin) in enumerate(entries):
-            if result.feasible[i]:
-                self._bind(wf_id, task, allocation_at(result, i))
+        rows = self._decision_rows(entries)
+        for (wf_id, task, origin), (feasible, attempted, alloc) in zip(
+                entries, rows):
+            if feasible:
+                self._bind(wf_id, task, alloc)
             elif origin == "pending":
                 # Skipped rows (head-of-line) were never attempted and do
                 # not count as waits, matching the sequential retry loop.
-                if result.attempted[i]:
+                if attempted:
                     self.metrics.num_waits += 1
                 kept.append((wf_id, task))
             else:
@@ -269,10 +314,13 @@ class KubeAdaptor:
         """Fold every same-timestamp retry/ready/heal event into one burst.
 
         Events are consumed in heap order (kind, then sequence), so the
-        batch rows land in exactly the order the per-task loop would have
-        decided them; virtual tasks complete inline, which may surface
-        more same-timestamp READY events — the loop keeps draining until
-        the next event belongs to a later timestamp or another kind.
+        batch rows land in exactly the order the sequential loop would
+        have decided them; virtual tasks complete inline, which may
+        surface more same-timestamp READY events — the loop keeps
+        draining until the next event belongs to a later timestamp or
+        another kind.  Both engine modes share this drain; they differ
+        only in how the group is decided (one fused dispatch vs the
+        row-at-a-time replay — see ``_decision_rows``).
         """
         include_pending = False
         entries: List[Tuple[str, TaskSpec, str]] = []
@@ -299,48 +347,6 @@ class KubeAdaptor:
             else:
                 break
         self._allocate_group(entries, include_pending)
-
-    # ------------------------------------------------- per-task reference
-    def _try_allocate(self, wf_id: str, task: TaskSpec) -> bool:
-        """One MAPE-K cycle for one task — the fused kernel at batch 1."""
-        result = self._decide([(wf_id, task, "ready")])
-        if not result.feasible[0]:
-            self.metrics.num_waits += 1
-            return False
-        self._bind(wf_id, task, allocation_at(result, 0))
-        return True
-
-    def _ready(self, wf_id: str, tid: str) -> None:
-        task = self.runs[wf_id].spec.tasks[tid]
-        if task.cpu == 0 and task.mem == 0:
-            # Virtual entrance/exit: complete instantly, no pod.
-            self._task_done(wf_id, tid)
-            return
-        if not self._try_allocate(wf_id, task):
-            self._pending.append((wf_id, task))
-
-    def _heal_one(self, wf_id: str, task: TaskSpec) -> None:
-        self.metrics.realloc_events.append(
-            (self._now, f"{wf_id}/{task.task_id}")
-        )
-        if not self._try_allocate(wf_id, task):
-            self._pending.append((wf_id, task))
-
-    def _retry_pending(self) -> None:
-        """Re-try the wait queue after a resource release.
-
-        Strict FIFO with head-of-line blocking, as in the paper's
-        baseline (§6.1.6: the engine "waits for other task pods to
-        complete and release resources to meet the resource reallocation
-        for the CURRENT task request") — if the head cannot allocate,
-        everything behind it keeps waiting.  Both allocators share the
-        discipline; ARAS rarely blocks because it scales instead.
-        """
-        while self._pending:
-            wf_id, task = self._pending[0]
-            if not self._try_allocate(wf_id, task):
-                break
-            self._pending.popleft()
 
     # --------------------------------------------------------- completion
     def _task_done(self, wf_id: str, tid: str) -> None:
@@ -387,7 +393,6 @@ class KubeAdaptor:
     # ------------------------------------------------------------ run loop
     def run(self) -> EngineMetrics:
         t_first: Optional[float] = None
-        batched = self.cfg.batch_allocation
         while self._events:
             t, kind, _, payload = heapq.heappop(self._events)
             if t > self.cfg.max_time:
@@ -403,14 +408,8 @@ class KubeAdaptor:
                 self._oom(*payload)
             elif kind == _DELETE:
                 self.cluster.delete(*payload)
-            elif batched and kind in _DRAIN_KINDS:
+            elif kind in _DRAIN_KINDS:
                 self._drain_group(kind, payload)
-            elif kind == _READY:
-                self._ready(*payload)
-            elif kind == _RETRY:
-                self._retry_pending()
-            elif kind == _HEAL:
-                self._heal_one(*payload)
             if self.cfg.invariant_checks:
                 self.cluster.check_invariants()
 

@@ -1,0 +1,9 @@
+"""Sequential burst-allocation core (decide → debit → place).
+
+``ref.py`` is the ``lax.scan`` reference; ``kernel.py`` the Pallas TPU
+lowering (residuals resident in VMEM across the whole burst); ``ops.py``
+the backend dispatcher used by ``repro.core.allocator``.
+"""
+from repro.kernels.alloc_scan.ops import alloc_scan, resolve_backend
+
+__all__ = ["alloc_scan", "resolve_backend"]

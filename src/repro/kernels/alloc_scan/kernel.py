@@ -1,0 +1,229 @@
+"""Burst allocation scan (decide → debit → place) — Pallas TPU.
+
+The sequential core of ``repro.core.allocator``: B task requests walk the
+carry (residual tiles, scalar totals, stamped mask, head-of-line flag) in
+admission order.  TPU-native blocking follows ``mamba_scan``: the grid's
+single (minor, sequential) dimension walks row chunks; the carry lives in
+VMEM/SMEM scratch for the whole burst (never returns to HBM), and each
+chunk streams only its row scalars and its ``[chunk, B]`` slab of the
+mid-burst correction tables.  Within a chunk the recurrence is a short
+``fori_loop``; every step is branchless — the Alg. 3 evaluator lattice,
+the placement key and both argmaxes (flat max + min-index, exact
+first-index tie semantics) are VPU element-wise ops over the resident
+``[num_blocks, LANE]`` residual tiles.
+
+Decisions are bit-for-bit identical to ``ref.alloc_scan_ref``: max /
+compare / select are exact, and all rounding arithmetic (demand
+correction, evaluator, debits) uses the same float32 expressions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.evaluation import FCFS_SCENARIO, EvalInputs, evaluate
+from repro.core.placement import placement_key
+
+from repro.kernels.alloc_scan.ref import LANE
+
+_BIG_I32 = 2**31 - 1  # python int: traced literals may not be captured
+
+
+def _flat_argmax(x: jax.Array, flat_idx: jax.Array):
+    """(max value, first flat index attaining it) — both exact."""
+    m = jnp.max(x)
+    idx = jnp.min(jnp.where(x == m, flat_idx,
+                            jnp.full_like(flat_idx, _BIG_I32)))
+    return m, idx
+
+
+def _pick(x: jax.Array, flat_idx: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather x[idx] from tiles via a one-hot masked sum (exact)."""
+    return jnp.sum(jnp.where(flat_idx == idx, x, jnp.zeros_like(x)))
+
+
+def _scan_kernel(
+    # inputs
+    rc2_ref, rm2_ref, cc2_ref, cm2_ref, tot_c_ref, tot_m_ref,
+    cpu_ref, mem_ref, min_cpu_ref, min_mem_ref, base_c_ref, base_m_ref,
+    dc_ref, dm_ref, self_ref, attempt_ref, pending_ref,
+    # outputs
+    alloc_c_ref, alloc_m_ref, node_ref, accept_ref, attempted_ref,
+    scenario_ref,
+    # scratch
+    rc_s, rm_s, stamped_s, tot_s, blocked_s,
+    *,
+    chunk: int,
+    alpha: float,
+    beta: float,
+    policy: str,
+    mode: str,
+):
+    si = pl.program_id(0)
+    nb, lane = rc_s.shape
+    num_rows = stamped_s.shape[1]
+    blk_ids = jax.lax.broadcasted_iota(jnp.int32, (nb, lane), 0)
+    off_ids = jax.lax.broadcasted_iota(jnp.int32, (nb, lane), 1)
+    flat_idx = blk_ids * lane + off_ids
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (1, num_rows), 1)[0]
+
+    @pl.when(si == 0)
+    def _init():
+        rc_s[...] = rc2_ref[...]
+        rm_s[...] = rm2_ref[...]
+        stamped_s[...] = jnp.zeros_like(stamped_s)
+        tot_s[0] = tot_c_ref[0, 0]
+        tot_s[1] = tot_m_ref[0, 0]
+        blocked_s[0] = jnp.int32(0)
+
+    def step(t, _):
+        rid = si * chunk + t
+        rc2, rm2 = rc_s[...], rm_s[...]
+        stamped = stamped_s[0]
+        cpu, mem = cpu_ref[t], mem_ref[t]
+        self_slot = self_ref[t]
+        pending = pending_ref[t] != 0
+        blocked = blocked_s[0] != 0
+        attempt = (attempt_ref[t] != 0) & ~(pending & blocked)
+        if mode == "aras":
+            req_c = base_c_ref[t] + jnp.sum(dc_ref[t] * stamped)
+            req_m = base_m_ref[t] + jnp.sum(dm_ref[t] * stamped)
+            re_max_cpu, imax = _flat_argmax(rc2, flat_idx)
+            re_max_mem = _pick(rm2, flat_idx, imax)
+            result = evaluate(
+                EvalInputs(
+                    task_cpu=cpu,
+                    task_mem=mem,
+                    request_cpu=req_c,
+                    request_mem=req_m,
+                    total_residual_cpu=tot_s[0],
+                    total_residual_mem=tot_s[1],
+                    re_max_cpu=re_max_cpu,
+                    re_max_mem=re_max_mem,
+                ),
+                alpha,
+            )
+            alloc_c, alloc_m = result.cpu, result.mem
+            scenario = result.scenario
+            ok = (alloc_c >= min_cpu_ref[t]) & (alloc_m >= min_mem_ref[t] + beta)
+        else:  # fcfs
+            alloc_c, alloc_m = cpu, mem
+            scenario = jnp.int32(FCFS_SCENARIO)
+            ok = jnp.bool_(True)
+
+        key = placement_key(policy, rc2, rm2, alloc_c, alloc_m,
+                            cc2_ref[...], cm2_ref[...])
+        kmax, node = _flat_argmax(key, flat_idx)
+        fits_any = kmax > -jnp.inf
+
+        accept = attempt & ok & fits_any
+        debit = accept.astype(rc2.dtype)
+        hit = flat_idx == node
+        rc_s[...] = rc2 - jnp.where(hit, alloc_c * debit, 0.0)
+        rm_s[...] = rm2 - jnp.where(hit, alloc_m * debit, 0.0)
+        tot_s[0] = tot_s[0] - alloc_c * debit
+        tot_s[1] = tot_s[1] - alloc_m * debit
+        stamped_s[0] = jnp.where((row_ids == rid) & (self_slot >= 0),
+                                 debit, stamped)
+        blocked_s[0] = (blocked | (pending & attempt & ~(ok & fits_any))
+                        ).astype(jnp.int32)
+
+        alloc_c_ref[t] = alloc_c
+        alloc_m_ref[t] = alloc_m
+        node_ref[t] = jnp.where(fits_any, node, jnp.int32(-1))
+        accept_ref[t] = accept.astype(jnp.int32)
+        attempted_ref[t] = attempt.astype(jnp.int32)
+        scenario_ref[t] = scenario
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk", "alpha", "beta", "policy", "mode", "interpret"),
+)
+def alloc_scan_pallas(
+    rc2: jax.Array,  # [nb, LANE] f32 residual tiles (RES_PAD padded)
+    rm2: jax.Array,
+    cap_cpu2: jax.Array,
+    cap_mem2: jax.Array,
+    tot_cpu: jax.Array,  # scalar f32
+    tot_mem: jax.Array,
+    b_cpu: jax.Array,  # [B] f32
+    b_mem: jax.Array,
+    b_min_cpu: jax.Array,
+    b_min_mem: jax.Array,
+    base_cpu: jax.Array,  # [B] f32 hoisted window demand
+    base_mem: jax.Array,
+    delta_cpu: jax.Array,  # [B, B] f32
+    delta_mem: jax.Array,
+    b_self: jax.Array,  # [B] int32
+    b_attempt: jax.Array,  # [B] int32 (bools as ints for ref-friendliness)
+    b_pending: jax.Array,  # [B] int32
+    *,
+    chunk: int = 128,
+    alpha: float,
+    beta: float,
+    policy: str,
+    mode: str,
+    interpret: bool = False,
+):
+    """Returns (alloc_cpu, alloc_mem, node, accept, attempted, scenario)."""
+    num_rows = b_cpu.shape[0]
+    nb, lane = rc2.shape
+    assert lane == LANE, (lane, LANE)
+    chunk = min(chunk, num_rows)
+    assert num_rows % chunk == 0, (num_rows, chunk)
+    grid = (num_rows // chunk,)
+
+    whole = pl.BlockSpec((nb, lane), lambda si: (0, 0))
+    scalar = pl.BlockSpec((1, 1), lambda si: (0, 0),
+                          memory_space=pltpu.SMEM)
+    row_f32 = pl.BlockSpec((chunk,), lambda si: (si,))
+    # Correction-table slab: [chunk, B] for ARAS, width-1 placeholder
+    # (never read) in FCFS mode.
+    slab = pl.BlockSpec((chunk, delta_cpu.shape[1]), lambda si: (si, 0))
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _scan_kernel, chunk=chunk, alpha=alpha, beta=beta,
+            policy=policy, mode=mode,
+        ),
+        grid=grid,
+        in_specs=[
+            whole, whole, whole, whole, scalar, scalar,
+            row_f32, row_f32, row_f32, row_f32, row_f32, row_f32,
+            slab, slab, row_f32, row_f32, row_f32,
+        ],
+        out_specs=[row_f32, row_f32, row_f32, row_f32, row_f32, row_f32],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_rows,), jnp.float32),
+            jax.ShapeDtypeStruct((num_rows,), jnp.float32),
+            jax.ShapeDtypeStruct((num_rows,), jnp.int32),
+            jax.ShapeDtypeStruct((num_rows,), jnp.int32),
+            jax.ShapeDtypeStruct((num_rows,), jnp.int32),
+            jax.ShapeDtypeStruct((num_rows,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nb, lane), jnp.float32),
+            pltpu.VMEM((nb, lane), jnp.float32),
+            pltpu.VMEM((1, num_rows), jnp.float32),
+            pltpu.SMEM((2,), jnp.float32),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        rc2, rm2, cap_cpu2, cap_mem2,
+        tot_cpu.reshape(1, 1), tot_mem.reshape(1, 1),
+        b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
+        delta_cpu, delta_mem,
+        b_self, b_attempt, b_pending,
+    )
+    alloc_c, alloc_m, node, accept, attempted, scenario = outs
+    return (alloc_c, alloc_m, node, accept.astype(bool),
+            attempted.astype(bool), scenario)

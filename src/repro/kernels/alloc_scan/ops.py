@@ -1,0 +1,68 @@
+"""Backend dispatch for the sequential burst-allocation core."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.alloc_scan.kernel import alloc_scan_pallas
+from repro.kernels.alloc_scan.ref import alloc_scan_ref
+
+ALLOC_BACKENDS = ("auto", "scan", "pallas")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: str) -> str:
+    """``auto`` → the Pallas kernel on TPU, the ``lax.scan`` ref elsewhere."""
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "scan"
+    if backend not in ("scan", "pallas"):
+        raise ValueError(
+            f"unknown alloc backend {backend!r} (want one of {ALLOC_BACKENDS})"
+        )
+    return backend
+
+
+def alloc_scan(
+    rc2, rm2, cap_cpu2, cap_mem2, tot_cpu, tot_mem,
+    b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
+    delta_cpu, delta_mem, b_self, b_attempt, b_pending,
+    *,
+    alpha: float,
+    beta: float,
+    policy: str,
+    mode: str,
+    backend: str,
+):
+    """Run the sequential core on a concrete backend (``scan``|``pallas``).
+
+    Callers resolve ``auto`` once via :func:`resolve_backend` before
+    dispatch.  Both backends return bit-identical ``(alloc_cpu,
+    alloc_mem, node, accept, attempted, scenario)`` row arrays — gated by
+    ``tests/test_alloc_scan.py`` and the engine parity suite.
+    """
+    if backend not in ("scan", "pallas"):
+        raise ValueError(
+            f"alloc_scan needs a concrete backend, got {backend!r} "
+            "(resolve 'auto' via resolve_backend first)"
+        )
+    if backend == "scan":
+        return alloc_scan_ref(
+            rc2, rm2, cap_cpu2, cap_mem2, tot_cpu, tot_mem,
+            b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
+            delta_cpu, delta_mem, b_self, b_attempt, b_pending,
+            alpha=alpha, beta=beta, policy=policy, mode=mode,
+        )
+    return alloc_scan_pallas(
+        rc2, rm2, cap_cpu2, cap_mem2,
+        jnp.asarray(tot_cpu, jnp.float32), jnp.asarray(tot_mem, jnp.float32),
+        b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
+        delta_cpu, delta_mem,
+        b_self.astype(jnp.int32),
+        b_attempt.astype(jnp.int32),
+        b_pending.astype(jnp.int32),
+        alpha=alpha, beta=beta, policy=policy, mode=mode,
+        interpret=not _on_tpu(),
+    )

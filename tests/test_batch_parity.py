@@ -123,16 +123,53 @@ def test_placement_nothing_fits():
     assert not bool(fits)
 
 
+def test_placement_balanced_prefers_low_allocation_fractions():
+    """kube NodeResourcesFit least-allocated: the node with the best mean
+    free *fraction* after placement wins, not the most absolute CPU."""
+    cpu = np.array([3000.0, 5000.0], np.float32)
+    mem = np.array([8000.0, 2000.0], np.float32)
+    cap_cpu = np.array([4000.0, 16000.0], np.float32)
+    cap_mem = np.array([16000.0, 16000.0], np.float32)
+    # worst_fit picks node 1 (max residual CPU) ...
+    node, fits = pick_node(cpu, mem, 1000.0, 1000.0, "worst_fit")
+    assert (bool(fits), int(node)) == (True, 1)
+    # ... balanced picks node 0: free fractions (0.5, 0.4375) vs node 1's
+    # (0.25, 0.0625).
+    node, fits = pick_node(cpu, mem, 1000.0, 1000.0, "balanced",
+                           cap_cpu=cap_cpu, cap_mem=cap_mem)
+    assert (bool(fits), int(node)) == (True, 0)
+
+
+def test_placement_balanced_requires_capacities():
+    with pytest.raises(ValueError, match="balanced"):
+        pick_node(*_residuals(), 1.0, 1.0, "balanced")
+
+
 def test_placement_unknown_policy_raises():
     with pytest.raises(ValueError, match="unknown placement policy"):
         pick_node(*_residuals(), 1.0, 1.0, "wat")
 
 
-@pytest.mark.parametrize("policy", ["worst_fit", "best_fit", "first_fit"])
+@pytest.mark.parametrize("policy",
+                         ["worst_fit", "best_fit", "first_fit", "balanced"])
 def test_engine_runs_under_every_policy(policy):
     cfg = dataclasses.replace(FAST, placement=policy)
     m = run_experiment("montage", [(0.0, 3)], "aras", seed=0, config=cfg)
     assert len(m.workflow_durations) == 3
+
+
+@pytest.mark.parametrize("policy",
+                         ["worst_fit", "best_fit", "first_fit", "balanced"])
+@pytest.mark.parametrize("allocator", ["aras", "fcfs"])
+def test_engine_parity_every_policy(policy, allocator):
+    """Batched ≡ per-task replay under every placement policy."""
+    def run(batched):
+        cfg = dataclasses.replace(FAST, batch_allocation=batched,
+                                  placement=policy)
+        return run_experiment("montage", [(0.0, 4)], allocator, seed=0,
+                              config=cfg)
+
+    _assert_identical(run(True), run(False))
 
 
 # ------------------------------------------------------------ edge cases
