@@ -21,7 +21,12 @@ Usage::
     PYTHONPATH=src python benchmarks/allocator_scale.py                 # full sweep
     PYTHONPATH=src python benchmarks/allocator_scale.py --nodes 1000    # one size
     PYTHONPATH=src python benchmarks/allocator_scale.py --nodes 1000 --burst 256
+    PYTHONPATH=src python benchmarks/allocator_scale.py --clusters 4   # federated
     PYTHONPATH=src python benchmarks/allocator_scale.py --json BENCH_allocator.json
+
+The engine benchmark takes a ``--clusters`` axis (federated multi-cluster
+allocation, ``EngineConfig.num_clusters``); the default full sweep also
+records a {1, 2, 4}-cluster trajectory at the largest engine size.
 """
 from __future__ import annotations
 
@@ -96,15 +101,18 @@ def _burst_spec(burst: int, rng: np.random.Generator) -> WorkflowSpec:
 
 
 def bench_engine(num_nodes: int, burst: int, batched: bool,
-                 repeats: int = 3) -> float:
+                 repeats: int = 3, clusters: int = 1) -> float:
     """Engine-facing burst latency: inject `burst` ready tasks, time the
     allocation drain (window build → batch assembly → fused dispatch →
-    bind) — everything between the READY events and the running pods."""
+    bind) — everything between the READY events and the running pods.
+    ``clusters > 1`` runs the federated multi-cluster layout
+    (repro.cluster.federation): cluster-major tiles, per-shard totals."""
     spec = _burst_spec(burst, np.random.default_rng(0))
     cfg = EngineConfig(
         num_nodes=num_nodes, node_cpu=8000.0, node_mem=16000.0,
         batch_allocation=batched, invariant_checks=False,
         pod_startup_delay=1.0, cleanup_delay=1.0, duration_multiplier=1.0,
+        num_clusters=clusters,
     )
 
     def one_run() -> float:
@@ -127,18 +135,24 @@ def bench_engine(num_nodes: int, burst: int, batched: bool,
     return min(one_run() for _ in range(repeats))
 
 
-def report_engine(num_nodes: int, burst: int, repeats: int) -> dict:
-    dt_b = bench_engine(num_nodes, burst, batched=True, repeats=repeats)
-    dt_p = bench_engine(num_nodes, burst, batched=False, repeats=repeats)
+def report_engine(num_nodes: int, burst: int, repeats: int,
+                  clusters: int = 1) -> dict:
+    dt_b = bench_engine(num_nodes, burst, batched=True, repeats=repeats,
+                        clusters=clusters)
+    dt_p = bench_engine(num_nodes, burst, batched=False, repeats=repeats,
+                        clusters=clusters)
     speedup = dt_p / dt_b
     print(
-        f"engine_scale_{num_nodes}n,batched={1e6*dt_b/burst:.2f}us/decision,"
+        f"engine_scale_{num_nodes}n_{clusters}c,"
+        f"batched={1e6*dt_b/burst:.2f}us/decision,"
         f"per_task={1e6*dt_p/burst:.2f}us/decision,"
-        f"nodes={num_nodes}|burst={burst}|speedup={speedup:.1f}x"
+        f"nodes={num_nodes}|burst={burst}|clusters={clusters}|"
+        f"speedup={speedup:.1f}x"
     )
     return {
         "nodes": num_nodes,
         "burst": burst,
+        "clusters": clusters,
         "batched_us_per_decision": round(1e6 * dt_b / burst, 3),
         "per_task_us_per_decision": round(1e6 * dt_p / burst, 3),
         "speedup": round(speedup, 2),
@@ -165,6 +179,10 @@ def main():
                     help="single cluster size (default: 1k/10k/100k sweep)")
     ap.add_argument("--burst", type=int, default=1024,
                     help="ready tasks per arrival burst")
+    ap.add_argument("--clusters", type=int, default=None,
+                    help="federated cluster count for the engine benchmark "
+                         "(default: 1, plus a {1,2,4} sweep at the largest "
+                         "engine size when no --nodes is given)")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-core", action="store_true")
@@ -175,6 +193,8 @@ def main():
         ap.error("--nodes must be positive")
     if args.burst <= 0:
         ap.error("--burst must be positive")
+    if args.clusters is not None and args.clusters <= 0:
+        ap.error("--clusters must be positive")
 
     core_sizes = [args.nodes] if args.nodes is not None else [1_000, 10_000, 100_000]
     engine_sizes = [args.nodes] if args.nodes is not None else [1_000, 10_000]
@@ -191,8 +211,16 @@ def main():
             results["core"].append(report_core(n, args.burst))
     if not args.skip_engine:
         for n in engine_sizes:
-            results["engine"].append(report_engine(n, args.burst,
-                                                   args.repeats))
+            if args.clusters is not None:
+                cluster_axis = [args.clusters]
+            elif args.nodes is None and n == engine_sizes[-1]:
+                # The federation trajectory rides the largest sweep size.
+                cluster_axis = [1, 2, 4]
+            else:
+                cluster_axis = [1]
+            for c in cluster_axis:
+                results["engine"].append(
+                    report_engine(n, args.burst, args.repeats, clusters=c))
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(results, fh, indent=2)

@@ -1,3 +1,4 @@
+from repro.cluster.federation import FederatedLayout, layout_of
 from repro.cluster.simulator import ClusterSim, Pod
 
-__all__ = ["ClusterSim", "Pod"]
+__all__ = ["ClusterSim", "FederatedLayout", "Pod", "layout_of"]

@@ -34,6 +34,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.cluster.federation import FederatedLayout
 from repro.core.types import Allocation, ClusterSnapshot, PodPhase, Resources, TaskSpec
 
 
@@ -52,10 +53,26 @@ class Pod:
 
 
 class ClusterSim:
-    """Mutable cluster state + capacity accounting."""
+    """Mutable cluster state + capacity accounting.
 
-    def __init__(self, num_nodes: int, node_cpu: float, node_mem: float):
+    ``num_clusters > 1`` runs the simulator in multi-cluster (federated)
+    mode: the node table is partitioned into contiguous, as-even-as-
+    possible cluster ranges (global node ids are unchanged — cluster *k*
+    owns ``cluster_slices[k]``).  All accounting stays global and
+    incremental; the sharded views hand the allocator per-cluster slices
+    of the same live arrays, so single- and multi-cluster mode see
+    residuals produced by the identical sequence of float32 debits.
+    """
+
+    def __init__(self, num_nodes: int, node_cpu: float, node_mem: float,
+                 num_clusters: int = 1):
+        # The partition rule (and its validation) is owned by
+        # FederatedLayout.split — one source of truth for the simulator,
+        # the allocator tiles and the global_nodes index mapping.
+        self._layout = FederatedLayout.split(num_nodes, num_clusters)
         self.num_nodes = num_nodes
+        self.num_clusters = num_clusters
+        self.cluster_node_counts = self._layout.node_counts
         # Node accounting: float64 is authoritative (overcommit guard,
         # utilization); the float32 mirror feeds the JAX allocator.
         self._alloc_cpu = np.full((num_nodes,), node_cpu, np.float64)
@@ -170,6 +187,42 @@ class ClusterSim:
         self._free_slots.append(pod.slot)
 
     # ----------------------------------------------------------- informer
+    @property
+    def cluster_slices(self):
+        """Per-cluster ``slice`` into the global node arrays."""
+        return tuple(
+            slice(off, off + m)
+            for off, m in zip(self._layout.offsets,
+                              self._layout.node_counts)
+        )
+
+    def cluster_of(self, node: int) -> int:
+        """The cluster owning a global node id."""
+        for k, (off, m) in enumerate(zip(self._layout.offsets,
+                                         self._layout.node_counts)):
+            if off <= node < off + m:
+                return k
+        raise IndexError(node)
+
+    def residual_view_sharded(self):
+        """Per-cluster float32 residual views — the federated layout.
+
+        One ``(cpu, mem)`` pair of live array views per cluster (treat as
+        read-only), slicing the same incrementally-maintained arrays
+        ``residual_view`` returns; zero-copy.
+        """
+        return tuple(
+            (self._res_cpu32[s], self._res_mem32[s])
+            for s in self.cluster_slices
+        )
+
+    def capacity_view_sharded(self):
+        """Per-cluster float32 allocatable-capacity views (read-only)."""
+        return tuple(
+            (self._alloc_cpu32[s], self._alloc_mem32[s])
+            for s in self.cluster_slices
+        )
+
     def residual_view(self):
         """Float32 per-node residuals — the allocator's Monitor input.
 

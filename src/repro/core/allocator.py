@@ -36,6 +36,15 @@ reconstructed from the engine's incremental caches), gated by
 Batch and record-table lengths are padded to power-of-two buckets so JIT
 caches stay warm as the knowledge base grows (padding rows carry
 ``attempt=False`` / ``done=True`` and are numerically inert).
+
+Federated multi-cluster mode (``repro.cluster.federation``): a
+``FederatedLayout`` lays the residual/capacity tiles out cluster-major
+with per-shard totals in the carry; the same precompute → sequential core
+→ sync pipeline then decides one burst against K cluster shards (accepts
+debit only the owning shard, the evaluator pools federation-wide
+capacity), optionally with the tiles sharded across a ``clusters``
+device mesh.  ``layout=None`` is the legacy single-cluster path, bit for
+bit — ``tests/test_federation_parity.py`` holds the K=1 layout to it.
 """
 from __future__ import annotations
 
@@ -47,6 +56,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster import federation
+from repro.cluster.federation import FederatedLayout
 from repro.core import discovery, lifecycle
 from repro.core.evaluation import SCENARIO_NAMES
 from repro.core.types import (
@@ -60,7 +71,7 @@ from repro.core.types import (
     TaskWindow,
 )
 from repro.kernels.alloc_scan import alloc_scan, resolve_backend
-from repro.kernels.alloc_scan.ref import RES_PAD, alloc_step, pad_tiles
+from repro.kernels.alloc_scan.ref import RES_PAD, alloc_step
 
 
 def _pow2(n: int) -> int:
@@ -68,7 +79,7 @@ def _pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
+@functools.partial(jax.jit, static_argnames=("mode", "layout"))
 def _burst_precompute(
     residual_cpu: jax.Array,  # [m] f32 per-node residuals (Alg. 2 output)
     residual_mem: jax.Array,  # [m] f32
@@ -85,22 +96,27 @@ def _burst_precompute(
     now: jax.Array,  # scalar f32
     *,
     mode: str,
+    layout: FederatedLayout | None = None,
 ):
     """Everything the sequential core does NOT need to recompute per step.
 
     Returns residual/capacity tiles, the O(1)-carried totals, the hoisted
     base window demand and the ``[B, B]`` stamp-correction tables.
+
+    ``layout`` selects the federated multi-cluster tile layout (blocks
+    cluster-major, per-shard totals); ``None`` is the legacy
+    single-cluster path, bit for bit.
     """
     num_slots = rec_t_start.shape[0]
     num_rows = b_cpu.shape[0]
-    rc2 = pad_tiles(residual_cpu, RES_PAD)
-    rm2 = pad_tiles(residual_mem, RES_PAD)
-    cc2 = pad_tiles(cap_cpu, 0.0)
-    cm2 = pad_tiles(cap_mem, 0.0)
-    # Alg. 1 lines 15-18, hoisted: one [m] reduction per burst; the core
-    # debits the scalars O(1) on every accept.
-    tot_cpu = jnp.sum(residual_cpu)
-    tot_mem = jnp.sum(residual_mem)
+    rc2 = federation.pad_tiles_federated(residual_cpu, layout, RES_PAD)
+    rm2 = federation.pad_tiles_federated(residual_mem, layout, RES_PAD)
+    cc2 = federation.pad_tiles_federated(cap_cpu, layout, 0.0)
+    cm2 = federation.pad_tiles_federated(cap_mem, layout, 0.0)
+    # Alg. 1 lines 15-18, hoisted: one [m] reduction per burst (per shard
+    # in federated mode); the core debits O(1) on every accept.
+    tot_cpu = federation.shard_totals(residual_cpu, layout)
+    tot_mem = federation.shard_totals(residual_mem, layout)
     if mode != "aras":
         # FCFS never reads the demand terms; stream width-1 placeholders
         # instead of dense [B, B] zero tables.
@@ -144,7 +160,7 @@ _core_dispatch = jax.jit(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("alpha", "beta", "policy", "mode")
+    jax.jit, static_argnames=("alpha", "beta", "policy", "mode", "layout")
 )
 def _replay_step(
     residual_cpu, residual_mem, cap_cpu2, cap_mem2,
@@ -153,7 +169,7 @@ def _replay_step(
     delta_cpu, delta_mem, b_self, b_attempt, b_pending,
     i,
     *,
-    alpha, beta, policy, mode,
+    alpha, beta, policy, mode, layout=None,
 ):
     """One decision of the per-task replay: the shared step at row ``i``.
 
@@ -162,8 +178,8 @@ def _replay_step(
     verifies that the fused core's in-scan debits and stamps track the
     host-side state transitions bit-for-bit.
     """
-    rc2 = pad_tiles(residual_cpu, RES_PAD)
-    rm2 = pad_tiles(residual_mem, RES_PAD)
+    rc2 = federation.pad_tiles_federated(residual_cpu, layout, RES_PAD)
+    rm2 = federation.pad_tiles_federated(residual_mem, layout, RES_PAD)
     carry = (rc2, rm2, jnp.max(rc2, axis=1), tot_cpu, tot_mem,
              stamped, blocked)
     row = (b_cpu[i], b_mem[i], b_min_cpu[i], b_min_mem[i],
@@ -240,8 +256,17 @@ def _dispatch_burst(
     backend: str,
     cap_cpu=None,
     cap_mem=None,
+    layout: FederatedLayout | None = None,
+    mesh=None,
 ) -> BatchAllocation:
-    """Precompute → sequential core → sync back **once**."""
+    """Precompute → sequential core → sync back **once**.
+
+    ``layout`` runs the burst on the federated multi-cluster tile layout
+    (``repro.cluster.federation``); ``mesh`` additionally lays the tiles
+    out across a ``clusters`` device mesh via ``jax.sharding``.  Node
+    indices are mapped back to global node ids before the result is
+    returned, so callers never see the padded federated index space.
+    """
     n = batch.size
     if n == 0:
         return BatchAllocation.empty()
@@ -254,22 +279,30 @@ def _dispatch_burst(
             recs["rec_t_start"], recs["rec_cpu"], recs["rec_mem"],
             recs["rec_done"],
             rows["b_cpu"], rows["b_mem"], rows["b_wend"], rows["b_self"],
-            now32, mode=mode,
+            now32, mode=mode, layout=layout,
         )
+    concrete_backend = resolve_backend(backend)
+    if mesh is not None and concrete_backend != "pallas":
+        # pallas_call has no cross-device partitioning rule (outside
+        # shard_map), so the device mesh only applies to the scan
+        # backend; the Pallas kernel instead keeps the whole federation
+        # VMEM-resident on one device.
+        rc2, rm2, cc2, cm2 = (
+            federation.shard_tiles(t, mesh) for t in (rc2, rm2, cc2, cm2))
     outs = _core_dispatch(
         rc2, rm2, cc2, cm2, tot_c, tot_m,
         rows["b_cpu"], rows["b_mem"], rows["b_min_cpu"], rows["b_min_mem"],
         base_c, base_m, dlt_c, dlt_m,
         rows["b_self"], rows["b_attempt"], rows["b_pending"],
         alpha=alpha, beta=beta, policy=policy, mode=mode,
-        backend=resolve_backend(backend),
+        backend=concrete_backend,
     )
     # The one host↔device sync of the whole burst.
     cpu, mem, node, feasible, attempted, scenario = jax.device_get(outs)
     return BatchAllocation(
         cpu=cpu[:n],
         mem=mem[:n],
-        node=node[:n],
+        node=federation.global_nodes(node[:n], layout),
         feasible=feasible[:n],
         attempted=attempted[:n],
         scenario=scenario[:n],
@@ -289,8 +322,11 @@ class BurstReplay:
     """
 
     def __init__(self, batch, residual_cpu, residual_mem, window, now,
-                 cap_cpu, cap_mem, *, alpha, beta, policy, mode):
-        self._params = dict(alpha=alpha, beta=beta, policy=policy, mode=mode)
+                 cap_cpu, cap_mem, *, alpha, beta, policy, mode,
+                 layout=None):
+        self._params = dict(alpha=alpha, beta=beta, policy=policy, mode=mode,
+                            layout=layout)
+        self._layout = layout
         res_c, res_m, cap_c, cap_m, rows, recs, now32 = _device_inputs(
             batch, residual_cpu, residual_mem, window, now, cap_cpu, cap_mem
         )
@@ -299,7 +335,7 @@ class BurstReplay:
             recs["rec_t_start"], recs["rec_cpu"], recs["rec_mem"],
             recs["rec_done"],
             rows["b_cpu"], rows["b_mem"], rows["b_wend"], rows["b_self"],
-            now32, mode=mode,
+            now32, mode=mode, layout=layout,
         )
         (_, _, self._cc2, self._cm2, self._tot_c, self._tot_m,
          self._base_c, self._base_m, self._dlt_c, self._dlt_m) = pre
@@ -327,6 +363,7 @@ class BurstReplay:
             )
         alloc_c, alloc_m, node, accept, attempted, scenario = \
             jax.device_get(out)
+        node = federation.global_nodes(np.asarray(node), self._layout)
         return (
             Allocation(
                 cpu=float(alloc_c),
@@ -360,16 +397,26 @@ class AdaptiveAllocator:
     them until a cluster-state change — identical to the paper's blocking
     behaviour.  ``allocate`` is the same pipeline at batch size 1.
     ``backend`` selects the sequential core: ``auto`` | ``scan`` |
-    ``pallas`` (see ``repro.kernels.alloc_scan``).
+    ``pallas`` (see ``repro.kernels.alloc_scan``).  ``layout`` federates
+    the burst across cluster shards (``repro.cluster.federation``) and
+    ``cluster_sharding`` governs whether those shards are additionally
+    laid out across devices (``auto``/``force`` when a device count
+    divides the clusters, ``off`` never); ``layout=None`` is the legacy
+    single-cluster path.
     """
 
     alpha: float = DEFAULT_ALPHA
     beta: float = DEFAULT_BETA
     placement: str = "worst_fit"
     backend: str = "auto"
+    layout: FederatedLayout | None = None
+    cluster_sharding: str = "auto"
 
     name: str = "aras"
     mode = "aras"
+
+    def _mesh(self):
+        return federation.resolve_mesh(self.layout, self.cluster_sharding)
 
     def allocate_batch(
         self,
@@ -386,6 +433,7 @@ class AdaptiveAllocator:
             alpha=self.alpha, beta=self.beta, policy=self.placement,
             mode=self.mode, backend=self.backend,
             cap_cpu=cap_cpu, cap_mem=cap_mem,
+            layout=self.layout, mesh=self._mesh(),
         )
 
     def begin_replay(
@@ -401,7 +449,7 @@ class AdaptiveAllocator:
         return BurstReplay(
             batch, residual_cpu, residual_mem, window, now, cap_cpu, cap_mem,
             alpha=self.alpha, beta=self.beta, policy=self.placement,
-            mode=self.mode,
+            mode=self.mode, layout=self.layout,
         )
 
     def allocate(
@@ -433,9 +481,14 @@ class FCFSAllocator:
 
     placement: str = "worst_fit"
     backend: str = "auto"
+    layout: FederatedLayout | None = None
+    cluster_sharding: str = "auto"
 
     name: str = "fcfs"
     mode = "fcfs"
+
+    def _mesh(self):
+        return federation.resolve_mesh(self.layout, self.cluster_sharding)
 
     def allocate_batch(
         self,
@@ -451,6 +504,7 @@ class FCFSAllocator:
             batch, residual_cpu, residual_mem, window, now,
             alpha=0.0, beta=0.0, policy=self.placement, mode=self.mode,
             backend=self.backend, cap_cpu=cap_cpu, cap_mem=cap_mem,
+            layout=self.layout, mesh=self._mesh(),
         )
 
     def begin_replay(
@@ -466,6 +520,7 @@ class FCFSAllocator:
         return BurstReplay(
             batch, residual_cpu, residual_mem, window, now, cap_cpu, cap_mem,
             alpha=0.0, beta=0.0, policy=self.placement, mode=self.mode,
+            layout=self.layout,
         )
 
     def allocate(
@@ -490,6 +545,6 @@ def make_allocator(name: str, **kwargs) -> AdaptiveAllocator | FCFSAllocator:
     if name in ("fcfs", "baseline"):
         return FCFSAllocator(
             **{k: v for k, v in kwargs.items()
-               if k in ("placement", "backend")}
+               if k in ("placement", "backend", "layout", "cluster_sharding")}
         )
     raise ValueError(f"unknown allocator {name!r} (want 'aras' or 'fcfs')")

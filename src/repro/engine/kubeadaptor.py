@@ -22,6 +22,13 @@ head-of-line discipline (§6.1.6: the engine "waits ... for the CURRENT
 task request"): pending rows go first, and once one fails the rest of the
 queue is skipped, exactly as the sequential loop would.
 
+Multi-cluster mode (``num_clusters > 1``) federates the node table into
+contiguous cluster shards (``repro.cluster.federation``): bursts dispatch
+through the sharded residual carry (per-shard totals, cluster-major
+tiles, optional ``clusters`` device mesh) while the event loop, retry
+queue and self-healing stay unchanged — node ids in every result are
+global, so binding is cluster-agnostic.
+
 Per-task mode (``batch_allocation=False``) drains the same burst but
 *replays* it one dispatch per row — each decision syncs back to the host,
 binds, and the next row's residual carry is rebuilt from the engine's
@@ -41,6 +48,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.cluster import federation
 from repro.cluster.simulator import ClusterSim
 from repro.core.allocator import allocation_at, make_allocator
 from repro.core.types import (
@@ -80,6 +88,18 @@ class EngineConfig:
     # Sequential-core backend (repro.kernels.alloc_scan): "auto" picks the
     # Pallas kernel on TPU and the lax.scan reference elsewhere.
     alloc_backend: str = "auto"
+    # Federated multi-cluster mode (repro.cluster.federation): the node
+    # table is partitioned into `num_clusters` contiguous cluster shards,
+    # residual tiles go cluster-major with per-shard totals, and accepts
+    # debit only the owning shard.  1 = the single-cluster paper setup.
+    num_clusters: int = 1
+    # Device layout of the cluster shards: "auto" shards the residual
+    # tiles across a `clusters` jax.sharding mesh when some device count
+    # > 1 divides num_clusters (single device: replicated fallback,
+    # arithmetic unchanged); "off" never shards; "force" additionally
+    # routes num_clusters=1 through the federated K=1 layout — the
+    # bit-for-bit regression lever the cross-shard parity suite pulls.
+    cluster_sharding: str = "auto"
     # Burst-at-a-time allocation (one fused dispatch per timestamp burst).
     # False replays the same burst one dispatch per row — the bit-for-bit
     # parity reference and the bisecting tool for kernel regressions.
@@ -150,10 +170,23 @@ class KubeAdaptor:
     """Discrete-event engine executing workflows under an allocator."""
 
     def __init__(self, config: EngineConfig):
+        # Fail at construction, not first dispatch, on a typo'd policy.
+        federation.validate_sharding_policy(config.cluster_sharding)
         self.cfg = config
-        self.cluster = ClusterSim(config.num_nodes, config.node_cpu, config.node_mem)
+        self.cluster = ClusterSim(config.num_nodes, config.node_cpu,
+                                  config.node_mem,
+                                  num_clusters=config.num_clusters)
+        # Burst dispatches go through the federated layout whenever there
+        # is more than one cluster; "force" also routes the single-cluster
+        # setup through the K=1 federated path (bit-for-bit the legacy
+        # allocator — the cross-shard parity suite holds it to that).
+        layout = (federation.layout_of(self.cluster)
+                  if config.num_clusters > 1
+                  or config.cluster_sharding == "force" else None)
         kwargs = {"placement": config.placement,
-                  "backend": config.alloc_backend}
+                  "backend": config.alloc_backend,
+                  "layout": layout,
+                  "cluster_sharding": config.cluster_sharding}
         if config.allocator == "aras":
             kwargs.update(alpha=config.alpha, beta=config.beta)
         self.allocator = make_allocator(config.allocator, **kwargs)

@@ -66,6 +66,11 @@ def _scan_kernel(
     si = pl.program_id(0)
     nb, lane = rc_s.shape
     num_rows = stamped_s.shape[1]
+    # Cluster shards (repro.cluster.federation): K per-shard totals in
+    # SMEM, blocks cluster-major with a uniform nb // K blocks per shard.
+    # The legacy single-cluster burst is simply K=1.
+    num_shards = tot_s.shape[1]
+    shard_span = (nb // num_shards) * lane
     blk_ids = jax.lax.broadcasted_iota(jnp.int32, (nb, lane), 0)
     off_ids = jax.lax.broadcasted_iota(jnp.int32, (nb, lane), 1)
     flat_idx = blk_ids * lane + off_ids
@@ -76,8 +81,9 @@ def _scan_kernel(
         rc_s[...] = rc2_ref[...]
         rm_s[...] = rm2_ref[...]
         stamped_s[...] = jnp.zeros_like(stamped_s)
-        tot_s[0] = tot_c_ref[0, 0]
-        tot_s[1] = tot_m_ref[0, 0]
+        for k in range(num_shards):  # static unroll: K is tiny
+            tot_s[0, k] = tot_c_ref[0, k]
+            tot_s[1, k] = tot_m_ref[0, k]
         blocked_s[0] = jnp.int32(0)
 
     def step(t, _):
@@ -94,14 +100,20 @@ def _scan_kernel(
             req_m = base_m_ref[t] + jnp.sum(dm_ref[t] * stamped)
             re_max_cpu, imax = _flat_argmax(rc2, flat_idx)
             re_max_mem = _pick(rm2, flat_idx, imax)
+            # Federation-wide totals: same static left-fold as the ref's
+            # _fold_sum, so both backends re-associate identically.
+            glob_c, glob_m = tot_s[0, 0], tot_s[1, 0]
+            for k in range(1, num_shards):
+                glob_c = glob_c + tot_s[0, k]
+                glob_m = glob_m + tot_s[1, k]
             result = evaluate(
                 EvalInputs(
                     task_cpu=cpu,
                     task_mem=mem,
                     request_cpu=req_c,
                     request_mem=req_m,
-                    total_residual_cpu=tot_s[0],
-                    total_residual_mem=tot_s[1],
+                    total_residual_cpu=glob_c,
+                    total_residual_mem=glob_m,
                     re_max_cpu=re_max_cpu,
                     re_max_mem=re_max_mem,
                 ),
@@ -125,8 +137,13 @@ def _scan_kernel(
         hit = flat_idx == node
         rc_s[...] = rc2 - jnp.where(hit, alloc_c * debit, 0.0)
         rm_s[...] = rm2 - jnp.where(hit, alloc_m * debit, 0.0)
-        tot_s[0] = tot_s[0] - alloc_c * debit
-        tot_s[1] = tot_s[1] - alloc_m * debit
+        # Debit the owning shard only (static unroll, branchless: the
+        # indicator is 1.0 on the owner, 0.0 elsewhere — exact either way).
+        owner = node // shard_span
+        for k in range(num_shards):
+            ind = (owner == k).astype(rc2.dtype)
+            tot_s[0, k] = tot_s[0, k] - alloc_c * debit * ind
+            tot_s[1, k] = tot_s[1, k] - alloc_m * debit * ind
         stamped_s[0] = jnp.where((row_ids == rid) & (self_slot >= 0),
                                  debit, stamped)
         blocked_s[0] = (blocked | (pending & attempt & ~(ok & fits_any))
@@ -152,7 +169,7 @@ def alloc_scan_pallas(
     rm2: jax.Array,
     cap_cpu2: jax.Array,
     cap_mem2: jax.Array,
-    tot_cpu: jax.Array,  # scalar f32
+    tot_cpu: jax.Array,  # scalar f32, or [K] per-shard federated totals
     tot_mem: jax.Array,
     b_cpu: jax.Array,  # [B] f32
     b_mem: jax.Array,
@@ -180,9 +197,15 @@ def alloc_scan_pallas(
     chunk = min(chunk, num_rows)
     assert num_rows % chunk == 0, (num_rows, chunk)
     grid = (num_rows // chunk,)
+    # Scalar legacy totals become a K=1 federation; [K] vectors carry one
+    # total per cluster shard (blocks cluster-major, nb % K == 0).
+    tot_c2 = jnp.atleast_1d(tot_cpu).reshape(1, -1)
+    tot_m2 = jnp.atleast_1d(tot_mem).reshape(1, -1)
+    num_shards = tot_c2.shape[1]
+    assert nb % num_shards == 0, (nb, num_shards)
 
     whole = pl.BlockSpec((nb, lane), lambda si: (0, 0))
-    scalar = pl.BlockSpec((1, 1), lambda si: (0, 0),
+    scalar = pl.BlockSpec((1, num_shards), lambda si: (0, 0),
                           memory_space=pltpu.SMEM)
     row_f32 = pl.BlockSpec((chunk,), lambda si: (si,))
     # Correction-table slab: [chunk, B] for ARAS, width-1 placeholder
@@ -213,13 +236,13 @@ def alloc_scan_pallas(
             pltpu.VMEM((nb, lane), jnp.float32),
             pltpu.VMEM((nb, lane), jnp.float32),
             pltpu.VMEM((1, num_rows), jnp.float32),
-            pltpu.SMEM((2,), jnp.float32),
+            pltpu.SMEM((2, num_shards), jnp.float32),
             pltpu.SMEM((1,), jnp.int32),
         ],
         interpret=interpret,
     )(
         rc2, rm2, cap_cpu2, cap_mem2,
-        tot_cpu.reshape(1, 1), tot_mem.reshape(1, 1),
+        tot_c2, tot_m2,
         b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
         delta_cpu, delta_mem,
         b_self, b_attempt, b_pending,

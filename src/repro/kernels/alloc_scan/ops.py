@@ -39,9 +39,12 @@ def alloc_scan(
     """Run the sequential core on a concrete backend (``scan``|``pallas``).
 
     Callers resolve ``auto`` once via :func:`resolve_backend` before
-    dispatch.  Both backends return bit-identical ``(alloc_cpu,
+    dispatch.  ``tot_cpu``/``tot_mem`` are either scalars (legacy
+    single-cluster) or ``[K]`` per-shard federated totals
+    (``repro.cluster.federation``; residual tiles cluster-major with
+    ``nb % K == 0``).  Both backends return bit-identical ``(alloc_cpu,
     alloc_mem, node, accept, attempted, scenario)`` row arrays — gated by
-    ``tests/test_alloc_scan.py`` and the engine parity suite.
+    ``tests/test_alloc_scan.py`` and the cross-shard parity suite.
     """
     if backend not in ("scan", "pallas"):
         raise ValueError(

@@ -37,22 +37,30 @@ from repro.core.evaluation import FCFS_SCENARIO, EvalInputs, evaluate
 from repro.core.placement import placement_key
 
 # Lane width of the residual tiles ([num_blocks, LANE]); matches the TPU
-# lane dimension so the Pallas kernel shares the layout.
-LANE = 128
+# lane dimension so the Pallas kernel shares the layout.  Canonically
+# defined by the federation layout module (which owns the tile layout and
+# must stay import-cycle-free); re-exported here for the kernel callers.
+from repro.cluster.federation import LANE, pad_tiles  # noqa: E402
 
 # Padding residual: loses every argmax and never fits any request.
 RES_PAD = -1e30
 
 
-def pad_tiles(arr: jax.Array, pad_value: float) -> jax.Array:
-    """Reshape a flat per-node array to [num_blocks, LANE] tiles."""
-    m = arr.shape[0]
-    nb = -(-m // LANE)
-    return jnp.pad(arr, (0, nb * LANE - m),
-                   constant_values=pad_value).reshape(nb, LANE)
+def _fold_sum(vec: jax.Array) -> jax.Array:
+    """Static left-fold sum of a tiny [K] vector — exact order.
+
+    The federated core and the Pallas kernel must agree bit-for-bit on
+    the federation-wide total, so both reduce the per-shard totals in
+    the same (unrolled, left-to-right) order.  At K=1 this is the
+    identity — the legacy scalar total, untouched.
+    """
+    acc = vec[0]
+    for k in range(1, vec.shape[0]):
+        acc = acc + vec[k]
+    return acc
 
 
-def _tile_argmax(tiles: jax.Array, bmax: jax.Array
+def _tile_argmax(tiles: jax.Array, bmax: jax.Array, num_shards: int = 1
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Two-stage exact argmax over [nb, LANE] given its block maxima.
 
@@ -60,8 +68,22 @@ def _tile_argmax(tiles: jax.Array, bmax: jax.Array
     semantics in both stages — identical to a flat ``argmax`` and to the
     Pallas kernel's flat min-index reduction, since max/compare are
     exact.
+
+    ``num_shards > 1`` runs the block stage per cluster shard and picks
+    the winner with a cheap [K] cross-shard argmax reduce.  The block
+    axis is cluster-major, so "first shard attaining the max, first
+    block within it" is exactly the flat first-max block — federation
+    changes where the reduction runs, not its result.
     """
-    blk = jnp.argmax(bmax)
+    if num_shards == 1:
+        blk = jnp.argmax(bmax)
+    else:
+        nb_per = bmax.shape[0] // num_shards
+        smax = bmax.reshape(num_shards, nb_per)
+        shard = jnp.argmax(jnp.max(smax, axis=1))  # cross-shard reduce
+        within = jnp.argmax(
+            jax.lax.dynamic_index_in_dim(smax, shard, 0, keepdims=False))
+        blk = shard * nb_per + within
     row = jax.lax.dynamic_index_in_dim(tiles, blk, 0, keepdims=False)
     return blk, jnp.argmax(row), row
 
@@ -73,10 +95,20 @@ def alloc_step(carry, row, cap_cpu2, cap_mem2, *, alpha, beta, policy, mode):
     replay mode, which reconstructs the carry from its own incremental
     caches between dispatches; the scan, the Pallas kernel and the replay
     therefore execute the same float32 arithmetic and agree bit-for-bit.
+
+    Federated mode is selected by the carry's totals shape: scalar totals
+    are the legacy single-cluster path, a ``[K]`` vector means K cluster
+    shards laid out cluster-major along the block axis (uniform
+    ``nb_per = nb // K`` blocks per shard — ``repro.cluster.federation``).
+    The evaluator then sees the federation-wide total (exact static fold),
+    argmaxes reduce per-shard then cross-shard, and an accept debits only
+    the owning shard's total.
     """
     rc2, rm2, bmax, tot_c, tot_m, stamped, blocked = carry
     (cpu, mem, min_cpu, min_mem, base_c, base_m, d_c, d_m,
      self_slot, attempt_in, pending, rid) = row
+    num_shards = tot_c.shape[0] if tot_c.ndim == 1 else 1
+    federated = tot_c.ndim == 1
     # Head-of-line: once a pending row fails, later pending rows are
     # skipped (the seed's retry loop breaks at the first failure).
     attempt = attempt_in & ~(pending & blocked)
@@ -85,7 +117,7 @@ def alloc_step(carry, row, cap_cpu2, cap_mem2, *, alpha, beta, policy, mode):
         req_c = base_c + jnp.sum(d_c * stamped)
         req_m = base_m + jnp.sum(d_m * stamped)
         # Alg. 1 lines 19-22: the max-residual-CPU node, via block maxima.
-        blk, off, rc_blk = _tile_argmax(rc2, bmax)
+        blk, off, rc_blk = _tile_argmax(rc2, bmax, num_shards)
         re_max_cpu = rc_blk[off]
         re_max_mem = jax.lax.dynamic_index_in_dim(
             rm2, blk, 0, keepdims=False)[off]
@@ -95,8 +127,8 @@ def alloc_step(carry, row, cap_cpu2, cap_mem2, *, alpha, beta, policy, mode):
                 task_mem=mem,
                 request_cpu=req_c,
                 request_mem=req_m,
-                total_residual_cpu=tot_c,
-                total_residual_mem=tot_m,
+                total_residual_cpu=_fold_sum(tot_c) if federated else tot_c,
+                total_residual_mem=_fold_sum(tot_m) if federated else tot_m,
                 re_max_cpu=re_max_cpu,
                 re_max_mem=re_max_mem,
             ),
@@ -113,7 +145,7 @@ def alloc_step(carry, row, cap_cpu2, cap_mem2, *, alpha, beta, policy, mode):
 
     key = placement_key(policy, rc2, rm2, alloc_c, alloc_m,
                         cap_cpu2, cap_mem2)
-    pblk, poff, key_row = _tile_argmax(key, jnp.max(key, axis=1))
+    pblk, poff, key_row = _tile_argmax(key, jnp.max(key, axis=1), num_shards)
     fits_any = key_row[poff] > -jnp.inf
     node = (pblk * LANE + poff).astype(jnp.int32)
 
@@ -121,8 +153,17 @@ def alloc_step(carry, row, cap_cpu2, cap_mem2, *, alpha, beta, policy, mode):
     debit = accept.astype(rc2.dtype)
     rc2 = rc2.at[pblk, poff].add(-alloc_c * debit)
     rm2 = rm2.at[pblk, poff].add(-alloc_m * debit)
-    tot_c = tot_c - alloc_c * debit
-    tot_m = tot_m - alloc_m * debit
+    if federated:
+        # Only the shard owning the chosen block pays for the accept;
+        # ``debit · onehot`` keeps the arithmetic identical to the scalar
+        # path on the owner (·1.0) and a no-op elsewhere (·0.0).
+        owner = pblk // (rc2.shape[0] // num_shards)
+        onehot = (jnp.arange(num_shards) == owner).astype(rc2.dtype)
+        tot_c = tot_c - alloc_c * debit * onehot
+        tot_m = tot_m - alloc_m * debit * onehot
+    else:
+        tot_c = tot_c - alloc_c * debit
+        tot_m = tot_m - alloc_m * debit
     if mode == "aras":
         # Only the debited block's maximum can have changed.
         bmax = bmax.at[pblk].set(jnp.max(
@@ -150,8 +191,9 @@ def alloc_scan_ref(
     rm2: jax.Array,  # [nb, LANE] f32
     cap_cpu2: jax.Array,  # [nb, LANE] f32 allocatable capacity tiles
     cap_mem2: jax.Array,  # [nb, LANE] f32
-    tot_cpu: jax.Array,  # scalar f32 Σ residual cpu (real nodes only)
-    tot_mem: jax.Array,  # scalar f32
+    tot_cpu: jax.Array,  # scalar f32 Σ residual cpu (real nodes only),
+    #                      or [K] per-shard totals in federated mode
+    tot_mem: jax.Array,  # scalar f32 (or [K])
     b_cpu: jax.Array,  # [B] f32 batch rows, admission order
     b_mem: jax.Array,  # [B] f32
     b_min_cpu: jax.Array,  # [B] f32

@@ -40,3 +40,24 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     assert n % model == 0
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_cluster_mesh(num_clusters: int):
+    """1-D ``clusters`` mesh for federated burst allocation, or ``None``.
+
+    Uses the largest available device count that divides ``num_clusters``
+    so every device owns the same (smallest possible) number of cluster
+    shards.  Returns ``None`` on a single device or when no device split
+    > 1 divides the clusters — the federated arithmetic then runs
+    unsharded on one device (the documented fallback).
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    d = max(k for k in range(1, min(num_clusters, len(devices)) + 1)
+            if num_clusters % k == 0)
+    if d <= 1:
+        return None
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:d]), ("clusters",))

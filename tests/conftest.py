@@ -1,0 +1,21 @@
+"""Tier discipline: every test belongs to exactly one tier.
+
+CI runs ``-m tier1`` and ``-m slow`` as separate jobs; a test carrying
+neither marker (or both) would silently fall out of (or run twice in)
+the split, so collection fails loudly instead.
+"""
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    untiered = []
+    for item in items:
+        has_tier1 = item.get_closest_marker("tier1") is not None
+        has_slow = item.get_closest_marker("slow") is not None
+        if has_tier1 == has_slow:  # neither, or both
+            untiered.append(item.nodeid)
+    if untiered:
+        raise pytest.UsageError(
+            "tests must carry exactly one tier marker (tier1 xor slow); "
+            "offenders: " + ", ".join(sorted(untiered)[:10])
+        )

@@ -20,6 +20,8 @@ import jax.numpy as jnp  # noqa: E402
 from repro.core import lifecycle  # noqa: E402
 from repro.core.allocator import _burst_precompute  # noqa: E402
 
+pytestmark = pytest.mark.tier1
+
 _f = st.floats(min_value=0.0, max_value=100.0, allow_nan=False,
                allow_infinity=False, width=32)
 

@@ -1,0 +1,75 @@
+"""Properties of the paper's three arrival patterns (§6.1.4, Fig. 5a-c).
+
+The generators (``repro.workflows.arrival``) feed every experiment, yet
+were untested: under hypothesis-drawn parameters, each pattern must emit
+non-decreasing timestamps, strictly positive burst sizes, and a
+``total_workflows`` equal to the sum of per-burst counts — with the
+pattern-specific totals (``y·bursts`` for constant, ``Σ(d + k·i)`` for
+linear, exactly the requested ``total`` for pyramid) matching in closed
+form.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, strategies as st  # noqa: E402
+
+from repro.workflows import arrival  # noqa: E402
+
+pytestmark = pytest.mark.tier1
+
+_interval = st.floats(min_value=0.5, max_value=3600.0,
+                      allow_nan=False, allow_infinity=False)
+
+
+def _check_common(pattern):
+    times = [t for t, _ in pattern]
+    counts = [n for _, n in pattern]
+    assert times == sorted(times), times
+    assert all(n > 0 for n in counts), counts
+    assert arrival.total_workflows(pattern) == sum(counts)
+    return times, counts
+
+
+@given(y=st.integers(1, 20), bursts=st.integers(1, 12), interval=_interval)
+def test_constant_pattern(y, bursts, interval):
+    pattern = arrival.constant(y=y, bursts=bursts, interval=interval)
+    times, counts = _check_common(pattern)
+    assert len(pattern) == bursts
+    assert counts == [y] * bursts
+    assert arrival.total_workflows(pattern) == y * bursts
+    assert times == [i * interval for i in range(bursts)]
+
+
+@given(k=st.integers(0, 6), d=st.integers(1, 6), bursts=st.integers(1, 10),
+       interval=_interval)
+def test_linear_pattern(k, d, bursts, interval):
+    pattern = arrival.linear(k=k, d=d, bursts=bursts, interval=interval)
+    times, counts = _check_common(pattern)
+    assert len(pattern) == bursts
+    assert counts == [d + k * i for i in range(bursts)]
+    assert arrival.total_workflows(pattern) == \
+        sum(d + k * i for i in range(bursts))
+
+
+@given(start=st.integers(1, 5), peak_delta=st.integers(0, 8),
+       step=st.integers(1, 4), total=st.integers(1, 80), interval=_interval)
+def test_pyramid_pattern(start, peak_delta, step, total, interval):
+    pattern = arrival.pyramid(start=start, peak=start + peak_delta,
+                              step=step, total=total, interval=interval)
+    times, counts = _check_common(pattern)
+    # the pyramid truncates its last burst to land exactly on `total`
+    assert arrival.total_workflows(pattern) == total
+    # strictly increasing emission times, one `interval` apart
+    assert all(b - a == pytest.approx(interval)
+               for a, b in zip(times, times[1:]))
+    # the ramp flips direction on the first burst ≥ peak, so a burst can
+    # overshoot the peak by at most step-1 (and never more)
+    assert max(counts) <= start + peak_delta + step - 1
+
+
+def test_paper_defaults_match_section_6_1_4():
+    """The defaults reproduce the paper's workloads: 30/30/34 workflows."""
+    assert arrival.total_workflows(arrival.constant()) == 30
+    assert arrival.total_workflows(arrival.linear()) == 30
+    assert arrival.total_workflows(arrival.pyramid()) == 34
+    assert [n for _, n in arrival.pyramid()] == [2, 4, 6, 4, 2, 2, 4, 6, 4]

@@ -1,0 +1,104 @@
+"""Stateful fuzz of ``ClusterSim`` — invariants under random lifecycles.
+
+A hypothesis ``RuleBasedStateMachine`` drives random ``bind`` /
+``finish`` / ``delete`` sequences against single- and multi-cluster
+simulators, calling ``check_invariants()`` after every rule.  On top of
+the simulator's own checks (non-negative books, overcommit bounds,
+pod-array cross-checks, float32 mirror drift) the machine asserts that
+the O(1) incrementally-carried utilization totals stay equal to a
+from-scratch recompute of the node books — the accounting the engine
+samples on every bind/finish.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import settings, strategies as st  # noqa: E402
+from hypothesis.stateful import (  # noqa: E402
+    RuleBasedStateMachine,
+    initialize,
+    invariant,
+    precondition,
+    rule,
+)
+
+from repro.cluster.simulator import ClusterSim  # noqa: E402
+from repro.core.types import Allocation, PodPhase, TaskSpec  # noqa: E402
+
+pytestmark = pytest.mark.tier1
+
+_TASK = TaskSpec(task_id="fuzz", image="i", cpu=1.0, mem=1.0,
+                 duration=1.0, min_cpu=1.0, min_mem=1.0)
+
+
+class ClusterLifecycleMachine(RuleBasedStateMachine):
+    @initialize(num_nodes=st.integers(1, 9), num_clusters=st.integers(1, 4),
+                node_cpu=st.sampled_from([800.0, 6800.0]),
+                node_mem=st.sampled_from([1600.0, 13600.0]))
+    def setup(self, num_nodes, num_clusters, node_cpu, node_mem):
+        self.sim = ClusterSim(num_nodes, node_cpu, node_mem,
+                              num_clusters=min(num_clusters, num_nodes))
+        self.now = 0.0
+        self.running = []
+        self.terminal = []
+
+    @rule(node_pick=st.integers(0, 10**6),
+          cpu_frac=st.floats(0.0, 1.0, allow_nan=False),
+          mem_frac=st.floats(0.0, 1.0, allow_nan=False))
+    def bind(self, node_pick, cpu_frac, mem_frac):
+        """Bind a pod sized as a fraction of the node's free capacity —
+        always admissible, so every overcommit raise would be a bug.
+        Quotas are floored to quarter-unit granularity: dyadic values at
+        these magnitudes keep the float64 books exact, like the integral
+        millicore/MiB quantities real pods request."""
+        node = node_pick % self.sim.num_nodes
+        free_cpu = self.sim._alloc_cpu[node] - self.sim._used_cpu[node]
+        free_mem = self.sim._alloc_mem[node] - self.sim._used_mem[node]
+        alloc = Allocation(
+            cpu=float(np.floor(max(free_cpu, 0.0) * cpu_frac * 4) / 4),
+            mem=float(np.floor(max(free_mem, 0.0) * mem_frac * 4) / 4),
+            node=node, feasible=True)
+        pod = self.sim.bind(_TASK, alloc, self.now)
+        self.running.append(pod.uid)
+        self.now += 1.0
+
+    @precondition(lambda self: self.running)
+    @rule(pick=st.integers(0, 10**6),
+          phase=st.sampled_from([PodPhase.SUCCEEDED, PodPhase.FAILED,
+                                 PodPhase.OOM_KILLED]))
+    def finish(self, pick, phase):
+        uid = self.running.pop(pick % len(self.running))
+        self.sim.finish(uid, self.now, phase)
+        self.terminal.append(uid)
+        self.now += 1.0
+
+    @precondition(lambda self: self.terminal)
+    @rule(pick=st.integers(0, 10**6))
+    def delete(self, pick):
+        self.sim.delete(self.terminal.pop(pick % len(self.terminal)))
+
+    @invariant()
+    def invariants_hold(self):
+        if not hasattr(self, "sim"):
+            return  # before @initialize
+        self.sim.check_invariants()
+        # O(1)-carried utilization totals ≡ from-scratch recompute
+        u = self.sim.utilization()
+        assert np.isclose(
+            u.cpu, self.sim._used_cpu.sum() / self.sim._alloc_cpu.sum(),
+            rtol=1e-9, atol=1e-9)
+        assert np.isclose(
+            u.mem, self.sim._used_mem.sum() / self.sim._alloc_mem.sum(),
+            rtol=1e-9, atol=1e-9)
+        # sharded views stay consistent with the flat live arrays
+        res_cpu, res_mem = self.sim.residual_view()
+        for sl, (c, m) in zip(self.sim.cluster_slices,
+                              self.sim.residual_view_sharded()):
+            assert np.shares_memory(c, res_cpu) and (c == res_cpu[sl]).all()
+            assert np.shares_memory(m, res_mem) and (m == res_mem[sl]).all()
+
+
+ClusterLifecycleMachine.TestCase.settings = settings(
+    max_examples=20, stateful_step_count=40, deadline=None)
+
+TestClusterLifecycle = ClusterLifecycleMachine.TestCase

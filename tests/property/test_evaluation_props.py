@@ -9,6 +9,8 @@ from hypothesis import given, settings
 
 from repro.core.evaluation import EvalInputs, evaluate
 
+pytestmark = pytest.mark.tier1
+
 ALPHA = 0.8
 
 

@@ -11,6 +11,8 @@ from hypothesis import given, settings
 from repro.models import layers as L
 from repro.models.config import ModelConfig, MoEConfig
 
+pytestmark = pytest.mark.slow
+
 
 def moe_cfg(dispatch="scatter", cf=1.25, k=2, E=8, shared=0):
     return ModelConfig(

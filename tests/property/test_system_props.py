@@ -9,6 +9,8 @@ from hypothesis import given, settings
 from repro.engine import EngineConfig, run_experiment
 from repro.workflows import WORKFLOW_BUILDERS
 
+pytestmark = pytest.mark.tier1
+
 FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
                     duration_multiplier=1.0)
 

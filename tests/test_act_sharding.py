@@ -24,6 +24,9 @@ def test_noop_without_context():
     q2, k2, v2 = act.constrain_qkv(q, k, v)
     assert q2 is q and k2 is k and v2 is v
 
+import pytest
+
+pytestmark = pytest.mark.slow
 
 _PROG = r"""
 import os

@@ -17,6 +17,8 @@ from repro.core.allocator import _burst_precompute, _core_dispatch
 from repro.core.placement import PLACEMENT_POLICIES
 from repro.engine import EngineConfig, run_experiment
 
+pytestmark = pytest.mark.tier1
+
 FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
                     duration_multiplier=1.0)
 

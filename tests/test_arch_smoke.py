@@ -9,6 +9,8 @@ import pytest
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models.api import build_model, make_batch
 
+pytestmark = pytest.mark.slow
+
 BATCH, SEQ = 2, 16
 
 

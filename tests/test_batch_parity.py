@@ -26,6 +26,8 @@ from repro.core.placement import pick_node
 from repro.engine import EngineConfig, run_experiment
 from repro.workflows import arrival
 
+pytestmark = pytest.mark.tier1
+
 FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
                     duration_multiplier=1.0)
 

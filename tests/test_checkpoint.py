@@ -16,6 +16,8 @@ from repro.checkpoint import (
     save_pytree,
 )
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture
 def tmpdir(tmp_path):

@@ -10,6 +10,8 @@ import pytest
 from repro.core import discovery, lifecycle
 from repro.core.types import ClusterSnapshot, TaskWindow
 
+pytestmark = pytest.mark.tier1
+
 
 def make_snapshot(num_nodes, pod_node, pod_cpu, pod_mem, pod_active,
                   cap_cpu=8000.0, cap_mem=16000.0):

@@ -10,6 +10,8 @@ import pytest
 
 from repro.core.evaluation import EvalInputs, evaluate, evaluate_batch
 
+pytestmark = pytest.mark.tier1
+
 ALPHA = 0.8
 
 

@@ -15,6 +15,8 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.mamba_scan.ops import chunked_scan
 from repro.kernels.mamba_scan.ref import scan_ref
 
+pytestmark = pytest.mark.slow
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 

@@ -14,6 +14,8 @@ import pytest
 from repro.models import layers as L
 from repro.models.config import ModelConfig, MoEConfig
 
+pytestmark = pytest.mark.slow
+
 
 def moe_cfg(dispatch="scatter", cf=1.25, k=2, E=8, shared=0):
     return ModelConfig(

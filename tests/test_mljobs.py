@@ -6,6 +6,8 @@ from repro.configs import get_smoke_config
 from repro.engine.mljobs import MLJobResult, MLTaskSpec, run_ml_workflow
 from repro.engine.straggler import SpeculativeMonitor, simulate_makespan
 
+pytestmark = pytest.mark.slow
+
 
 def _jobs(steps=12):
     cfg = get_smoke_config("qwen2-0.5b")

@@ -8,6 +8,8 @@ from repro.configs import get_smoke_config
 from repro.data.synthetic import SyntheticDataset
 from repro.optim import Adafactor, AdamW, global_norm
 
+pytestmark = pytest.mark.slow
+
 
 def quad_problem():
     """f(w) = ||A w - b||²; optimizers must reduce it."""

@@ -18,6 +18,8 @@ from repro.parallel.compression import (
     simulate_roundtrip,
 )
 
+pytestmark = pytest.mark.slow
+
 
 # --------------------------------------------------------- compression
 

@@ -8,6 +8,8 @@ from repro.configs import get_smoke_config
 from repro.models.api import build_model
 from repro.serving.engine import ServeConfig, ServeEngine
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def served():

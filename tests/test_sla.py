@@ -7,6 +7,9 @@ from repro.core.allocator import AdaptiveAllocator
 from repro.core.types import ClusterSnapshot, TaskSpec, TaskWindow
 from repro.engine import EngineConfig, KubeAdaptor
 from repro.workflows.dags import montage
+import pytest
+
+pytestmark = pytest.mark.tier1
 
 FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
                     duration_multiplier=1.0)

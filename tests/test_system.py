@@ -15,6 +15,8 @@ from repro.engine import EngineConfig, KubeAdaptor, run_experiment
 from repro.workflows import arrival
 from repro.workflows.dags import cybershake, epigenomics, ligo, montage
 
+pytestmark = pytest.mark.tier1
+
 FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
                     duration_multiplier=1.0)
 
