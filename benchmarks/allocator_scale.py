@@ -22,11 +22,14 @@ Usage::
     PYTHONPATH=src python benchmarks/allocator_scale.py --nodes 1000    # one size
     PYTHONPATH=src python benchmarks/allocator_scale.py --nodes 1000 --burst 256
     PYTHONPATH=src python benchmarks/allocator_scale.py --clusters 4   # federated
+    PYTHONPATH=src python benchmarks/allocator_scale.py --placement all
     PYTHONPATH=src python benchmarks/allocator_scale.py --json BENCH_allocator.json
 
 The engine benchmark takes a ``--clusters`` axis (federated multi-cluster
-allocation, ``EngineConfig.num_clusters``); the default full sweep also
-records a {1, 2, 4}-cluster trajectory at the largest engine size.
+allocation, ``ClusterConfig.num_clusters``) and a ``--placement`` axis
+(any policy in the ``PLACEMENTS`` registry, or ``all``); the default
+full sweep records a {1, 2, 4}-cluster trajectory at the largest engine
+size and an all-policies placement sweep at the smallest.
 """
 from __future__ import annotations
 
@@ -40,10 +43,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.discovery import _residuals
-from repro.core.evaluation import EvalInputs, evaluate_batch
-from repro.engine import EngineConfig, KubeAdaptor
-from repro.workflows.spec import TaskSpec, WorkflowSpec
+from repro.api import (
+    PLACEMENTS,
+    AllocatorConfig,
+    ClusterConfig,
+    EngineConfig,
+    TimingConfig,
+)
+from repro.core import EvalInputs, evaluate_batch, node_residuals
+from repro.engine import KubeAdaptor
+from repro.workflows import TaskSpec, WorkflowSpec
 
 
 def bench_core(num_nodes: int, pods_per_node: int = 8, burst: int = 1024,
@@ -65,8 +74,8 @@ def bench_core(num_nodes: int, pods_per_node: int = 8, burst: int = 1024,
 
     @jax.jit
     def decide(ac, am, pn, pc, pm, pa, tc, tm, rc, rm):
-        res_cpu, res_mem = _residuals(ac, am, pn, pc, pm, pa,
-                                      num_nodes=num_nodes)
+        res_cpu, res_mem = node_residuals(ac, am, pn, pc, pm, pa,
+                                          num_nodes=num_nodes)
         total_cpu, total_mem = jnp.sum(res_cpu), jnp.sum(res_mem)
         i = jnp.argmax(res_cpu)
         return evaluate_batch(
@@ -101,18 +110,23 @@ def _burst_spec(burst: int, rng: np.random.Generator) -> WorkflowSpec:
 
 
 def bench_engine(num_nodes: int, burst: int, batched: bool,
-                 repeats: int = 3, clusters: int = 1) -> float:
+                 repeats: int = 3, clusters: int = 1,
+                 placement: str = "worst_fit") -> float:
     """Engine-facing burst latency: inject `burst` ready tasks, time the
     allocation drain (window build → batch assembly → fused dispatch →
     bind) — everything between the READY events and the running pods.
     ``clusters > 1`` runs the federated multi-cluster layout
-    (repro.cluster.federation): cluster-major tiles, per-shard totals."""
+    (repro.cluster.federation): cluster-major tiles, per-shard totals;
+    ``placement`` selects any registered placement policy."""
     spec = _burst_spec(burst, np.random.default_rng(0))
     cfg = EngineConfig(
-        num_nodes=num_nodes, node_cpu=8000.0, node_mem=16000.0,
-        batch_allocation=batched, invariant_checks=False,
-        pod_startup_delay=1.0, cleanup_delay=1.0, duration_multiplier=1.0,
-        num_clusters=clusters,
+        cluster=ClusterConfig(num_nodes=num_nodes, node_cpu=8000.0,
+                              node_mem=16000.0, num_clusters=clusters),
+        alloc=AllocatorConfig(batch_allocation=batched,
+                              placement=placement),
+        timing=TimingConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                            duration_multiplier=1.0),
+        invariant_checks=False,
     )
 
     def one_run() -> float:
@@ -136,23 +150,25 @@ def bench_engine(num_nodes: int, burst: int, batched: bool,
 
 
 def report_engine(num_nodes: int, burst: int, repeats: int,
-                  clusters: int = 1) -> dict:
+                  clusters: int = 1,
+                  placement: str = "worst_fit") -> dict:
     dt_b = bench_engine(num_nodes, burst, batched=True, repeats=repeats,
-                        clusters=clusters)
+                        clusters=clusters, placement=placement)
     dt_p = bench_engine(num_nodes, burst, batched=False, repeats=repeats,
-                        clusters=clusters)
+                        clusters=clusters, placement=placement)
     speedup = dt_p / dt_b
     print(
-        f"engine_scale_{num_nodes}n_{clusters}c,"
+        f"engine_scale_{num_nodes}n_{clusters}c_{placement},"
         f"batched={1e6*dt_b/burst:.2f}us/decision,"
         f"per_task={1e6*dt_p/burst:.2f}us/decision,"
         f"nodes={num_nodes}|burst={burst}|clusters={clusters}|"
-        f"speedup={speedup:.1f}x"
+        f"placement={placement}|speedup={speedup:.1f}x"
     )
     return {
         "nodes": num_nodes,
         "burst": burst,
         "clusters": clusters,
+        "placement": placement,
         "batched_us_per_decision": round(1e6 * dt_b / burst, 3),
         "per_task_us_per_decision": round(1e6 * dt_p / burst, 3),
         "speedup": round(speedup, 2),
@@ -183,6 +199,12 @@ def main():
                     help="federated cluster count for the engine benchmark "
                          "(default: 1, plus a {1,2,4} sweep at the largest "
                          "engine size when no --nodes is given)")
+    ap.add_argument("--placement", default=None,
+                    choices=list(PLACEMENTS.names()) + ["all"],
+                    help="placement policy for the engine benchmark "
+                         "(default: worst_fit, plus an all-policies sweep "
+                         "at the smallest engine size when no --nodes is "
+                         "given; 'all' sweeps every registered policy)")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-core", action="store_true")
@@ -218,9 +240,20 @@ def main():
                 cluster_axis = [1, 2, 4]
             else:
                 cluster_axis = [1]
+            if args.placement == "all":
+                placement_axis = list(PLACEMENTS.names())
+            elif args.placement is not None:
+                placement_axis = [args.placement]
+            elif args.nodes is None and n == engine_sizes[0]:
+                # The placement trajectory rides the smallest sweep size.
+                placement_axis = list(PLACEMENTS.names())
+            else:
+                placement_axis = ["worst_fit"]
             for c in cluster_axis:
-                results["engine"].append(
-                    report_engine(n, args.burst, args.repeats, clusters=c))
+                for pol in placement_axis:
+                    results["engine"].append(
+                        report_engine(n, args.burst, args.repeats,
+                                      clusters=c, placement=pol))
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(results, fh, indent=2)

@@ -2,22 +2,30 @@
 
     PYTHONPATH=src python examples/oom_selfheal.py
 """
-from repro.engine import EngineConfig, run_experiment
+from repro.api import Scenario, run_scenario
 
 
 def main():
     # §6.2.2: min_mem declared far below what the task really touches.
-    kw = dict(mem=2600.0, min_mem=200.0, actual_min_mem=2000.0)
-    m = run_experiment("montage", [(0.0, 10)], "aras", seed=0,
-                       config=EngineConfig(), task_kwargs=kw)
-    print(f"OOMKilled events: {len(m.oom_events)}, "
-          f"reallocations: {len(m.realloc_events)}")
+    scenario = Scenario(
+        name="oom-selfheal",
+        workflows=("montage",),
+        arrival="constant",
+        arrival_params={"y": 10, "bursts": 1},
+        task_kwargs={"mem": 2600.0, "min_mem": 200.0,
+                     "actual_min_mem": 2000.0},
+    )
+    result = run_scenario(scenario)
+    m = result.metrics
+    print(f"OOMKilled events: {result.num_oom_events}, "
+          f"reallocations: {result.num_reallocations}")
     print("timeline (first 5):")
     for (t_oom, key), (t_re, _) in list(zip(m.oom_events,
                                             m.realloc_events))[:5]:
         print(f"  {key:28s} OOMKilled @{t_oom:7.1f}s -> "
               f"reallocated @{t_re:7.1f}s")
-    print(f"all 10 workflows completed; makespan {m.makespan/60:.1f} min")
+    print(f"all {result.num_workflows} workflows completed; "
+          f"makespan {result.avg_total_duration/60:.1f} min")
 
 
 if __name__ == "__main__":

@@ -1,26 +1,30 @@
-"""Quickstart: one Montage workflow through KubeAdaptor + ARAS.
+"""Quickstart: one Montage workflow through the Scenario API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.engine import EngineConfig, KubeAdaptor
-from repro.workflows.dags import montage
+from repro.api import Scenario, run_scenario
 
 
 def main():
-    engine = KubeAdaptor(EngineConfig())
-    wf = montage("demo", np.random.default_rng(0))
-    print(f"workflow: {wf.num_tasks} tasks, "
-          f"critical path {wf.critical_path_length():.0f}s")
-    engine.submit(wf, at=0.0)
-    m = engine.run()
+    scenario = Scenario(
+        name="quickstart",
+        workflows=("montage",),
+        arrival="constant",
+        arrival_params={"y": 1, "bursts": 1},
+    )
+    result = run_scenario(scenario)
 
-    print(f"makespan: {m.makespan/60:.2f} min")
-    print(f"allocations: {m.num_allocations}, waits: {m.num_waits}")
+    wf = result.num_workflows
+    print(f"scenario: {scenario.name} ({wf} workflow, "
+          f"{result.num_allocations} allocations, "
+          f"{result.num_waits} waits)")
+    print(f"makespan: {result.avg_total_duration/60:.2f} min, "
+          f"usage cpu/mem {result.cpu_usage_rate:.0%}/"
+          f"{result.mem_usage_rate:.0%}")
     print("first allocations (time, task, cpu_m, mem_Mi, Alg.3 scenario):")
-    for t, key, cpu, mem, scen in m.alloc_trace[:6]:
+    for t, key, cpu, mem, scen in result.metrics.alloc_trace[:6]:
         print(f"  t={t:6.1f}s {key:22s} {cpu:7.1f}m {mem:7.1f}Mi {scen}")
+    print("as JSON:", result.to_json()[:120], "...")
 
 
 if __name__ == "__main__":

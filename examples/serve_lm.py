@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models.api import build_model
-from repro.serving.engine import ServeConfig, ServeEngine
+from repro.serving import ServeConfig, ServeEngine
 
 
 def main():

@@ -1,0 +1,53 @@
+"""repro.api — the composable public surface of the reproduction.
+
+Three layers (see the README "Scenario API" section):
+
+* **registries** (:mod:`repro.api.registry`) — pluggable allocators,
+  placement policies, sequential-core backends and arrival patterns,
+  registered by decorator with capability flags;
+* **typed configs** (:mod:`repro.api.config`) — frozen
+  ``ClusterConfig`` / ``AllocatorConfig`` / ``TimingConfig`` composed
+  into ``EngineConfig`` (JSON-round-trippable, ``validate()``, flat
+  kwargs deprecated but shimmed);
+* **scenarios** (:mod:`repro.api.scenario`) — declarative ``Scenario``
+  specs, the ``run_scenario()`` runner and its structured ``RunResult``.
+"""
+from repro.api.config import (
+    AllocatorConfig,
+    ClusterConfig,
+    EngineConfig,
+    TimingConfig,
+)
+from repro.api.registry import (
+    ALLOCATORS,
+    ARRIVALS,
+    BACKENDS,
+    PLACEMENTS,
+    Registry,
+    RegistryEntry,
+)
+from repro.api.scenario import (
+    RunResult,
+    Scenario,
+    grid,
+    run_grid,
+    run_scenario,
+)
+
+__all__ = [
+    "ALLOCATORS",
+    "ARRIVALS",
+    "BACKENDS",
+    "PLACEMENTS",
+    "Registry",
+    "RegistryEntry",
+    "AllocatorConfig",
+    "ClusterConfig",
+    "EngineConfig",
+    "TimingConfig",
+    "RunResult",
+    "Scenario",
+    "grid",
+    "run_grid",
+    "run_scenario",
+]

@@ -1,0 +1,321 @@
+"""Typed engine configuration: frozen sub-configs composed into EngineConfig.
+
+The flat ~20-field ``EngineConfig`` grew one knob per PR; this module
+splits it along the paper's own seams:
+
+* :class:`ClusterConfig` — the testbed (§6.1.1): node count/shapes and
+  the federated multi-cluster layout (``num_clusters``, device
+  ``sharding``).
+* :class:`AllocatorConfig` — the Resource Manager: algorithm (registry
+  name), ARAS alpha/beta, placement policy, sequential-core backend and
+  the burst-vs-per-task allocation unit.
+* :class:`TimingConfig` — the discrete-event delays of Figs. 1/9:
+  startup, cleanup, restart, OOM fraction, stress duration multiplier.
+
+``EngineConfig`` composes the three (plus the ``invariant_checks`` debug
+flag), JSON-round-trips via ``to_dict``/``from_dict``, and fails early
+with actionable messages via :meth:`EngineConfig.validate`.
+
+The old flat *constructor keywords* (``EngineConfig(num_nodes=...,
+alpha=...)``) still work for one release through a deprecation shim that
+routes each flat kwarg into its sub-config and emits a
+``DeprecationWarning``; the shim builds a config *identical* to the
+composed form (gated by ``tests/test_scenario_api.py``).  The shim
+covers construction only: attribute access is composed
+(``cfg.cluster.num_nodes``) and the config is frozen — there are no
+flat read-back properties and no field mutation.  ``evolve()`` is the
+blessed, warning-free way to tweak either flat or composed fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Any, Dict, Optional
+
+from repro.core.types import DEFAULT_ALPHA, DEFAULT_BETA
+
+
+def _err(message: str) -> ValueError:
+    return ValueError(message)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """The cluster (federation) under management — paper §6.1.1 testbed."""
+
+    num_nodes: int = 6
+    # §6.1.1: 8-core / 16 GB workers; ~15% is system-reserved (kubelet,
+    # kube-proxy, KubeAdaptor's own pods), as on the paper's testbed.
+    node_cpu: float = 6800.0  # allocatable millicores
+    node_mem: float = 13600.0  # allocatable MiB
+    # Federated multi-cluster mode (repro.cluster.federation): the node
+    # table is partitioned into `num_clusters` contiguous cluster shards,
+    # residual tiles go cluster-major with per-shard totals, and accepts
+    # debit only the owning shard.  1 = the single-cluster paper setup.
+    num_clusters: int = 1
+    # Device layout of the cluster shards: "auto" shards the residual
+    # tiles across a `clusters` jax.sharding mesh when some device count
+    # > 1 divides num_clusters (single device: replicated fallback,
+    # arithmetic unchanged); "off" never shards; "force" additionally
+    # routes num_clusters=1 through the federated K=1 layout — the
+    # bit-for-bit regression lever the cross-shard parity suite pulls.
+    sharding: str = "auto"
+
+    def validate(self) -> "ClusterConfig":
+        from repro.cluster.federation import (
+            SHARDING_POLICIES, FederatedLayout,
+        )
+
+        if self.num_nodes < 1:
+            raise _err(f"ClusterConfig.num_nodes must be >= 1, "
+                       f"got {self.num_nodes}")
+        if self.node_cpu <= 0 or self.node_mem <= 0:
+            raise _err(
+                f"ClusterConfig node shapes must be positive, got "
+                f"node_cpu={self.node_cpu}, node_mem={self.node_mem}"
+            )
+        # One source of truth for the partition rule (raises a
+        # num_clusters-naming error on an impossible split).
+        FederatedLayout.split(self.num_nodes, self.num_clusters)
+        if self.sharding not in SHARDING_POLICIES:
+            raise _err(
+                f"unknown cluster_sharding policy {self.sharding!r} "
+                f"(want one of {SHARDING_POLICIES})"
+            )
+        if self.sharding == "auto" and self.num_clusters > 1:
+            import jax
+
+            from repro.launch.mesh import usable_cluster_devices
+
+            devices = jax.device_count()
+            if devices > 1 and usable_cluster_devices(self.num_clusters) <= 1:
+                # The runtime falls back to one unsharded device (the
+                # documented behaviour), so this is a foot-gun warning,
+                # not an error — the config still runs correctly.
+                warnings.warn(
+                    f"cluster_sharding='auto' with num_clusters="
+                    f"{self.num_clusters} cannot use the {devices} "
+                    f"available devices (no device split > 1 divides the "
+                    f"cluster count) and will run unsharded on one "
+                    f"device; pick a num_clusters sharing a factor with "
+                    f"the device count to enable device sharding, or "
+                    f"set sharding='off' to silence this",
+                    RuntimeWarning, stacklevel=2,
+                )
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocatorConfig:
+    """The Resource Manager: algorithm + placement + sequential core."""
+
+    algorithm: str = "aras"  # repro.api.registry.ALLOCATORS name
+    alpha: float = DEFAULT_ALPHA
+    beta: float = DEFAULT_BETA
+    # Placement policy inside the fused dispatch (PLACEMENTS registry):
+    # worst_fit (seed behaviour) | best_fit | first_fit | balanced
+    # (kube-scheduler NodeResourcesFit least-allocated scoring) | any
+    # registered third-party policy.
+    placement: str = "worst_fit"
+    # Sequential-core backend (BACKENDS registry): "auto" picks the
+    # Pallas kernel on TPU and the lax.scan reference elsewhere.
+    backend: str = "auto"
+    # Burst-at-a-time allocation (one fused dispatch per timestamp burst).
+    # False replays the same burst one dispatch per row — the bit-for-bit
+    # parity reference and the bisecting tool for kernel regressions.
+    batch_allocation: bool = True
+
+    def validate(self) -> "AllocatorConfig":
+        from repro.api.registry import ALLOCATORS, BACKENDS, PLACEMENTS
+
+        ALLOCATORS.get(self.algorithm)  # raises with registered names
+        PLACEMENTS.get(self.placement)
+        if self.backend != "auto":
+            BACKENDS.get(self.backend)
+        if not 0.0 < self.alpha <= 1.0:
+            raise _err(
+                f"AllocatorConfig.alpha is the single-node saturation "
+                f"guard, need 0 < alpha <= 1, got {self.alpha}"
+            )
+        if self.beta < 0:
+            raise _err(f"AllocatorConfig.beta is a memory headroom in "
+                       f"MiB, need beta >= 0, got {self.beta}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingConfig:
+    """Discrete-event delays of the pod lifecycle (Figs. 1 and 9)."""
+
+    pod_startup_delay: float = 40.0  # schedule + image pull + start
+    cleanup_delay: float = 5.0  # Task Container Cleaner latency
+    restart_delay: float = 2.0  # OOM watch → regenerate latency
+    oom_fraction: float = 0.3  # OOM fires this far into the run
+    # §6.1.3: Stress CPU/memory operations last twice the task `duration`,
+    # so pod wall time = startup + duration_multiplier · duration.
+    duration_multiplier: float = 2.0
+    max_time: float = 1e7
+
+    def validate(self) -> "TimingConfig":
+        for field in ("pod_startup_delay", "cleanup_delay", "restart_delay"):
+            if getattr(self, field) < 0:
+                raise _err(f"TimingConfig.{field} is a delay in seconds, "
+                           f"need >= 0, got {getattr(self, field)}")
+        if not 0.0 <= self.oom_fraction <= 1.0:
+            raise _err(f"TimingConfig.oom_fraction must lie in [0, 1], "
+                       f"got {self.oom_fraction}")
+        if self.duration_multiplier <= 0:
+            raise _err(f"TimingConfig.duration_multiplier must be > 0, "
+                       f"got {self.duration_multiplier}")
+        if self.max_time <= 0:
+            raise _err(f"TimingConfig.max_time must be > 0, "
+                       f"got {self.max_time}")
+        return self
+
+
+# Flat (deprecated) kwarg -> (sub-config field of EngineConfig, field).
+_FLAT_MAP: Dict[str, tuple] = {
+    "num_nodes": ("cluster", "num_nodes"),
+    "node_cpu": ("cluster", "node_cpu"),
+    "node_mem": ("cluster", "node_mem"),
+    "num_clusters": ("cluster", "num_clusters"),
+    "cluster_sharding": ("cluster", "sharding"),
+    "allocator": ("alloc", "algorithm"),
+    "alpha": ("alloc", "alpha"),
+    "beta": ("alloc", "beta"),
+    "placement": ("alloc", "placement"),
+    "alloc_backend": ("alloc", "backend"),
+    "batch_allocation": ("alloc", "batch_allocation"),
+    "pod_startup_delay": ("timing", "pod_startup_delay"),
+    "cleanup_delay": ("timing", "cleanup_delay"),
+    "restart_delay": ("timing", "restart_delay"),
+    "oom_fraction": ("timing", "oom_fraction"),
+    "duration_multiplier": ("timing", "duration_multiplier"),
+    "max_time": ("timing", "max_time"),
+}
+
+_SUB_TYPES = {"cluster": ClusterConfig, "alloc": AllocatorConfig,
+              "timing": TimingConfig}
+
+
+def _merge_flat(cluster: ClusterConfig, alloc: AllocatorConfig,
+                timing: TimingConfig, flat: Dict[str, Any]):
+    """Route flat kwargs into the sub-configs they now live in."""
+    unknown = sorted(set(flat) - set(_FLAT_MAP))
+    if unknown:
+        raise TypeError(
+            f"EngineConfig got unexpected keyword argument(s) {unknown}; "
+            f"composed fields are cluster/alloc/timing/invariant_checks, "
+            f"legacy flat fields are {sorted(_FLAT_MAP)}"
+        )
+    parts = {"cluster": cluster, "alloc": alloc, "timing": timing}
+    updates: Dict[str, Dict[str, Any]] = {}
+    for key, value in flat.items():
+        part, field = _FLAT_MAP[key]
+        updates.setdefault(part, {})[field] = value
+    for part, kwargs in updates.items():
+        parts[part] = dataclasses.replace(parts[part], **kwargs)
+    return parts["cluster"], parts["alloc"], parts["timing"]
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class EngineConfig:
+    """Composed engine configuration (cluster × allocator × timing).
+
+    Construct it composed::
+
+        EngineConfig(cluster=ClusterConfig(num_nodes=64),
+                     alloc=AllocatorConfig(algorithm="fcfs"))
+
+    The old flat keywords (``EngineConfig(num_nodes=64,
+    allocator="fcfs")``) still work for one release, emit a
+    ``DeprecationWarning`` and build an identical config.
+    """
+
+    cluster: ClusterConfig
+    alloc: AllocatorConfig
+    timing: TimingConfig
+    # Per-event O(nodes+pods) accounting cross-checks; disable for
+    # large-scale benchmarking.
+    invariant_checks: bool
+
+    def __init__(self,
+                 cluster: Optional[ClusterConfig] = None,
+                 alloc: Optional[AllocatorConfig] = None,
+                 timing: Optional[TimingConfig] = None,
+                 invariant_checks: bool = True,
+                 **flat: Any):
+        cluster, alloc, timing = _merge_flat(
+            cluster or ClusterConfig(), alloc or AllocatorConfig(),
+            timing or TimingConfig(), flat,
+        )
+        if flat:  # only warn for kwargs that actually mapped somewhere
+            warnings.warn(
+                f"flat EngineConfig keyword(s) {sorted(flat)} are "
+                f"deprecated; compose ClusterConfig / AllocatorConfig / "
+                f"TimingConfig instead (or use EngineConfig.evolve)",
+                DeprecationWarning, stacklevel=2,
+            )
+        object.__setattr__(self, "cluster", cluster)
+        object.__setattr__(self, "alloc", alloc)
+        object.__setattr__(self, "timing", timing)
+        object.__setattr__(self, "invariant_checks", bool(invariant_checks))
+
+    # ------------------------------------------------------------- updates
+    def evolve(self, **updates: Any) -> "EngineConfig":
+        """Return a copy with updates applied — composed or flat names.
+
+        Accepts sub-config objects (``cluster=ClusterConfig(...)``),
+        whole-field replacements (``invariant_checks=False``) and flat
+        field names (``allocator="fcfs"``, ``placement=...``) without
+        the constructor's deprecation warning; this is the supported
+        spelling for one-knob tweaks.
+        """
+        cluster = updates.pop("cluster", self.cluster)
+        alloc = updates.pop("alloc", self.alloc)
+        timing = updates.pop("timing", self.timing)
+        checks = updates.pop("invariant_checks", self.invariant_checks)
+        cluster, alloc, timing = _merge_flat(cluster, alloc, timing, updates)
+        return EngineConfig(cluster=cluster, alloc=alloc, timing=timing,
+                            invariant_checks=checks)
+
+    # ---------------------------------------------------------- validation
+    def validate(self) -> "EngineConfig":
+        """Fail early, with actionable messages, on an invalid config."""
+        self.cluster.validate()
+        self.alloc.validate()
+        self.timing.validate()
+        return self
+
+    # --------------------------------------------------------- (de)serial
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "cluster": dataclasses.asdict(self.cluster),
+            "alloc": dataclasses.asdict(self.alloc),
+            "timing": dataclasses.asdict(self.timing),
+            "invariant_checks": self.invariant_checks,
+        }
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "EngineConfig":
+        unknown = sorted(set(data) - set(_SUB_TYPES) - {"invariant_checks"})
+        if unknown:
+            raise ValueError(
+                f"unknown EngineConfig field(s) {unknown} "
+                f"(want cluster/alloc/timing/invariant_checks; flat "
+                f"fields do not appear in the serialized form)"
+            )
+        kwargs: Dict[str, Any] = {}
+        for part, sub_cls in _SUB_TYPES.items():
+            if part in data:
+                kwargs[part] = sub_cls(**data[part])
+        return cls(invariant_checks=data.get("invariant_checks", True),
+                   **kwargs)
+
+    def to_json(self, **dumps_kwargs: Any) -> str:
+        return json.dumps(self.to_dict(), **dumps_kwargs)
+
+    @classmethod
+    def from_json(cls, text: str) -> "EngineConfig":
+        return cls.from_dict(json.loads(text))

@@ -1,0 +1,172 @@
+"""Decorator-based plugin registries for the composable Scenario API.
+
+The engine's pluggable functional units (KubeAdaptor is explicitly a
+docking framework, arXiv:2207.01222) were selected by string-dispatch
+``if`` chains spread across ``core/allocator.py``, ``core/placement.py``,
+``kernels/alloc_scan/ops.py`` and ``workflows/arrival.py``.  This module
+replaces those chains with four registries, so a third-party allocator,
+placement policy, sequential-core backend or arrival pattern plugs in
+with one decorator and no edits to core files:
+
+    from repro.api.registry import PLACEMENTS
+
+    @PLACEMENTS.register("most_free_mem",
+                         doc="max residual memory among fitting nodes")
+    def _most_free_mem(res_cpu, res_mem, cpu, mem, cap_cpu, cap_mem):
+        return res_mem                       # any jnp expression works
+
+    EngineConfig(alloc=AllocatorConfig(placement="most_free_mem"))
+
+Entries carry **capability flags** — free-form strings the engine and
+``validate()`` consult instead of hard-coding per-name behaviour (e.g.
+``needs_capacity_view`` makes ``placement_key`` demand per-node
+allocatable capacities; ``adaptive_scaling`` tells the engine to hand the
+allocator its alpha/beta knobs).
+
+Built-in entries live next to their implementations (the modules named in
+``bootstrap_modules``) and are imported lazily on first lookup, so the
+registry module itself sits at the bottom of the import graph and never
+cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class RegistryEntry:
+    """One registered plugin: a factory plus static metadata."""
+
+    name: str
+    factory: Callable[..., Any]
+    capabilities: frozenset
+    doc: str = ""
+
+    def supports(self, capability: str) -> bool:
+        return capability in self.capabilities
+
+
+class Registry:
+    """A named collection of :class:`RegistryEntry`.
+
+    ``bootstrap_modules`` are imported (once, lazily) before the first
+    lookup so built-in entries registered at those modules' import time
+    are always visible, regardless of what the caller imported first.
+    """
+
+    def __init__(self, kind: str, *,
+                 bootstrap_modules: Tuple[str, ...] = ()):
+        self.kind = kind
+        self._entries: Dict[str, RegistryEntry] = {}
+        self._aliases: Dict[str, str] = {}
+        self._bootstrap_modules = tuple(bootstrap_modules)
+        self._bootstrapped = not bootstrap_modules
+
+    # ------------------------------------------------------------- plumbing
+    def _bootstrap(self) -> None:
+        if self._bootstrapped:
+            return
+        self._bootstrapped = True  # set first: the modules import us back
+        try:
+            for mod in self._bootstrap_modules:
+                importlib.import_module(mod)
+        except BaseException:
+            # Let the next lookup retry (and re-raise the real import
+            # error) instead of reporting a misleading empty registry.
+            self._bootstrapped = False
+            raise
+
+    # ------------------------------------------------------------ mutation
+    def register(self, name: str, *,
+                 capabilities: Tuple[str, ...] = (),
+                 aliases: Tuple[str, ...] = (),
+                 doc: Optional[str] = None,
+                 overwrite: bool = False) -> Callable:
+        """Decorator: register ``factory`` under ``name`` (+ ``aliases``)."""
+
+        def deco(factory: Callable) -> Callable:
+            taken = set(self._entries) | set(self._aliases)
+            clashes = ({name, *aliases} & taken) if not overwrite else set()
+            if clashes:
+                raise ValueError(
+                    f"{self.kind} {sorted(clashes)} already registered "
+                    f"(pass overwrite=True to replace)"
+                )
+            if overwrite:
+                # Drop any stale alias occupying one of the new names, so
+                # the overwriting entry is actually the one resolved.
+                for taken_name in {name, *aliases}:
+                    self._aliases.pop(taken_name, None)
+            summary = doc if doc is not None else \
+                (factory.__doc__ or "").strip().split("\n")[0]
+            self._entries[name] = RegistryEntry(
+                name=name, factory=factory,
+                capabilities=frozenset(capabilities), doc=summary,
+            )
+            for alias in aliases:
+                self._aliases[alias] = name
+            return factory
+
+        return deco
+
+    def unregister(self, name: str) -> None:
+        """Remove an entry and its aliases; given an alias, remove just
+        that alias (no-op for unknown names)."""
+        if name in self._entries:
+            del self._entries[name]
+            for alias in [a for a, c in self._aliases.items() if c == name]:
+                del self._aliases[alias]
+        else:
+            self._aliases.pop(name, None)
+
+    # -------------------------------------------------------------- lookup
+    def get(self, name: str) -> RegistryEntry:
+        """Entry for ``name`` (or an alias); actionable ``ValueError``.
+
+        A canonical entry always wins over an alias of the same name, so
+        overwrite-registrations cannot be shadowed by stale aliases.
+        """
+        self._bootstrap()
+        canonical = name if name in self._entries \
+            else self._aliases.get(name, name)
+        entry = self._entries.get(canonical)
+        if entry is None:
+            raise ValueError(
+                f"unknown {self.kind} {name!r} "
+                f"(registered: {', '.join(self.names()) or 'none'})"
+            )
+        return entry
+
+    def names(self) -> Tuple[str, ...]:
+        """Canonical entry names, sorted (aliases not included)."""
+        self._bootstrap()
+        return tuple(sorted(self._entries))
+
+    def __contains__(self, name: str) -> bool:
+        self._bootstrap()
+        return name in self._entries or name in self._aliases
+
+    def __iter__(self) -> Iterator[RegistryEntry]:
+        self._bootstrap()
+        return iter(self._entries[n] for n in self.names())
+
+    def __len__(self) -> int:
+        self._bootstrap()
+        return len(self._entries)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Registry({self.kind!r}, entries={list(self._entries)})"
+
+
+# The four engine registries.  Built-ins register at import time of the
+# modules that implement them (lazily triggered on first lookup).
+ALLOCATORS = Registry(
+    "allocator", bootstrap_modules=("repro.core.allocator",))
+PLACEMENTS = Registry(
+    "placement policy", bootstrap_modules=("repro.core.placement",))
+BACKENDS = Registry(
+    "alloc backend", bootstrap_modules=("repro.kernels.alloc_scan.ops",))
+ARRIVALS = Registry(
+    "arrival pattern", bootstrap_modules=("repro.workflows.arrival",))

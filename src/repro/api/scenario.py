@@ -1,0 +1,235 @@
+"""Declarative experiment scenarios and the unified runner.
+
+A :class:`Scenario` is the paper's experimental unit made declarative
+(AHPA, arXiv:2303.03640, makes the same move for autoscaling
+comparisons): a workflow set, an arrival pattern (registry name +
+parameters) and an engine configuration, JSON-round-trippable so a sweep
+is data, not wiring.  :func:`run_scenario` executes one scenario through
+the KubeAdaptor engine and returns a structured :class:`RunResult`
+carrying the paper's Table-2 / Fig-9 metrics (avg total duration, avg
+per-workflow duration, CPU/mem usage rates, per-decision latency).
+
+The paper grid — 2 allocators × 3 arrival patterns — is then one
+declarative sweep::
+
+    base = Scenario(workflows=("ligo",))
+    results = [run_scenario(s) for s in grid(base,
+                                             allocators=("aras", "fcfs"),
+                                             arrivals=("constant", "linear",
+                                                       "pyramid"))]
+
+``run_scenario`` with a single workflow kind is injection-for-injection
+identical to the legacy ``repro.engine.run_experiment`` (same rng
+stream, same workflow ids), which ``tests/test_scenario_api.py`` gates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import json
+import time
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from repro.api.config import EngineConfig
+from repro.api.registry import ARRIVALS
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One declarative experiment: workflows × arrival × engine config."""
+
+    name: str = "scenario"
+    # Workflow kinds (repro.workflows.dags builders); injections cycle
+    # through the set, so a single entry reproduces the paper's
+    # one-topology experiments and the full set mixes topologies.
+    workflows: Tuple[str, ...] = ("ligo",)
+    arrival: str = "constant"  # ARRIVALS registry name
+    # Keyword arguments for the arrival builder (e.g. y/bursts/interval).
+    arrival_params: Mapping[str, Any] = dataclasses.field(
+        default_factory=dict)
+    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+    seed: int = 0
+    # Optional task-shape overrides handed to every non-virtual task
+    # builder (repro.workflows.spec.make_task kwargs).
+    task_kwargs: Optional[Mapping[str, Any]] = None
+
+    # ---------------------------------------------------------- validation
+    def validate(self) -> "Scenario":
+        from repro.workflows.dags import WORKFLOW_BUILDERS
+
+        if not self.workflows:
+            raise ValueError("Scenario.workflows must name at least one "
+                             "workflow kind")
+        unknown = [w for w in self.workflows if w not in WORKFLOW_BUILDERS]
+        if unknown:
+            raise ValueError(
+                f"unknown workflow kind(s) {unknown} "
+                f"(registered: {', '.join(sorted(WORKFLOW_BUILDERS))})"
+            )
+        entry = ARRIVALS.get(self.arrival)  # raises with registered names
+        try:
+            # Signature-bind only: validation must not execute the
+            # builder (it may be expensive or stateful) — run_scenario
+            # builds the pattern exactly once, via pattern().
+            inspect.signature(entry.factory).bind(
+                **dict(self.arrival_params))
+        except TypeError as exc:
+            raise ValueError(
+                f"arrival_params {dict(self.arrival_params)} do not fit "
+                f"arrival pattern {self.arrival!r}: {exc}"
+            ) from exc
+        self.engine.validate()
+        return self
+
+    # ------------------------------------------------------------ behavior
+    def pattern(self) -> List[Tuple[float, int]]:
+        """The concrete (time, count) burst list of this scenario."""
+        return ARRIVALS.get(self.arrival).factory(**dict(self.arrival_params))
+
+    def num_workflows(self) -> int:
+        return sum(count for _, count in self.pattern())
+
+    # --------------------------------------------------------- (de)serial
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "workflows": list(self.workflows),
+            "arrival": self.arrival,
+            "arrival_params": dict(self.arrival_params),
+            "engine": self.engine.to_dict(),
+            "seed": self.seed,
+            "task_kwargs": dict(self.task_kwargs)
+            if self.task_kwargs is not None else None,
+        }
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "Scenario":
+        kwargs = dict(data)
+        if "workflows" in kwargs:
+            workflows = kwargs["workflows"]
+            kwargs["workflows"] = ((workflows,)
+                                   if isinstance(workflows, str)
+                                   else tuple(workflows))
+        if "engine" in kwargs:
+            kwargs["engine"] = EngineConfig.from_dict(kwargs["engine"])
+        return cls(**kwargs)
+
+    def to_json(self, **dumps_kwargs: Any) -> str:
+        return json.dumps(self.to_dict(), **dumps_kwargs)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Scenario":
+        return cls.from_dict(json.loads(text))
+
+
+def grid(base: Scenario, *,
+         allocators: Tuple[str, ...] = ("aras", "fcfs"),
+         arrivals: Tuple[str, ...] = ("constant", "linear", "pyramid"),
+         ) -> List[Scenario]:
+    """The paper's evaluation grid as a flat list of scenarios.
+
+    Every (allocator, arrival) pair of the sweep becomes one scenario
+    derived from ``base`` (name suffixed ``-<allocator>-<arrival>``);
+    ``base.arrival_params`` apply to every arrival pattern, so pass only
+    parameters the swept patterns share (or none for the paper defaults).
+    """
+    return [
+        dataclasses.replace(
+            base,
+            name=f"{base.name}-{algorithm}-{arrival}",
+            arrival=arrival,
+            engine=base.engine.evolve(allocator=algorithm),
+        )
+        for algorithm in allocators
+        for arrival in arrivals
+    ]
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Structured outcome of one scenario — §6.1.5 metrics + trace.
+
+    The scalar fields are the paper's comparison metrics (Table 2 /
+    Fig. 9) and JSON-serialize via :meth:`to_dict`; ``metrics`` keeps the
+    full :class:`repro.engine.EngineMetrics` trace (usage series,
+    allocation trace, OOM events) for plotting and is deliberately left
+    out of the serialized form.
+    """
+
+    scenario: Scenario
+    avg_total_duration: float  # makespan: Total Duration of All Workflows
+    avg_workflow_duration: float
+    cpu_usage_rate: float  # time-weighted quota / allocatable
+    mem_usage_rate: float
+    per_decision_latency_us: float
+    num_workflows: int
+    num_allocations: int
+    num_waits: int
+    num_oom_events: int
+    num_reallocations: int
+    sla_violation_rate: float
+    wall_time_s: float
+    metrics: Any = dataclasses.field(repr=False, compare=False, default=None)
+
+    def to_dict(self) -> Dict[str, Any]:
+        out = {
+            field.name: getattr(self, field.name)
+            for field in dataclasses.fields(self)
+            if field.name not in ("scenario", "metrics")
+        }
+        out["scenario"] = self.scenario.to_dict()
+        return out
+
+    def to_json(self, **dumps_kwargs: Any) -> str:
+        return json.dumps(self.to_dict(), **dumps_kwargs)
+
+
+def run_scenario(scenario: Scenario) -> RunResult:
+    """Validate, execute and summarize one scenario.
+
+    Workflows are injected with the same rng stream and id scheme as the
+    legacy ``run_experiment`` (``<kind>-<index>`` against one
+    ``default_rng(seed)``), so a single-kind scenario reproduces it bit
+    for bit; multi-kind scenarios cycle the workflow set per injection.
+    """
+    import numpy as np
+
+    from repro.engine.kubeadaptor import KubeAdaptor
+    from repro.workflows.dags import WORKFLOW_BUILDERS
+
+    scenario.validate()
+    engine = KubeAdaptor(scenario.engine)
+    rng = np.random.default_rng(scenario.seed)
+    task_kwargs = dict(scenario.task_kwargs) if scenario.task_kwargs else None
+    idx = 0
+    for t, count in scenario.pattern():
+        for _ in range(count):
+            kind = scenario.workflows[idx % len(scenario.workflows)]
+            spec = WORKFLOW_BUILDERS[kind](f"{kind}-{idx}", rng, task_kwargs)
+            engine.submit(spec, t)
+            idx += 1
+    t0 = time.perf_counter()
+    metrics = engine.run()
+    wall = time.perf_counter() - t0
+    decisions = max(metrics.num_allocations, 1)
+    return RunResult(
+        scenario=scenario,
+        avg_total_duration=metrics.makespan,
+        avg_workflow_duration=metrics.avg_workflow_duration,
+        cpu_usage_rate=metrics.avg_cpu_usage,
+        mem_usage_rate=metrics.avg_mem_usage,
+        per_decision_latency_us=1e6 * wall / decisions,
+        num_workflows=len(metrics.workflow_durations),
+        num_allocations=metrics.num_allocations,
+        num_waits=metrics.num_waits,
+        num_oom_events=len(metrics.oom_events),
+        num_reallocations=len(metrics.realloc_events),
+        sla_violation_rate=metrics.sla_violation_rate,
+        wall_time_s=wall,
+        metrics=metrics,
+    )
+
+
+def run_grid(scenarios: List[Scenario]) -> List[RunResult]:
+    """Run a list of scenarios (e.g. from :func:`grid`), in order."""
+    return [run_scenario(s) for s in scenarios]

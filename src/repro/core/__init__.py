@@ -1,6 +1,7 @@
 # ARAS — the paper's primary contribution (Algorithms 1-3 + MAPE-K),
 # implemented as vectorized JAX with a thin object front-end.
 from repro.core.allocator import AdaptiveAllocator, FCFSAllocator, make_allocator
+from repro.core.discovery import discover, node_residuals
 from repro.core.evaluation import EvalInputs, EvalResult, evaluate, evaluate_batch
 from repro.core.mapek import MapeK
 from repro.core.placement import PLACEMENT_POLICIES, pick_node
@@ -21,6 +22,8 @@ __all__ = [
     "AdaptiveAllocator",
     "FCFSAllocator",
     "make_allocator",
+    "discover",
+    "node_residuals",
     "EvalInputs",
     "EvalResult",
     "evaluate",

@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import ALLOCATORS
 from repro.cluster import federation
 from repro.cluster.federation import FederatedLayout
 from repro.core import discovery, lifecycle
@@ -539,12 +540,35 @@ class FCFSAllocator:
         return allocation_at(result, 0)
 
 
+# Registry entries (repro.api.registry.ALLOCATORS): the engine selects
+# allocators by name and consults capability flags instead of
+# string-matching — ``adaptive_scaling`` tells it to hand over the ARAS
+# alpha/beta knobs; third-party allocators register the same way.
+
+@ALLOCATORS.register(
+    "aras",
+    capabilities=("adaptive_scaling", "federation_aware",
+                  "lifecycle_window"),
+    doc="ARAS (Alg. 1): lifecycle-window demand + Alg. 3 adaptive "
+        "scaling")
+def _build_aras(**kwargs) -> AdaptiveAllocator:
+    return AdaptiveAllocator(**kwargs)
+
+
+@ALLOCATORS.register(
+    "fcfs",
+    aliases=("baseline",),
+    capabilities=("federation_aware",),
+    doc="§6.1.6 baseline: first-come-first-serve full-request allocation")
+def _build_fcfs(**kwargs) -> FCFSAllocator:
+    # FCFS has no scaling knobs: accept-and-drop alpha/beta so callers
+    # can hand every allocator the same kwargs.
+    return FCFSAllocator(
+        **{k: v for k, v in kwargs.items()
+           if k in ("placement", "backend", "layout", "cluster_sharding")}
+    )
+
+
 def make_allocator(name: str, **kwargs) -> AdaptiveAllocator | FCFSAllocator:
-    if name == "aras":
-        return AdaptiveAllocator(**kwargs)
-    if name in ("fcfs", "baseline"):
-        return FCFSAllocator(
-            **{k: v for k, v in kwargs.items()
-               if k in ("placement", "backend", "layout", "cluster_sharding")}
-        )
-    raise ValueError(f"unknown allocator {name!r} (want 'aras' or 'fcfs')")
+    """Build a registered allocator by name (see ``ALLOCATORS``)."""
+    return ALLOCATORS.get(name).factory(**kwargs)

@@ -44,6 +44,11 @@ def _residuals(
     return allocatable_cpu - node_req_cpu, allocatable_mem - node_req_mem
 
 
+# Public name for array-level callers (e.g. benchmarks) that hold raw
+# node/pod arrays rather than a ClusterSnapshot.
+node_residuals = _residuals
+
+
 def discover(snapshot: ClusterSnapshot) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """ResidualMap equivalent: arrays of per-node residual CPU / memory."""
     return _residuals(

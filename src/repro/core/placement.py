@@ -3,7 +3,17 @@
 The paper delegates placement to the default K8s scheduler; the seed
 hard-coded worst-fit (max-residual-CPU node, mirroring ARAS's orientation
 toward the max-residual node, Alg. 1 lines 19-22).  Placement is a
-policy selected via ``EngineConfig.placement``:
+policy selected via ``AllocatorConfig.placement`` and resolved through
+the ``repro.api.registry.PLACEMENTS`` registry — third-party policies
+register a score function with one decorator and no edits here:
+
+    from repro.api.registry import PLACEMENTS
+
+    @PLACEMENTS.register("most_free_mem")
+    def _most_free_mem(res_cpu, res_mem, cpu, mem, cap_cpu, cap_mem):
+        return res_mem
+
+Built-ins:
 
 * ``worst_fit``  — max residual CPU among fitting nodes (seed behaviour;
   spreads load, keeps the max-residual node large for ARAS scaling)
@@ -14,7 +24,8 @@ policy selected via ``EngineConfig.placement``:
 * ``balanced``   — kube-scheduler NodeResourcesFit least-allocated score:
   the mean of the post-placement free CPU and memory *fractions*
   ``((res−req)/cap)``, so a node with slack in both dimensions beats one
-  maxed out on either.  Needs per-node allocatable capacities.
+  maxed out on either.  Carries the ``needs_capacity_view`` capability
+  flag: per-node allocatable capacities are required.
 
 Each policy reduces to ``argmax`` over a per-node *key* — the policy
 score where the pod fits, ``-inf`` elsewhere — so the choice compiles
@@ -33,10 +44,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.registry import PLACEMENTS
+
 # Fit slack mirroring the seed's ``_best_node_for`` epsilon.
 _FIT_EPS = 1e-6
-
-PLACEMENT_POLICIES = ("worst_fit", "best_fit", "first_fit", "balanced")
 
 
 def _node_index(residual_cpu: jax.Array) -> jax.Array:
@@ -47,6 +58,54 @@ def _node_index(residual_cpu: jax.Array) -> jax.Array:
     blk = jax.lax.broadcasted_iota(jnp.int32, (nb, lane), 0)
     off = jax.lax.broadcasted_iota(jnp.int32, (nb, lane), 1)
     return blk * lane + off
+
+
+# Built-in score functions.  Signature contract (all registered
+# policies): (residual_cpu, residual_mem, cpu, mem, cap_cpu, cap_mem) →
+# per-node score, shape-polymorphic over [m] and [nb, lane] tiles, as
+# jnp expressions only (the score is traced inside the fused dispatch
+# and the Pallas sequential core alike).
+
+@PLACEMENTS.register(
+    "worst_fit",
+    doc="max residual CPU among fitting nodes (seed behaviour)")
+def _worst_fit(residual_cpu, residual_mem, cpu, mem, cap_cpu, cap_mem):
+    return residual_cpu
+
+
+@PLACEMENTS.register(
+    "best_fit",
+    doc="min residual CPU among fitting nodes (packs tightly)")
+def _best_fit(residual_cpu, residual_mem, cpu, mem, cap_cpu, cap_mem):
+    return -residual_cpu
+
+
+@PLACEMENTS.register(
+    "first_fit",
+    doc="lowest node index that fits (kube score-less fallback)")
+def _first_fit(residual_cpu, residual_mem, cpu, mem, cap_cpu, cap_mem):
+    # Strictly decreasing in the index: argmax = first fitting node.
+    return -_node_index(residual_cpu).astype(residual_cpu.dtype)
+
+
+@PLACEMENTS.register(
+    "balanced",
+    capabilities=("needs_capacity_view",),
+    doc="kube NodeResourcesFit least-allocated: mean post-placement "
+        "free fraction")
+def _balanced(residual_cpu, residual_mem, cpu, mem, cap_cpu, cap_mem):
+    # Guard capacities so padding lanes (or an empty node) cannot poison
+    # the key with inf/nan — they are excluded by ``fits`` anyway.
+    safe_ccpu = jnp.maximum(cap_cpu, _FIT_EPS)
+    safe_cmem = jnp.maximum(cap_mem, _FIT_EPS)
+    return 0.5 * (
+        (residual_cpu - cpu) / safe_ccpu + (residual_mem - mem) / safe_cmem
+    )
+
+
+# Registered policy names (registry is the source of truth; kept as a
+# module constant for parametrized tests and benchmark axes).
+PLACEMENT_POLICIES = PLACEMENTS.names()
 
 
 def placement_key(
@@ -62,37 +121,20 @@ def placement_key(
 
     Works on flat ``[m]`` residuals and on ``[nb, lane]`` tiles alike
     (padding entries must carry large-negative residuals so they never
-    fit).  ``balanced`` requires ``cap_cpu``/``cap_mem`` (allocatable
-    capacity, same shape as the residuals).
+    fit).  Policies flagged ``needs_capacity_view`` (e.g. ``balanced``)
+    require ``cap_cpu``/``cap_mem`` (allocatable capacity, same shape as
+    the residuals).
     """
-    fits = (residual_cpu >= cpu - _FIT_EPS) & (residual_mem >= mem - _FIT_EPS)
-    if policy == "worst_fit":
-        score = residual_cpu
-    elif policy == "best_fit":
-        score = -residual_cpu
-    elif policy == "first_fit":
-        # Strictly decreasing in the index: argmax = first fitting node.
-        score = -_node_index(residual_cpu).astype(residual_cpu.dtype)
-    elif policy == "balanced":
-        if cap_cpu is None or cap_mem is None:
-            raise ValueError(
-                "placement policy 'balanced' needs per-node allocatable "
-                "capacities (cap_cpu/cap_mem)"
-            )
-        # NodeResourcesFit least-allocated: mean free fraction after
-        # hosting the pod.  Guard capacities so padding lanes (or an
-        # empty node) cannot poison the key with inf/nan — they are
-        # excluded by ``fits`` anyway.
-        safe_ccpu = jnp.maximum(cap_cpu, _FIT_EPS)
-        safe_cmem = jnp.maximum(cap_mem, _FIT_EPS)
-        score = 0.5 * (
-            (residual_cpu - cpu) / safe_ccpu + (residual_mem - mem) / safe_cmem
-        )
-    else:
+    entry = PLACEMENTS.get(policy)  # actionable ValueError on a typo
+    if entry.supports("needs_capacity_view") and \
+            (cap_cpu is None or cap_mem is None):
         raise ValueError(
-            f"unknown placement policy {policy!r} "
-            f"(want one of {PLACEMENT_POLICIES})"
+            f"placement policy {policy!r} needs per-node allocatable "
+            f"capacities (cap_cpu/cap_mem)"
         )
+    fits = (residual_cpu >= cpu - _FIT_EPS) & (residual_mem >= mem - _FIT_EPS)
+    score = entry.factory(residual_cpu, residual_mem, cpu, mem,
+                          cap_cpu, cap_mem)
     return jnp.where(fits, score, -jnp.inf)
 
 

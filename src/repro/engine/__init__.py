@@ -1,15 +1,21 @@
 from repro.engine.kubeadaptor import (
+    AllocatorConfig,
+    ClusterConfig,
     EngineConfig,
     EngineMetrics,
     KubeAdaptor,
+    TimingConfig,
     run_experiment,
 )
 from repro.engine.state_store import StateStore, TaskRecord
 
 __all__ = [
+    "AllocatorConfig",
+    "ClusterConfig",
     "EngineConfig",
     "EngineMetrics",
     "KubeAdaptor",
+    "TimingConfig",
     "run_experiment",
     "StateStore",
     "TaskRecord",

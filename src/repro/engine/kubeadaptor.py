@@ -48,11 +48,17 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.api.config import (
+    AllocatorConfig,
+    ClusterConfig,
+    EngineConfig,
+    TimingConfig,
+)
+from repro.api.registry import ALLOCATORS
 from repro.cluster import federation
 from repro.cluster.simulator import ClusterSim
-from repro.core.allocator import allocation_at, make_allocator
+from repro.core.allocator import allocation_at
 from repro.core.types import (
-    DEFAULT_BETA,
     Allocation,
     BatchAllocation,
     PodPhase,
@@ -71,50 +77,16 @@ _HEAL = _READY + 100  # sorts after same-time READY events
 _DRAIN_KINDS = frozenset((_RETRY, _READY, _HEAL))
 
 
-@dataclasses.dataclass
-class EngineConfig:
-    num_nodes: int = 6
-    # §6.1.1: 8-core / 16 GB workers; ~15% is system-reserved (kubelet,
-    # kube-proxy, KubeAdaptor's own pods), as on the paper's testbed.
-    node_cpu: float = 6800.0  # allocatable millicores
-    node_mem: float = 13600.0  # allocatable MiB
-    allocator: str = "aras"  # "aras" | "fcfs"
-    alpha: float = 0.8
-    beta: float = DEFAULT_BETA
-    # Placement policy inside the fused dispatch (repro.core.placement):
-    # "worst_fit" (seed behaviour) | "best_fit" | "first_fit" | "balanced"
-    # (kube-scheduler NodeResourcesFit least-allocated scoring).
-    placement: str = "worst_fit"
-    # Sequential-core backend (repro.kernels.alloc_scan): "auto" picks the
-    # Pallas kernel on TPU and the lax.scan reference elsewhere.
-    alloc_backend: str = "auto"
-    # Federated multi-cluster mode (repro.cluster.federation): the node
-    # table is partitioned into `num_clusters` contiguous cluster shards,
-    # residual tiles go cluster-major with per-shard totals, and accepts
-    # debit only the owning shard.  1 = the single-cluster paper setup.
-    num_clusters: int = 1
-    # Device layout of the cluster shards: "auto" shards the residual
-    # tiles across a `clusters` jax.sharding mesh when some device count
-    # > 1 divides num_clusters (single device: replicated fallback,
-    # arithmetic unchanged); "off" never shards; "force" additionally
-    # routes num_clusters=1 through the federated K=1 layout — the
-    # bit-for-bit regression lever the cross-shard parity suite pulls.
-    cluster_sharding: str = "auto"
-    # Burst-at-a-time allocation (one fused dispatch per timestamp burst).
-    # False replays the same burst one dispatch per row — the bit-for-bit
-    # parity reference and the bisecting tool for kernel regressions.
-    batch_allocation: bool = True
-    # Per-event O(nodes+pods) accounting cross-checks; disable for
-    # large-scale benchmarking.
-    invariant_checks: bool = True
-    pod_startup_delay: float = 40.0  # schedule + image pull + start (Fig. 9)
-    cleanup_delay: float = 5.0  # Task Container Cleaner latency
-    restart_delay: float = 2.0  # OOM watch → regenerate latency
-    oom_fraction: float = 0.3  # OOM fires this far into the run
-    # §6.1.3: Stress CPU/memory operations last twice the task `duration`,
-    # so pod wall time = startup + duration_multiplier · duration.
-    duration_multiplier: float = 2.0
-    max_time: float = 1e7
+# The engine configuration is the composed, typed form from the
+# Scenario API (repro.api.config): frozen ClusterConfig /
+# AllocatorConfig / TimingConfig composed into EngineConfig, with the
+# old flat kwargs shimmed (DeprecationWarning) for one release.
+# Re-exported here so `from repro.engine import EngineConfig` keeps
+# working across the redesign.
+__all__ = [
+    "AllocatorConfig", "ClusterConfig", "EngineConfig", "EngineMetrics",
+    "KubeAdaptor", "TimingConfig", "WorkflowRun", "run_experiment",
+]
 
 
 @dataclasses.dataclass
@@ -170,26 +142,30 @@ class KubeAdaptor:
     """Discrete-event engine executing workflows under an allocator."""
 
     def __init__(self, config: EngineConfig):
-        # Fail at construction, not first dispatch, on a typo'd policy.
-        federation.validate_sharding_policy(config.cluster_sharding)
+        # Fail at construction, not first dispatch, on a typo'd name or
+        # an impossible federation split (actionable messages).
+        config.validate()
         self.cfg = config
-        self.cluster = ClusterSim(config.num_nodes, config.node_cpu,
-                                  config.node_mem,
-                                  num_clusters=config.num_clusters)
+        cluster_cfg, alloc_cfg = config.cluster, config.alloc
+        self.cluster = ClusterSim(cluster_cfg.num_nodes,
+                                  cluster_cfg.node_cpu,
+                                  cluster_cfg.node_mem,
+                                  num_clusters=cluster_cfg.num_clusters)
         # Burst dispatches go through the federated layout whenever there
         # is more than one cluster; "force" also routes the single-cluster
         # setup through the K=1 federated path (bit-for-bit the legacy
         # allocator — the cross-shard parity suite holds it to that).
         layout = (federation.layout_of(self.cluster)
-                  if config.num_clusters > 1
-                  or config.cluster_sharding == "force" else None)
-        kwargs = {"placement": config.placement,
-                  "backend": config.alloc_backend,
+                  if cluster_cfg.num_clusters > 1
+                  or cluster_cfg.sharding == "force" else None)
+        entry = ALLOCATORS.get(alloc_cfg.algorithm)
+        kwargs = {"placement": alloc_cfg.placement,
+                  "backend": alloc_cfg.backend,
                   "layout": layout,
-                  "cluster_sharding": config.cluster_sharding}
-        if config.allocator == "aras":
-            kwargs.update(alpha=config.alpha, beta=config.beta)
-        self.allocator = make_allocator(config.allocator, **kwargs)
+                  "cluster_sharding": cluster_cfg.sharding}
+        if entry.supports("adaptive_scaling"):
+            kwargs.update(alpha=alloc_cfg.alpha, beta=alloc_cfg.beta)
+        self.allocator = entry.factory(**kwargs)
         self.store = StateStore()
         self.runs: Dict[str, WorkflowRun] = {}
         self.metrics = EngineMetrics()
@@ -271,7 +247,7 @@ class KubeAdaptor:
         generator suspends at ``yield`` while the consumer applies the
         decision) — the sequential MAPE-K reference.
         """
-        if self.cfg.batch_allocation:
+        if self.cfg.alloc.batch_allocation:
             result = self._decide(entries)
             for i in range(len(entries)):
                 yield (bool(result.feasible[i]), bool(result.attempted[i]),
@@ -302,14 +278,15 @@ class KubeAdaptor:
             (self._now, key, alloc.cpu, alloc.mem, alloc.scenario)
         )
         # Will this quota OOM? (§6.2.2: runtime memory floor + β)
-        runtime_floor = task.runtime_min_mem() + self.cfg.beta
-        wall = self.cfg.duration_multiplier * task.duration
+        timing = self.cfg.timing
+        runtime_floor = task.runtime_min_mem() + self.cfg.alloc.beta
+        wall = timing.duration_multiplier * task.duration
         if alloc.mem < runtime_floor - 1e-9 and task.mem > 0:
-            t_oom = self._now + self.cfg.pod_startup_delay + \
-                self.cfg.oom_fraction * wall
+            t_oom = self._now + timing.pod_startup_delay + \
+                timing.oom_fraction * wall
             self._push(t_oom, _OOM, (pod.uid, wf_id))
         else:
-            t_done = self._now + self.cfg.pod_startup_delay + wall
+            t_done = self._now + timing.pod_startup_delay + wall
             self._push(t_done, _COMPLETE, (pod.uid, wf_id))
         self._sample_usage()
 
@@ -405,7 +382,8 @@ class KubeAdaptor:
     def _complete(self, uid: int, wf_id: str) -> None:
         pod = self.cluster.finish(uid, self._now, PodPhase.SUCCEEDED)
         self._sample_usage()
-        self._push(self._now + self.cfg.cleanup_delay, _DELETE, (uid,))
+        self._push(self._now + self.cfg.timing.cleanup_delay, _DELETE,
+                   (uid,))
         self._task_done(wf_id, pod.task.task_id)
         self._push(self._now, _RETRY, ())
 
@@ -415,12 +393,13 @@ class KubeAdaptor:
         self._sample_usage()
         key = f"{wf_id}/{pod.task.task_id}"
         self.metrics.oom_events.append((self._now, key))
-        self._push(self._now + self.cfg.cleanup_delay, _DELETE, (uid,))
+        self._push(self._now + self.cfg.timing.cleanup_delay, _DELETE,
+                   (uid,))
         # Learn the runtime floor so the reallocation cannot repeat the OOM.
         learned = dataclasses.replace(
             pod.task, min_mem=max(pod.task.min_mem, pod.task.runtime_min_mem())
         )
-        self._push(self._now + self.cfg.restart_delay, _HEAL,
+        self._push(self._now + self.cfg.timing.restart_delay, _HEAL,
                    (wf_id, learned))
 
     # ------------------------------------------------------------ run loop
@@ -428,7 +407,7 @@ class KubeAdaptor:
         t_first: Optional[float] = None
         while self._events:
             t, kind, _, payload = heapq.heappop(self._events)
-            if t > self.cfg.max_time:
+            if t > self.cfg.timing.max_time:
                 raise RuntimeError("simulation exceeded max_time — deadlock?")
             self._now = t
             if t_first is None:
@@ -471,7 +450,7 @@ def run_experiment(
     """Inject `pattern` bursts of `workflow_kind` and run to completion."""
     from repro.workflows.dags import WORKFLOW_BUILDERS
 
-    cfg = dataclasses.replace(config or EngineConfig(), allocator=allocator)
+    cfg = (config or EngineConfig()).evolve(allocator=allocator)
     engine = KubeAdaptor(cfg)
     rng = np.random.default_rng(seed)
     builder = WORKFLOW_BUILDERS[workflow_kind]

@@ -1,27 +1,75 @@
-"""Backend dispatch for the sequential burst-allocation core."""
+"""Backend dispatch for the sequential burst-allocation core.
+
+Concrete backends live in the ``repro.api.registry.BACKENDS`` registry
+(uniform signature: the :func:`alloc_scan` argument list minus
+``backend``); ``auto`` resolves to the Pallas kernel on TPU and the
+``lax.scan`` reference elsewhere.  A third-party sequential core (e.g. a
+GPU lowering) registers itself and becomes selectable via
+``AllocatorConfig.backend`` without edits here.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.api.registry import BACKENDS
 from repro.kernels.alloc_scan.kernel import alloc_scan_pallas
 from repro.kernels.alloc_scan.ref import alloc_scan_ref
-
-ALLOC_BACKENDS = ("auto", "scan", "pallas")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+@BACKENDS.register(
+    "scan",
+    capabilities=("portable",),
+    doc="lax.scan reference core — runs on any JAX backend")
+def _scan_backend(
+    rc2, rm2, cap_cpu2, cap_mem2, tot_cpu, tot_mem,
+    b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
+    delta_cpu, delta_mem, b_self, b_attempt, b_pending,
+    *, alpha, beta, policy, mode,
+):
+    return alloc_scan_ref(
+        rc2, rm2, cap_cpu2, cap_mem2, tot_cpu, tot_mem,
+        b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
+        delta_cpu, delta_mem, b_self, b_attempt, b_pending,
+        alpha=alpha, beta=beta, policy=policy, mode=mode,
+    )
+
+
+@BACKENDS.register(
+    "pallas",
+    capabilities=("tpu_native", "vmem_resident"),
+    doc="Pallas TPU kernel, VMEM-resident carry (interpret mode off-TPU)")
+def _pallas_backend(
+    rc2, rm2, cap_cpu2, cap_mem2, tot_cpu, tot_mem,
+    b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
+    delta_cpu, delta_mem, b_self, b_attempt, b_pending,
+    *, alpha, beta, policy, mode,
+):
+    return alloc_scan_pallas(
+        rc2, rm2, cap_cpu2, cap_mem2,
+        jnp.asarray(tot_cpu, jnp.float32), jnp.asarray(tot_mem, jnp.float32),
+        b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
+        delta_cpu, delta_mem,
+        b_self.astype(jnp.int32),
+        b_attempt.astype(jnp.int32),
+        b_pending.astype(jnp.int32),
+        alpha=alpha, beta=beta, policy=policy, mode=mode,
+        interpret=not _on_tpu(),
+    )
+
+
+ALLOC_BACKENDS = ("auto",) + BACKENDS.names()
+
+
 def resolve_backend(backend: str) -> str:
     """``auto`` → the Pallas kernel on TPU, the ``lax.scan`` ref elsewhere."""
     if backend == "auto":
         return "pallas" if _on_tpu() else "scan"
-    if backend not in ("scan", "pallas"):
-        raise ValueError(
-            f"unknown alloc backend {backend!r} (want one of {ALLOC_BACKENDS})"
-        )
+    BACKENDS.get(backend)  # actionable "unknown alloc backend" on a typo
     return backend
 
 
@@ -42,30 +90,19 @@ def alloc_scan(
     dispatch.  ``tot_cpu``/``tot_mem`` are either scalars (legacy
     single-cluster) or ``[K]`` per-shard federated totals
     (``repro.cluster.federation``; residual tiles cluster-major with
-    ``nb % K == 0``).  Both backends return bit-identical ``(alloc_cpu,
-    alloc_mem, node, accept, attempted, scenario)`` row arrays — gated by
-    ``tests/test_alloc_scan.py`` and the cross-shard parity suite.
+    ``nb % K == 0``).  All registered backends return bit-identical
+    ``(alloc_cpu, alloc_mem, node, accept, attempted, scenario)`` row
+    arrays — gated by ``tests/test_alloc_scan.py`` and the cross-shard
+    parity suite.
     """
-    if backend not in ("scan", "pallas"):
+    if backend == "auto":
         raise ValueError(
-            f"alloc_scan needs a concrete backend, got {backend!r} "
-            "(resolve 'auto' via resolve_backend first)"
+            "alloc_scan needs a concrete backend, got 'auto' "
+            "(resolve it via resolve_backend first)"
         )
-    if backend == "scan":
-        return alloc_scan_ref(
-            rc2, rm2, cap_cpu2, cap_mem2, tot_cpu, tot_mem,
-            b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
-            delta_cpu, delta_mem, b_self, b_attempt, b_pending,
-            alpha=alpha, beta=beta, policy=policy, mode=mode,
-        )
-    return alloc_scan_pallas(
-        rc2, rm2, cap_cpu2, cap_mem2,
-        jnp.asarray(tot_cpu, jnp.float32), jnp.asarray(tot_mem, jnp.float32),
+    return BACKENDS.get(backend).factory(
+        rc2, rm2, cap_cpu2, cap_mem2, tot_cpu, tot_mem,
         b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
-        delta_cpu, delta_mem,
-        b_self.astype(jnp.int32),
-        b_attempt.astype(jnp.int32),
-        b_pending.astype(jnp.int32),
+        delta_cpu, delta_mem, b_self, b_attempt, b_pending,
         alpha=alpha, beta=beta, policy=policy, mode=mode,
-        interpret=not _on_tpu(),
     )

@@ -42,6 +42,19 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def usable_cluster_devices(num_clusters: int) -> int:
+    """Largest device count that divides ``num_clusters``.
+
+    The single source of truth for the cluster-mesh selection rule —
+    ``make_cluster_mesh`` shards across exactly this many devices, and
+    ``ClusterConfig.validate`` warns when it is 1 despite multiple
+    devices being available.
+    """
+    devices = jax.device_count()
+    return max(k for k in range(1, min(num_clusters, devices) + 1)
+               if num_clusters % k == 0)
+
+
 def make_cluster_mesh(num_clusters: int):
     """1-D ``clusters`` mesh for federated burst allocation, or ``None``.
 
@@ -54,8 +67,7 @@ def make_cluster_mesh(num_clusters: int):
     import numpy as np
 
     devices = jax.devices()
-    d = max(k for k in range(1, min(num_clusters, len(devices)) + 1)
-            if num_clusters % k == 0)
+    d = usable_cluster_devices(num_clusters)
     if d <= 1:
         return None
     from jax.sharding import Mesh

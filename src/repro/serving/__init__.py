@@ -1,0 +1,3 @@
+from repro.serving.engine import ServeConfig, ServeEngine
+
+__all__ = ["ServeConfig", "ServeEngine"]

@@ -1,24 +1,43 @@
-"""Workflow arrival patterns (paper §6.1.4, Fig. 5(a-c))."""
+"""Workflow arrival patterns (paper §6.1.4, Fig. 5(a-c)).
+
+Each pattern is a builder returning a list of ``(time_seconds,
+num_workflows)`` bursts, registered in ``repro.api.registry.ARRIVALS``
+so scenarios select them declaratively by name (``Scenario(arrival=
+"pyramid", arrival_params={...})``) and third-party patterns plug in
+without edits here:
+
+    from repro.api.registry import ARRIVALS
+
+    @ARRIVALS.register("poisson_burst")
+    def poisson_burst(lam=3.0, bursts=6, interval=300.0, seed=0): ...
+"""
 from __future__ import annotations
 
 from typing import List, Tuple
 
-# Each pattern is a list of (time_seconds, num_workflows) bursts.
+from repro.api.registry import ARRIVALS
+
 INTERVAL = 300.0
 
 
+@ARRIVALS.register(
+    "constant", doc="y workflows every interval, `bursts` times")
 def constant(y: int = 5, bursts: int = 6, interval: float = INTERVAL
              ) -> List[Tuple[float, int]]:
     """y workflows every `interval` s, `bursts` times (5×6 = 30)."""
     return [(i * interval, y) for i in range(bursts)]
 
 
+@ARRIVALS.register(
+    "linear", doc="y = k·x + d rising bursts")
 def linear(k: int = 2, d: int = 2, bursts: int = 5, interval: float = INTERVAL
            ) -> List[Tuple[float, int]]:
     """y = k·x + d rising bursts (2,4,6,8,10 = 30)."""
     return [(i * interval, d + k * i) for i in range(bursts)]
 
 
+@ARRIVALS.register(
+    "pyramid", doc="grow start→peak by `step`, shrink back, repeat")
 def pyramid(start: int = 2, peak: int = 6, step: int = 2, total: int = 34,
             interval: float = INTERVAL) -> List[Tuple[float, int]]:
     """Grow start→peak by `step`, shrink back, repeat until `total` (=34).
@@ -40,6 +59,8 @@ def pyramid(start: int = 2, peak: int = 6, step: int = 2, total: int = 34,
     return out
 
 
+# Legacy name→builder view of the built-ins; the ARRIVALS registry is
+# the source of truth (and the only place third-party patterns appear).
 PATTERNS = {"constant": constant, "linear": linear, "pyramid": pyramid}
 
 

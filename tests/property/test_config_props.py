@@ -1,0 +1,113 @@
+"""Properties of the typed Scenario-API configs.
+
+Under hypothesis-drawn field values: (a) ``EngineConfig`` and
+``Scenario`` survive a JSON round-trip as *equal* dataclasses (the
+serialized form is the spec, so nothing may be lost or coerced); (b) the
+deprecated flat-kwarg shim builds a config identical to routing the same
+values through the composed sub-configs, for every subset of flat keys;
+(c) ``evolve()`` agrees with the shim, warning-free.
+"""
+import dataclasses
+import warnings
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, strategies as st  # noqa: E402
+
+from repro.api import (  # noqa: E402
+    AllocatorConfig,
+    ClusterConfig,
+    EngineConfig,
+    Scenario,
+    TimingConfig,
+)
+from repro.api.config import _FLAT_MAP  # noqa: E402
+
+pytestmark = pytest.mark.tier1
+
+_pos = st.floats(min_value=0.5, max_value=1e6,
+                 allow_nan=False, allow_infinity=False)
+
+_cluster = st.builds(
+    ClusterConfig,
+    num_nodes=st.integers(min_value=1, max_value=4096),
+    node_cpu=_pos,
+    node_mem=_pos,
+    num_clusters=st.integers(min_value=1, max_value=8),
+    sharding=st.sampled_from(["auto", "off", "force"]),
+)
+_alloc = st.builds(
+    AllocatorConfig,
+    algorithm=st.sampled_from(["aras", "fcfs"]),
+    alpha=st.floats(min_value=0.01, max_value=1.0, allow_nan=False),
+    beta=st.floats(min_value=0.0, max_value=1e3, allow_nan=False),
+    placement=st.sampled_from(["worst_fit", "best_fit", "first_fit",
+                               "balanced"]),
+    backend=st.sampled_from(["auto", "scan", "pallas"]),
+    batch_allocation=st.booleans(),
+)
+_timing = st.builds(
+    TimingConfig,
+    pod_startup_delay=_pos,
+    cleanup_delay=_pos,
+    restart_delay=_pos,
+    oom_fraction=st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+    duration_multiplier=_pos,
+    max_time=_pos,
+)
+_engine = st.builds(EngineConfig, cluster=_cluster, alloc=_alloc,
+                    timing=_timing, invariant_checks=st.booleans())
+
+_scenario = st.builds(
+    Scenario,
+    name=st.text(min_size=1, max_size=20),
+    workflows=st.lists(
+        st.sampled_from(["montage", "epigenomics", "cybershake", "ligo"]),
+        min_size=1, max_size=4, unique=True).map(tuple),
+    arrival=st.sampled_from(["constant", "linear", "pyramid"]),
+    arrival_params=st.dictionaries(
+        st.sampled_from(["interval"]), _pos, max_size=1),
+    engine=_engine,
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    task_kwargs=st.one_of(
+        st.none(),
+        st.dictionaries(st.sampled_from(["cpu", "mem", "min_cpu",
+                                         "min_mem"]), _pos, max_size=4),
+    ),
+)
+
+
+@given(cfg=_engine)
+def test_engine_config_json_round_trip(cfg):
+    assert EngineConfig.from_json(cfg.to_json()) == cfg
+
+
+@given(sc=_scenario)
+def test_scenario_json_round_trip(sc):
+    assert Scenario.from_json(sc.to_json()) == sc
+
+
+@given(cfg=_engine, keys=st.sets(st.sampled_from(sorted(_FLAT_MAP))))
+def test_flat_shim_equals_composed_for_any_key_subset(cfg, keys):
+    """Any subset of flat kwargs == the same values routed composed."""
+    flat = {}
+    for key in keys:
+        part, field = _FLAT_MAP[key]
+        flat[key] = getattr(getattr(cfg, part), field)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        shimmed = EngineConfig(invariant_checks=cfg.invariant_checks,
+                               **flat)
+    parts = {"cluster": ClusterConfig(), "alloc": AllocatorConfig(),
+             "timing": TimingConfig()}
+    for key, value in flat.items():
+        part, field = _FLAT_MAP[key]
+        parts[part] = dataclasses.replace(parts[part], **{field: value})
+    composed = EngineConfig(invariant_checks=cfg.invariant_checks, **parts)
+    assert shimmed == composed
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        evolved = EngineConfig(
+            invariant_checks=cfg.invariant_checks).evolve(**flat)
+    assert evolved == composed

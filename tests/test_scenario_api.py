@@ -1,0 +1,341 @@
+"""The composable Scenario API: registries, typed configs, runner.
+
+Four contracts:
+
+* **registries** — built-ins present with their capability flags,
+  third-party entries plug in by decorator and drive a real engine run,
+  unknown names fail with actionable messages;
+* **typed configs** — ``Scenario``/``EngineConfig`` JSON-round-trip to
+  equal dataclasses, ``validate()`` raises actionable errors, and the
+  deprecated flat-kwarg shim builds a config *identical* to the
+  composed form (``DeprecationWarning`` included);
+* **runner** — the paper grid (aras/fcfs × constant/linear/pyramid)
+  runs end-to-end through ``run_scenario()``, and a single-kind
+  scenario reproduces the legacy ``run_experiment`` bit for bit;
+* **results** — ``RunResult`` serializes to schema-stable JSON.
+"""
+import dataclasses
+import json
+import warnings
+
+import pytest
+
+from repro.api import (
+    ALLOCATORS,
+    ARRIVALS,
+    BACKENDS,
+    PLACEMENTS,
+    AllocatorConfig,
+    ClusterConfig,
+    EngineConfig,
+    Scenario,
+    TimingConfig,
+    grid,
+    run_scenario,
+)
+from repro.engine import run_experiment
+from repro.workflows import arrival
+
+pytestmark = pytest.mark.tier1
+
+FAST_TIMING = TimingConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                           duration_multiplier=1.0)
+FAST = EngineConfig(timing=FAST_TIMING)
+
+SMALL_ARRIVALS = {
+    "constant": {"y": 2, "bursts": 2, "interval": 30.0},
+    "linear": {"k": 1, "d": 1, "bursts": 2, "interval": 30.0},
+    "pyramid": {"start": 1, "peak": 2, "step": 1, "total": 4,
+                "interval": 30.0},
+}
+
+
+# ------------------------------------------------------------- registries
+
+def test_builtin_registry_entries():
+    assert ALLOCATORS.names() == ("aras", "fcfs")
+    assert "baseline" in ALLOCATORS  # alias
+    assert ALLOCATORS.get("baseline").name == "fcfs"
+    assert ALLOCATORS.get("aras").supports("adaptive_scaling")
+    assert not ALLOCATORS.get("fcfs").supports("adaptive_scaling")
+
+    assert set(PLACEMENTS.names()) == {"worst_fit", "best_fit",
+                                       "first_fit", "balanced"}
+    assert PLACEMENTS.get("balanced").supports("needs_capacity_view")
+    assert not PLACEMENTS.get("worst_fit").supports("needs_capacity_view")
+
+    assert BACKENDS.names() == ("pallas", "scan")
+    assert ARRIVALS.names() == ("constant", "linear", "pyramid")
+    assert len(list(ALLOCATORS)) == 2
+
+
+@pytest.mark.parametrize("registry,noun", [
+    (ALLOCATORS, "allocator"),
+    (PLACEMENTS, "placement policy"),
+    (BACKENDS, "alloc backend"),
+    (ARRIVALS, "arrival pattern"),
+])
+def test_unknown_registry_name_is_actionable(registry, noun):
+    with pytest.raises(ValueError, match=f"unknown {noun} 'wat'"):
+        registry.get("wat")
+    # The message lists what IS registered, so a typo is self-serviced.
+    with pytest.raises(ValueError, match=registry.names()[0]):
+        registry.get("wat")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        @PLACEMENTS.register("worst_fit")
+        def clash(*a):  # pragma: no cover - never registered
+            return a
+
+
+def test_overwrite_registration_beats_stale_alias():
+    """overwrite=True over an alias name must resolve to the new entry."""
+    from repro.api import Registry
+
+    reg = Registry("scratch")
+    reg.register("real", aliases=("nick",))(lambda: "real")
+    assert reg.get("nick").name == "real"
+
+    reg.register("nick", overwrite=True, doc="shadow")(lambda: "nick")
+    assert reg.get("nick").name == "nick"  # entry, not the stale alias
+    assert reg.get("nick").doc == "shadow"
+    assert reg.get("real").name == "real"  # original entry untouched
+
+
+def test_unregister_alias_removes_only_the_alias():
+    from repro.api import Registry
+
+    reg = Registry("scratch")
+    reg.register("host", aliases=("alias_a", "alias_b"))(lambda: None)
+
+    reg.unregister("alias_a")  # an alias: only it disappears
+    assert "alias_a" not in reg and "alias_b" in reg and "host" in reg
+    reg.unregister("host")  # the entry: takes its aliases with it
+    assert "host" not in reg and "alias_b" not in reg
+
+
+def test_custom_placement_policy_plugs_in():
+    """A third-party policy drives a real engine run, no core edits."""
+
+    @PLACEMENTS.register("most_free_mem",
+                         doc="max residual memory among fitting nodes")
+    def _most_free_mem(res_cpu, res_mem, cpu, mem, cap_cpu, cap_mem):
+        return res_mem
+
+    try:
+        cfg = FAST.evolve(alloc=AllocatorConfig(placement="most_free_mem"))
+        m = run_experiment("montage", [(0.0, 2)], "aras", seed=0, config=cfg)
+        assert len(m.workflow_durations) == 2
+    finally:
+        PLACEMENTS.unregister("most_free_mem")
+    assert "most_free_mem" not in PLACEMENTS
+
+
+def test_custom_arrival_pattern_plugs_in():
+    @ARRIVALS.register("front_loaded", doc="everything at t=0")
+    def _front_loaded(total=4):
+        return [(0.0, total)]
+
+    try:
+        sc = Scenario(workflows=("montage",), arrival="front_loaded",
+                      arrival_params={"total": 2}, engine=FAST)
+        result = run_scenario(sc)
+        assert result.num_workflows == 2
+    finally:
+        ARRIVALS.unregister("front_loaded")
+
+
+# ------------------------------------------------------------ round trips
+
+def test_engine_config_json_round_trip():
+    cfg = EngineConfig(
+        cluster=ClusterConfig(num_nodes=12, node_cpu=8000.0,
+                              node_mem=16000.0, num_clusters=3,
+                              sharding="off"),
+        alloc=AllocatorConfig(algorithm="fcfs", placement="best_fit",
+                              backend="scan", batch_allocation=False),
+        timing=TimingConfig(pod_startup_delay=2.0, max_time=1e5),
+        invariant_checks=False,
+    )
+    again = EngineConfig.from_json(cfg.to_json())
+    assert again == cfg
+    assert json.loads(cfg.to_json())["cluster"]["num_clusters"] == 3
+
+
+def test_scenario_json_round_trip():
+    sc = Scenario(
+        name="rt", workflows=("ligo", "montage"), arrival="pyramid",
+        arrival_params={"start": 1, "peak": 3, "step": 1, "total": 6},
+        engine=FAST.evolve(allocator="fcfs"),
+        seed=7, task_kwargs={"mem": 2600.0, "min_mem": 200.0},
+    )
+    again = Scenario.from_json(sc.to_json())
+    assert again == sc
+    assert again.engine is not None and again.engine == sc.engine
+    # Defaults survive a sparse dict too.
+    sparse = Scenario.from_dict({"name": "sparse"})
+    assert sparse.workflows == ("ligo",) and sparse.engine == EngineConfig()
+
+
+# -------------------------------------------------------------- validate()
+
+@pytest.mark.parametrize("bad,match", [
+    (dict(cluster=ClusterConfig(num_nodes=0)), "num_nodes"),
+    (dict(cluster=ClusterConfig(num_nodes=4, node_cpu=-1.0)), "node_cpu"),
+    (dict(cluster=ClusterConfig(num_nodes=3, num_clusters=4)),
+     "num_clusters"),
+    (dict(cluster=ClusterConfig(sharding="wat")), "cluster_sharding"),
+    (dict(alloc=AllocatorConfig(algorithm="wat")), "unknown allocator"),
+    (dict(alloc=AllocatorConfig(placement="wat")),
+     "unknown placement policy"),
+    (dict(alloc=AllocatorConfig(backend="cuda")), "unknown alloc backend"),
+    (dict(alloc=AllocatorConfig(alpha=0.0)), "alpha"),
+    (dict(alloc=AllocatorConfig(beta=-1.0)), "beta"),
+    (dict(timing=TimingConfig(pod_startup_delay=-1.0)),
+     "pod_startup_delay"),
+    (dict(timing=TimingConfig(oom_fraction=1.5)), "oom_fraction"),
+    (dict(timing=TimingConfig(duration_multiplier=0.0)),
+     "duration_multiplier"),
+])
+def test_validate_raises_actionable_errors(bad, match):
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(**bad).validate()
+
+
+def test_scenario_validate_errors():
+    with pytest.raises(ValueError, match="workflow kind"):
+        Scenario(workflows=("wat",)).validate()
+    with pytest.raises(ValueError, match="at least one"):
+        Scenario(workflows=()).validate()
+    with pytest.raises(ValueError, match="unknown arrival pattern"):
+        Scenario(arrival="wat").validate()
+    with pytest.raises(ValueError, match="arrival_params"):
+        Scenario(arrival="constant",
+                 arrival_params={"nope": 1}).validate()
+    assert Scenario().validate() is not None
+
+
+def test_unknown_flat_kwarg_is_a_type_error():
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        EngineConfig(num_noodles=3)
+
+
+def test_from_dict_rejects_unknown_keys():
+    """A typo'd or legacy-flat serialized config must not silently
+    deserialize to defaults."""
+    with pytest.raises(ValueError, match="unknown EngineConfig field"):
+        EngineConfig.from_dict({"num_nodes": 64})
+    with pytest.raises(ValueError, match="aloc"):
+        EngineConfig.from_dict({"aloc": {"algorithm": "fcfs"}})
+    with pytest.raises(TypeError):  # unknown key inside a sub-config
+        EngineConfig.from_dict({"cluster": {"num_noodles": 3}})
+
+
+# -------------------------------------------------- flat-kwarg shim parity
+
+def test_flat_kwargs_deprecated_but_identical():
+    flat_kwargs = dict(
+        num_nodes=9, node_cpu=7000.0, node_mem=14000.0, num_clusters=3,
+        cluster_sharding="off", allocator="fcfs", alpha=0.5, beta=10.0,
+        placement="first_fit", alloc_backend="scan",
+        batch_allocation=False, pod_startup_delay=1.0, cleanup_delay=2.0,
+        restart_delay=3.0, oom_fraction=0.5, duration_multiplier=1.0,
+        max_time=1e6,
+    )
+    with pytest.deprecated_call():
+        flat = EngineConfig(**flat_kwargs)
+    composed = EngineConfig(
+        cluster=ClusterConfig(num_nodes=9, node_cpu=7000.0,
+                              node_mem=14000.0, num_clusters=3,
+                              sharding="off"),
+        alloc=AllocatorConfig(algorithm="fcfs", alpha=0.5, beta=10.0,
+                              placement="first_fit", backend="scan",
+                              batch_allocation=False),
+        timing=TimingConfig(pod_startup_delay=1.0, cleanup_delay=2.0,
+                            restart_delay=3.0, oom_fraction=0.5,
+                            duration_multiplier=1.0, max_time=1e6),
+    )
+    assert flat == composed
+    # evolve() is the warning-free spelling of the same flat updates.
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        evolved = EngineConfig().evolve(**flat_kwargs)
+    assert evolved == composed
+
+
+def test_flat_and_composed_runs_are_identical():
+    pattern = arrival.constant(y=2, bursts=2, interval=30.0)
+    with pytest.deprecated_call():
+        flat = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                            duration_multiplier=1.0)
+    m_flat = run_experiment("montage", pattern, "aras", seed=0, config=flat)
+    m_comp = run_experiment("montage", pattern, "aras", seed=0, config=FAST)
+    assert m_flat.makespan == m_comp.makespan
+    assert m_flat.alloc_trace == m_comp.alloc_trace
+    assert m_flat.workflow_durations == m_comp.workflow_durations
+    assert m_flat.usage_series == m_comp.usage_series
+
+
+# ------------------------------------------------------ the paper grid
+
+@pytest.mark.parametrize("arrival_name", sorted(SMALL_ARRIVALS))
+@pytest.mark.parametrize("algorithm", ("aras", "fcfs"))
+def test_paper_grid_end_to_end(algorithm, arrival_name):
+    """aras/fcfs × constant/linear/pyramid through run_scenario, and
+    bit-for-bit parity with the legacy run_experiment wiring."""
+    params = SMALL_ARRIVALS[arrival_name]
+    sc = Scenario(
+        name=f"grid-{algorithm}-{arrival_name}",
+        workflows=("montage",),
+        arrival=arrival_name,
+        arrival_params=params,
+        engine=FAST.evolve(allocator=algorithm),
+    )
+    result = run_scenario(sc)
+    expected_n = sum(n for _, n in sc.pattern())
+    assert result.num_workflows == expected_n
+    assert result.avg_total_duration > 0
+    assert 0.0 <= result.cpu_usage_rate <= 1.0
+    assert 0.0 <= result.mem_usage_rate <= 1.0
+
+    legacy_pattern = getattr(arrival, arrival_name)(**params)
+    legacy = run_experiment("montage", legacy_pattern, algorithm, seed=0,
+                            config=FAST)
+    assert result.metrics.makespan == legacy.makespan
+    assert result.metrics.alloc_trace == legacy.alloc_trace
+    assert result.metrics.workflow_durations == legacy.workflow_durations
+    assert result.metrics.oom_events == legacy.oom_events
+
+
+def test_grid_builder_covers_the_sweep():
+    sweep = grid(Scenario(name="paper", engine=FAST))
+    assert len(sweep) == 6  # 2 allocators × 3 arrival patterns
+    names = {s.name for s in sweep}
+    assert "paper-aras-constant" in names and "paper-fcfs-pyramid" in names
+    algos = {s.engine.alloc.algorithm for s in sweep}
+    assert algos == {"aras", "fcfs"}
+
+
+def test_multi_kind_scenario_cycles_workflow_set():
+    sc = Scenario(workflows=("montage", "ligo"), arrival="constant",
+                  arrival_params={"y": 2, "bursts": 1}, engine=FAST)
+    result = run_scenario(sc)
+    assert result.num_workflows == 2
+    kinds = {w.split("-")[0] for w in result.metrics.workflow_durations}
+    assert kinds == {"montage", "ligo"}
+
+
+def test_run_result_json_schema():
+    sc = Scenario(workflows=("montage",), arrival="constant",
+                  arrival_params={"y": 1, "bursts": 1}, engine=FAST)
+    payload = json.loads(run_scenario(sc).to_json())
+    for key in ("scenario", "avg_total_duration", "avg_workflow_duration",
+                "cpu_usage_rate", "mem_usage_rate",
+                "per_decision_latency_us", "num_workflows",
+                "num_allocations", "num_waits", "num_oom_events",
+                "num_reallocations", "sla_violation_rate", "wall_time_s"):
+        assert key in payload, key
+    assert "metrics" not in payload  # trace object stays out of the JSON
+    assert payload["scenario"]["engine"]["alloc"]["algorithm"] == "aras"
