@@ -26,15 +26,17 @@ Usage::
     PYTHONPATH=src python benchmarks/allocator_scale.py --json BENCH_allocator.json
 
 The engine benchmark takes a ``--clusters`` axis (federated multi-cluster
-allocation, ``ClusterConfig.num_clusters``) and a ``--placement`` axis
-(any policy in the ``PLACEMENTS`` registry, or ``all``); the default
-full sweep records a {1, 2, 4}-cluster trajectory at the largest engine
-size and an all-policies placement sweep at the smallest.
+allocation, ``ClusterConfig.num_clusters``), a ``--placement`` axis
+(any policy in the ``PLACEMENTS`` registry, or ``all``), and a
+``--window`` axis (``TimingConfig.batch_window``: tasks arrive jittered
+over ``--spread`` seconds and the windowed drain folds them back into
+fused dispatches — the ``dispatches`` column shows how many); the
+default full sweep records a {1, 2, 4}-cluster trajectory at the largest
+engine size and an all-policies placement sweep at the smallest.
 """
 from __future__ import annotations
 
 import argparse
-import heapq
 import json
 import platform
 import time
@@ -94,7 +96,8 @@ def bench_core(num_nodes: int, pods_per_node: int = 8, burst: int = 1024,
 
 # ---------------------------------------------------------- engine-facing
 
-def _burst_spec(burst: int, rng: np.random.Generator) -> WorkflowSpec:
+def _burst_spec(burst: int, rng: np.random.Generator,
+                workflow_id: str = "w", offset: int = 0) -> WorkflowSpec:
     """One flat workflow of `burst` independent ready tasks."""
     tasks = {
         f"t{i}": TaskSpec(
@@ -104,71 +107,99 @@ def _burst_spec(burst: int, rng: np.random.Generator) -> WorkflowSpec:
             duration=float(rng.uniform(10, 20)),
             min_cpu=100.0, min_mem=200.0,
         )
-        for i in range(burst)
+        for i in range(offset, offset + burst)
     }
-    return WorkflowSpec(workflow_id="w", tasks=tasks, edges=[])
+    return WorkflowSpec(workflow_id=workflow_id, tasks=tasks, edges=[])
 
 
 def bench_engine(num_nodes: int, burst: int, batched: bool,
                  repeats: int = 3, clusters: int = 1,
-                 placement: str = "worst_fit") -> float:
+                 placement: str = "worst_fit", window: float = 0.0,
+                 spread: float = 0.0):
     """Engine-facing burst latency: inject `burst` ready tasks, time the
     allocation drain (window build → batch assembly → fused dispatch →
     bind) — everything between the READY events and the running pods.
     ``clusters > 1`` runs the federated multi-cluster layout
     (repro.cluster.federation): cluster-major tiles, per-shard totals;
-    ``placement`` selects any registered placement policy."""
-    spec = _burst_spec(burst, np.random.default_rng(0))
+    ``placement`` selects any registered placement policy.  ``spread``
+    jitters the arrivals uniformly over that many seconds (one
+    single-task workflow each) and ``window`` is the drain's
+    ``batch_window`` folding them back into fused dispatches.
+
+    Returns ``(seconds, num_dispatches)`` for the winning repeat."""
+    rng = np.random.default_rng(0)
+    if spread > 0.0:
+        specs = [(_burst_spec(1, rng, workflow_id=f"w{i}", offset=i),
+                  float(t))
+                 for i, t in enumerate(np.sort(rng.uniform(0, spread, burst)))]
+    else:
+        specs = [(_burst_spec(burst, rng), 0.0)]
     cfg = EngineConfig(
         cluster=ClusterConfig(num_nodes=num_nodes, node_cpu=8000.0,
                               node_mem=16000.0, num_clusters=clusters),
         alloc=AllocatorConfig(batch_allocation=batched,
                               placement=placement),
         timing=TimingConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
-                            duration_multiplier=1.0),
+                            duration_multiplier=1.0, batch_window=window),
         invariant_checks=False,
     )
 
-    def one_run() -> float:
+    def one_run():
         eng = KubeAdaptor(cfg)
-        eng._inject(spec)  # registers records + queues READY events at t=0
+        if spread > 0.0:
+            # Jittered arrivals: injection interleaves with the windowed
+            # drain by design, so it is part of the measured path.
+            for spec, t in specs:
+                eng.submit(spec, t)
+        else:
+            # Lockstep burst: register records outside the timed region
+            # (the pre-windowed methodology — keeps the headline
+            # spread=0 rows comparable across PRs).
+            eng._inject(specs[0][0])
         t0 = time.perf_counter()
-        while eng._events:
-            t, kind, _, payload = heapq.heappop(eng._events)
-            if t > 0.0:  # completions etc.: beyond the burst decision
-                break
-            eng._now = t
-            eng._drain_group(kind, payload)
+        # Drive events until the whole burst is placed (completions start
+        # no earlier than startup_delay + min duration ≈ 11 s, so any
+        # spread below that keeps this a pure allocation-path measure).
+        while eng.queue and eng.metrics.num_allocations < burst:
+            eng.step()
         dt = time.perf_counter() - t0
         assert eng.metrics.num_allocations == burst, (
             f"burst not fully placed: {eng.metrics.num_allocations}/{burst}"
         )
-        return dt
+        return dt, eng.metrics.num_dispatches
 
     one_run()  # compile warmup
     return min(one_run() for _ in range(repeats))
 
 
 def report_engine(num_nodes: int, burst: int, repeats: int,
-                  clusters: int = 1,
-                  placement: str = "worst_fit") -> dict:
-    dt_b = bench_engine(num_nodes, burst, batched=True, repeats=repeats,
-                        clusters=clusters, placement=placement)
-    dt_p = bench_engine(num_nodes, burst, batched=False, repeats=repeats,
-                        clusters=clusters, placement=placement)
+                  clusters: int = 1, placement: str = "worst_fit",
+                  window: float = 0.0, spread: float = 0.0) -> dict:
+    dt_b, disp_b = bench_engine(num_nodes, burst, batched=True,
+                                repeats=repeats, clusters=clusters,
+                                placement=placement, window=window,
+                                spread=spread)
+    dt_p, _ = bench_engine(num_nodes, burst, batched=False,
+                           repeats=repeats, clusters=clusters,
+                           placement=placement, window=window,
+                           spread=spread)
     speedup = dt_p / dt_b
     print(
         f"engine_scale_{num_nodes}n_{clusters}c_{placement},"
         f"batched={1e6*dt_b/burst:.2f}us/decision,"
         f"per_task={1e6*dt_p/burst:.2f}us/decision,"
         f"nodes={num_nodes}|burst={burst}|clusters={clusters}|"
-        f"placement={placement}|speedup={speedup:.1f}x"
+        f"placement={placement}|window={window}|dispatches={disp_b}|"
+        f"speedup={speedup:.1f}x"
     )
     return {
         "nodes": num_nodes,
         "burst": burst,
         "clusters": clusters,
         "placement": placement,
+        "window": window,
+        "spread": spread,
+        "num_dispatches": disp_b,
         "batched_us_per_decision": round(1e6 * dt_b / burst, 3),
         "per_task_us_per_decision": round(1e6 * dt_p / burst, 3),
         "speedup": round(speedup, 2),
@@ -205,6 +236,17 @@ def main():
                          "(default: worst_fit, plus an all-policies sweep "
                          "at the smallest engine size when no --nodes is "
                          "given; 'all' sweeps every registered policy)")
+    ap.add_argument("--window", type=float, default=0.0,
+                    help="TimingConfig.batch_window for the engine "
+                         "benchmark: fold arrivals within this many "
+                         "seconds of the head event into one fused "
+                         "dispatch (default 0 = same-timestamp only)")
+    ap.add_argument("--spread", type=float, default=None,
+                    help="jitter the burst's arrivals uniformly over this "
+                         "many seconds (single-task workflows; default: "
+                         "4x --window capped at 8, 0 = one lockstep "
+                         "burst; keep it under ~10 s so completions stay "
+                         "out of the timed region)")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-core", action="store_true")
@@ -217,6 +259,14 @@ def main():
         ap.error("--burst must be positive")
     if args.clusters is not None and args.clusters <= 0:
         ap.error("--clusters must be positive")
+    if args.window < 0:
+        ap.error("--window must be >= 0")
+    if args.spread is None:
+        # Cap the derived default below the ~11 s first completion so the
+        # timed region stays allocation-only unless the user opts out.
+        args.spread = min(4.0 * args.window, 8.0)
+    if args.spread < 0:
+        ap.error("--spread must be >= 0")
 
     core_sizes = [args.nodes] if args.nodes is not None else [1_000, 10_000, 100_000]
     engine_sizes = [args.nodes] if args.nodes is not None else [1_000, 10_000]
@@ -253,7 +303,9 @@ def main():
                 for pol in placement_axis:
                     results["engine"].append(
                         report_engine(n, args.burst, args.repeats,
-                                      clusters=c, placement=pol))
+                                      clusters=c, placement=pol,
+                                      window=args.window,
+                                      spread=args.spread))
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(results, fh, indent=2)

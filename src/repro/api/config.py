@@ -156,9 +156,16 @@ class TimingConfig:
     # so pod wall time = startup + duration_multiplier · duration.
     duration_multiplier: float = 2.0
     max_time: float = 1e7
+    # Windowed event drain ("decide at t+ε"): allocatable events within
+    # this many seconds of the head event fold into one fused
+    # allocate_batch dispatch, so jittered near-simultaneous arrivals
+    # from stochastic injectors batch like the paper's lockstep bursts.
+    # 0.0 folds only same-timestamp events — the seed drain, bit for bit.
+    batch_window: float = 0.0
 
     def validate(self) -> "TimingConfig":
-        for field in ("pod_startup_delay", "cleanup_delay", "restart_delay"):
+        for field in ("pod_startup_delay", "cleanup_delay", "restart_delay",
+                      "batch_window"):
             if getattr(self, field) < 0:
                 raise _err(f"TimingConfig.{field} is a delay in seconds, "
                            f"need >= 0, got {getattr(self, field)}")
@@ -193,6 +200,7 @@ _FLAT_MAP: Dict[str, tuple] = {
     "oom_fraction": ("timing", "oom_fraction"),
     "duration_multiplier": ("timing", "duration_multiplier"),
     "max_time": ("timing", "max_time"),
+    "batch_window": ("timing", "batch_window"),
 }
 
 _SUB_TYPES = {"cluster": ClusterConfig, "alloc": AllocatorConfig,

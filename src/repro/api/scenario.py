@@ -53,6 +53,18 @@ class Scenario:
     # builder (repro.workflows.spec.make_task kwargs).
     task_kwargs: Optional[Mapping[str, Any]] = None
 
+    # --------------------------------------------------------------- seeds
+    def _arrival_args(self) -> Dict[str, Any]:
+        """``arrival_params`` with the scenario seed wired into stochastic
+        patterns (``stochastic`` capability flag): the one scenario
+        ``seed`` then drives workflow shapes *and* arrival times, so a
+        ``grid(seeds=...)`` sweep replicates the whole experiment.  An
+        explicit ``arrival_params["seed"]`` pins the arrivals instead."""
+        params = dict(self.arrival_params)
+        if ARRIVALS.get(self.arrival).supports("stochastic"):
+            params.setdefault("seed", self.seed)
+        return params
+
     # ---------------------------------------------------------- validation
     def validate(self) -> "Scenario":
         from repro.workflows.dags import WORKFLOW_BUILDERS
@@ -71,8 +83,7 @@ class Scenario:
             # Signature-bind only: validation must not execute the
             # builder (it may be expensive or stateful) — run_scenario
             # builds the pattern exactly once, via pattern().
-            inspect.signature(entry.factory).bind(
-                **dict(self.arrival_params))
+            inspect.signature(entry.factory).bind(**self._arrival_args())
         except TypeError as exc:
             raise ValueError(
                 f"arrival_params {dict(self.arrival_params)} do not fit "
@@ -84,7 +95,7 @@ class Scenario:
     # ------------------------------------------------------------ behavior
     def pattern(self) -> List[Tuple[float, int]]:
         """The concrete (time, count) burst list of this scenario."""
-        return ARRIVALS.get(self.arrival).factory(**dict(self.arrival_params))
+        return ARRIVALS.get(self.arrival).factory(**self._arrival_args())
 
     def num_workflows(self) -> int:
         return sum(count for _, count in self.pattern())
@@ -125,6 +136,7 @@ class Scenario:
 def grid(base: Scenario, *,
          allocators: Tuple[str, ...] = ("aras", "fcfs"),
          arrivals: Tuple[str, ...] = ("constant", "linear", "pyramid"),
+         seeds: Optional[Tuple[int, ...]] = None,
          ) -> List[Scenario]:
     """The paper's evaluation grid as a flat list of scenarios.
 
@@ -132,16 +144,27 @@ def grid(base: Scenario, *,
     derived from ``base`` (name suffixed ``-<allocator>-<arrival>``);
     ``base.arrival_params`` apply to every arrival pattern, so pass only
     parameters the swept patterns share (or none for the paper defaults).
+
+    ``seeds`` adds a replication axis (suffix ``-s<seed>``): each seed
+    re-draws the workflow task shapes, and — for arrival patterns
+    carrying the ``stochastic`` capability flag (``poisson``,
+    ``jittered``) — the arrival timestamps too, since the scenario seed
+    feeds the arrival builder unless ``arrival_params`` pins one.
     """
+    seed_axis: Tuple[Optional[int], ...] = \
+        (None,) if seeds is None else tuple(seeds)
     return [
         dataclasses.replace(
             base,
-            name=f"{base.name}-{algorithm}-{arrival}",
+            name=(f"{base.name}-{algorithm}-{arrival}"
+                  + ("" if seed is None else f"-s{seed}")),
             arrival=arrival,
             engine=base.engine.evolve(allocator=algorithm),
+            seed=base.seed if seed is None else seed,
         )
         for algorithm in allocators
         for arrival in arrivals
+        for seed in seed_axis
     ]
 
 
@@ -167,6 +190,12 @@ class RunResult:
     num_waits: int
     num_oom_events: int
     num_reallocations: int
+    # Dispatch efficiency of the windowed drain (TimingConfig.batch_window):
+    # how many device dispatches the allocation path issued and the mean
+    # task rows per dispatch — a wider mean burst at fewer dispatches is
+    # the win of folding jittered arrivals into one fused MAPE-K cycle.
+    num_dispatches: int
+    mean_burst_width: float
     sla_violation_rate: float
     wall_time_s: float
     metrics: Any = dataclasses.field(repr=False, compare=False, default=None)
@@ -224,6 +253,8 @@ def run_scenario(scenario: Scenario) -> RunResult:
         num_waits=metrics.num_waits,
         num_oom_events=len(metrics.oom_events),
         num_reallocations=len(metrics.realloc_events),
+        num_dispatches=metrics.num_dispatches,
+        mean_burst_width=metrics.mean_burst_width,
         sla_violation_rate=metrics.sla_violation_rate,
         wall_time_s=wall,
         metrics=metrics,

@@ -1,0 +1,117 @@
+"""The engine's event subsystem: typed taxonomy + windowed drain queue.
+
+``KubeAdaptor`` used to keep its discrete-event machinery inline —
+module-level int constants and raw ``heapq`` calls on a private list.
+This module extracts it into a small, testable subsystem:
+
+* :class:`EventKind` — the typed event taxonomy.  Ordering is load
+  bearing: at equal timestamps, deletions/completions sort before
+  retries before arrivals so released resources are visible to retries,
+  and ``HEAL`` sorts after same-time ``READY`` events (preserving the
+  seed engine's admission order for self-healed tasks).
+* :class:`Event` — one scheduled occurrence, ``(t, kind, seq, payload)``.
+  ``seq`` is a per-queue monotone counter, so events at the same
+  ``(t, kind)`` pop in FIFO push order and the payload is never compared.
+* :class:`EventQueue` — a priority queue over :class:`Event` with one
+  extra primitive, :meth:`EventQueue.pop_mergeable`: pop the head *iff*
+  it can fold into the burst being drained — an allocatable request
+  (retry/ready/heal) due at or before a deadline, or a *later* ``INJECT``
+  within the deadline (injection creates READY events without touching
+  cluster capacity, so jittered arrival streams fold through it).  The
+  engine's drain loop uses it to fold every allocatable event within
+  ``TimingConfig.batch_window`` seconds of the head event into a single
+  fused ``allocate_batch`` dispatch ("decide at t+ε").  With
+  ``batch_window=0.0`` the deadline is the head's own timestamp, so only
+  same-timestamp allocatable events fold (and the inject clause, which
+  requires a strictly later timestamp, can never fire) — bit-for-bit the
+  legacy drain.
+
+The fold is otherwise *contiguous*: a capacity-changing event (e.g. a
+``COMPLETE`` inside the window) stops the merge, because it must be
+applied before any later allocation decision.
+"""
+from __future__ import annotations
+
+import enum
+import heapq
+import itertools
+from typing import List, NamedTuple, Optional, Tuple
+
+
+class EventKind(enum.IntEnum):
+    """Engine event taxonomy; the integer values define heap order."""
+
+    COMPLETE = 0  # pod ran to completion
+    OOM = 1       # pod OOMKilled mid-run (§6.2.2)
+    DELETE = 2    # Task Container Cleaner removes a terminal pod
+    RETRY = 3     # re-attempt the pending queue
+    INJECT = 4    # Workflow Injection Module delivers a workflow
+    READY = 5     # a task's dependencies are satisfied
+    HEAL = 105    # self-healing re-allocation; sorts after same-time READY
+
+
+# Allocatable task requests: the kinds the drain folds into one fused
+# allocate_batch dispatch.
+ALLOCATABLE = frozenset((EventKind.RETRY, EventKind.READY, EventKind.HEAL))
+
+
+class Event(NamedTuple):
+    """One scheduled occurrence.  Tuple order == heap priority."""
+
+    t: float
+    kind: EventKind
+    seq: int
+    payload: Tuple = ()
+
+
+class EventQueue:
+    """Priority queue of :class:`Event` with a windowed-drain primitive."""
+
+    def __init__(self) -> None:
+        self._heap: List[Event] = []
+        self._seq = itertools.count()
+
+    def push(self, t: float, kind: EventKind, payload: Tuple = ()) -> Event:
+        event = Event(t, kind, next(self._seq), payload)
+        heapq.heappush(self._heap, event)
+        return event
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def peek(self) -> Optional[Event]:
+        return self._heap[0] if self._heap else None
+
+    def pop_mergeable(self, head_t: float, deadline: float
+                      ) -> Optional[Event]:
+        """Pop the head iff it can fold into the burst drained at
+        ``head_t`` with fold deadline ``deadline`` (= ``head_t +
+        batch_window``).
+
+        Foldable heads are (a) allocatable requests (retry/ready/heal)
+        due at or before the deadline, and (b) ``INJECT`` events strictly
+        later than ``head_t`` but within the deadline — the engine
+        injects those inline so a jittered arrival's READY events join
+        the burst.  The strict inequality keeps a same-timestamp INJECT
+        out of the fold, exactly as the legacy same-timestamp drain
+        ordered it (and makes clause (b) unreachable at
+        ``batch_window=0``).  Anything else — a capacity-changing event
+        inside the window, or any event beyond the deadline — returns
+        ``None`` and stays queued.
+        """
+        head = self.peek()
+        if head is None or head.t > deadline:
+            return None
+        if head.kind not in ALLOCATABLE and not (
+                head.kind is EventKind.INJECT and head.t > head_t):
+            return None
+        return heapq.heappop(self._heap)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"EventQueue(len={len(self._heap)}, next={self.peek()})"

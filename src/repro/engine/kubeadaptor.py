@@ -14,10 +14,17 @@ Fault-tolerance semantics follow §6.2.2: a pod whose memory quota is below
 its *runtime* requirement + β turns OOMKilled mid-run; the engine deletes
 it, re-allocates with the learned floor, and relaunches (self-healing).
 
-The allocation unit is the **arrival burst**: all retry/ready/heal events
-at one timestamp drain into a single ``allocate_batch`` dispatch (one
-fused MAPE-K cycle for the whole burst) instead of one cycle per task.
-The batched retry preserves the seed's FIFO admission order *and* its
+The allocation unit is the **arrival burst**: retry/ready/heal events
+within ``TimingConfig.batch_window`` seconds of the head event drain into
+a single ``allocate_batch`` dispatch (one fused MAPE-K cycle for the
+whole burst) instead of one cycle per task — the event machinery lives
+in ``repro.engine.events`` (typed :class:`EventKind` taxonomy +
+:class:`EventQueue` with the windowed-drain primitive).  The default
+``batch_window=0.0`` folds only same-timestamp events, bit-for-bit the
+seed's lockstep drain; a positive window additionally folds jittered
+near-simultaneous arrivals from stochastic injectors ("decide at t+ε"),
+with the decision made at the last folded event's timestamp.  The
+batched retry preserves the seed's FIFO admission order *and* its
 head-of-line discipline (§6.1.6: the engine "waits ... for the CURRENT
 task request"): pending rows go first, and once one fails the rest of the
 queue is skipped, exactly as the sequential loop would.
@@ -41,8 +48,6 @@ debits and record stamps track the engine's host-side state transitions.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -65,17 +70,9 @@ from repro.core.types import (
     TaskBatch,
     TaskSpec,
 )
+from repro.engine.events import ALLOCATABLE, Event, EventKind, EventQueue
 from repro.engine.state_store import StateStore, TaskRecord
 from repro.workflows.spec import WorkflowSpec
-
-# Event kinds, ordered: deletions/completions before retries before arrivals
-# at equal timestamps so released resources are visible to retries.
-_COMPLETE, _OOM, _DELETE, _RETRY, _INJECT, _READY = range(6)
-_HEAL = _READY + 100  # sorts after same-time READY events
-
-# Same-timestamp events that fold into one burst-allocation dispatch.
-_DRAIN_KINDS = frozenset((_RETRY, _READY, _HEAL))
-
 
 # The engine configuration is the composed, typed form from the
 # Scenario API (repro.api.config): frozen ClusterConfig /
@@ -122,6 +119,12 @@ class EngineMetrics:
     )
     num_allocations: int = 0
     num_waits: int = 0
+    # Dispatch efficiency of the windowed drain: how many device
+    # dispatches the allocation path issued (batched mode: one per
+    # drained burst; per-task replay: one per row) and how many task
+    # rows they carried in total.
+    num_dispatches: int = 0
+    dispatched_rows: int = 0
     # SLA accounting (paper Eqs. 2-4): per-workflow deadline violations
     sla_violations: List[Tuple[str, float, float]] = dataclasses.field(
         default_factory=list  # (workflow, finished_at, deadline)
@@ -136,6 +139,12 @@ class EngineMetrics:
     def avg_workflow_duration(self) -> float:
         vals = list(self.workflow_durations.values())
         return float(np.mean(vals)) if vals else 0.0
+
+    @property
+    def mean_burst_width(self) -> float:
+        """Mean task rows per allocation dispatch (1.0 in replay mode)."""
+        return (self.dispatched_rows / self.num_dispatches
+                if self.num_dispatches else 0.0)
 
 
 class KubeAdaptor:
@@ -169,19 +178,18 @@ class KubeAdaptor:
         self.store = StateStore()
         self.runs: Dict[str, WorkflowRun] = {}
         self.metrics = EngineMetrics()
-        self._events: List[Tuple[float, int, int, tuple]] = []
-        self._seq = itertools.count()
+        self.queue = EventQueue()
         self._pending: Deque[Tuple[str, TaskSpec]] = deque()
         self._now = 0.0
         self._last_sample = (0.0, 0.0, 0.0)  # (t, cpu_util, mem_util)
         self._util_integral = np.zeros(2)
 
     # ----------------------------------------------------------- plumbing
-    def _push(self, t: float, kind: int, payload: tuple) -> None:
-        heapq.heappush(self._events, (t, kind, next(self._seq), payload))
+    def _push(self, t: float, kind: EventKind, payload: tuple) -> None:
+        self.queue.push(t, kind, payload)
 
     def submit(self, spec: WorkflowSpec, at: float) -> None:
-        self._push(at, _INJECT, (spec,))
+        self._push(at, EventKind.INJECT, (spec,))
 
     def _sample_usage(self) -> None:
         """Advance the time-weighted utilization integral to ``now``."""
@@ -207,7 +215,7 @@ class KubeAdaptor:
                 duration=task.duration, cpu=task.cpu, mem=task.mem,
             ))
         for tid in spec.roots():
-            self._push(self._now, _READY, (spec.workflow_id, tid))
+            self._push(self._now, EventKind.READY, (spec.workflow_id, tid))
 
     # --------------------------------------------------- burst allocation
     def _batch_of(self, entries: List[Tuple[str, TaskSpec, str]]
@@ -284,10 +292,10 @@ class KubeAdaptor:
         if alloc.mem < runtime_floor - 1e-9 and task.mem > 0:
             t_oom = self._now + timing.pod_startup_delay + \
                 timing.oom_fraction * wall
-            self._push(t_oom, _OOM, (pod.uid, wf_id))
+            self._push(t_oom, EventKind.OOM, (pod.uid, wf_id))
         else:
             t_done = self._now + timing.pod_startup_delay + wall
-            self._push(t_done, _COMPLETE, (pod.uid, wf_id))
+            self._push(t_done, EventKind.COMPLETE, (pod.uid, wf_id))
         self._sample_usage()
 
     def _allocate_group(self, entries: List[Tuple[str, TaskSpec, str]],
@@ -298,6 +306,9 @@ class KubeAdaptor:
                        for wf_id, task in self._pending] + entries
         if not entries:
             return
+        self.metrics.dispatched_rows += len(entries)
+        self.metrics.num_dispatches += (
+            1 if self.cfg.alloc.batch_allocation else len(entries))
         kept: Deque[Tuple[str, TaskSpec]] = deque()
         failed: List[Tuple[str, TaskSpec]] = []
         rows = self._decision_rows(entries)
@@ -320,42 +331,53 @@ class KubeAdaptor:
         else:
             self._pending.extend(failed)
 
-    def _drain_group(self, kind: int, payload: tuple) -> None:
-        """Fold every same-timestamp retry/ready/heal event into one burst.
+    def _drain_group(self, first: Event) -> None:
+        """Fold the head's allocatable-event window into one burst.
 
-        Events are consumed in heap order (kind, then sequence), so the
+        Events are consumed in heap order (time, kind, sequence), so the
         batch rows land in exactly the order the sequential loop would
         have decided them; virtual tasks complete inline, which may
-        surface more same-timestamp READY events — the loop keeps
-        draining until the next event belongs to a later timestamp or
-        another kind.  Both engine modes share this drain; they differ
-        only in how the group is decided (one fused dispatch vs the
-        row-at-a-time replay — see ``_decision_rows``).
+        surface more in-window READY events — the loop keeps draining
+        while the next queued event folds: an allocatable request due
+        within ``batch_window`` seconds of the head ("decide at t+ε"),
+        or a strictly-later INJECT within that deadline, which is
+        injected inline so the jittered arrival's READY events join the
+        burst.  The clock advances with each folded event, so the fused
+        decision is made at the *last* arrival's timestamp, never before
+        a request exists; a capacity-changing event inside the window
+        (completion, deletion, OOM) stops the fold, because it must
+        apply first.  With ``batch_window=0.0`` the deadline is the
+        head's own timestamp and only same-timestamp allocatable events
+        fold — the seed's lockstep drain, bit for bit.  Both engine
+        modes share this drain; they differ only in how the group is
+        decided (one fused dispatch vs the row-at-a-time replay — see
+        ``_decision_rows``).
         """
+        deadline = first.t + self.cfg.timing.batch_window
         include_pending = False
         entries: List[Tuple[str, TaskSpec, str]] = []
-        while True:
-            if kind == _RETRY:
+        event: Optional[Event] = first
+        while event is not None:
+            self._now = event.t
+            if event.kind is EventKind.INJECT:
+                self._inject(*event.payload)
+            elif event.kind is EventKind.RETRY:
                 include_pending = True
-            elif kind == _READY:
-                wf_id, tid = payload
+            elif event.kind is EventKind.READY:
+                wf_id, tid = event.payload
                 task = self.runs[wf_id].spec.tasks[tid]
                 if task.cpu == 0 and task.mem == 0:
                     # Virtual entrance/exit: complete instantly, no pod.
                     self._task_done(wf_id, tid)
                 else:
                     entries.append((wf_id, task, "ready"))
-            else:  # _HEAL
-                wf_id, task = payload
+            else:  # HEAL
+                wf_id, task = event.payload
                 self.metrics.realloc_events.append(
                     (self._now, f"{wf_id}/{task.task_id}")
                 )
                 entries.append((wf_id, task, "heal"))
-            if self._events and self._events[0][0] == self._now \
-                    and self._events[0][1] in _DRAIN_KINDS:
-                _, kind, _, payload = heapq.heappop(self._events)
-            else:
-                break
+            event = self.queue.pop_mergeable(first.t, deadline)
         self._allocate_group(entries, include_pending)
 
     # --------------------------------------------------------- completion
@@ -367,7 +389,7 @@ class KubeAdaptor:
         for child in run.spec.children(tid):
             run.indegree[child] -= 1
             if run.indegree[child] == 0:
-                self._push(self._now, _READY, (wf_id, child))
+                self._push(self._now, EventKind.READY, (wf_id, child))
         if run.complete:
             run.finished_at = self._now
             dur_start = run.first_start if run.first_start is not None \
@@ -382,10 +404,10 @@ class KubeAdaptor:
     def _complete(self, uid: int, wf_id: str) -> None:
         pod = self.cluster.finish(uid, self._now, PodPhase.SUCCEEDED)
         self._sample_usage()
-        self._push(self._now + self.cfg.timing.cleanup_delay, _DELETE,
-                   (uid,))
+        self._push(self._now + self.cfg.timing.cleanup_delay,
+                   EventKind.DELETE, (uid,))
         self._task_done(wf_id, pod.task.task_id)
-        self._push(self._now, _RETRY, ())
+        self._push(self._now, EventKind.RETRY, ())
 
     def _oom(self, uid: int, wf_id: str) -> None:
         """OOMKilled watch → delete → reallocate (self-healing, Fig. 9)."""
@@ -393,35 +415,49 @@ class KubeAdaptor:
         self._sample_usage()
         key = f"{wf_id}/{pod.task.task_id}"
         self.metrics.oom_events.append((self._now, key))
-        self._push(self._now + self.cfg.timing.cleanup_delay, _DELETE,
-                   (uid,))
+        self._push(self._now + self.cfg.timing.cleanup_delay,
+                   EventKind.DELETE, (uid,))
         # Learn the runtime floor so the reallocation cannot repeat the OOM.
         learned = dataclasses.replace(
             pod.task, min_mem=max(pod.task.min_mem, pod.task.runtime_min_mem())
         )
-        self._push(self._now + self.cfg.timing.restart_delay, _HEAL,
+        self._push(self._now + self.cfg.timing.restart_delay, EventKind.HEAL,
                    (wf_id, learned))
 
     # ------------------------------------------------------------ run loop
+    def step(self) -> Event:
+        """Pop and process the next event; returns the processed head.
+
+        An allocatable head (retry/ready/heal) drains its whole
+        ``batch_window`` of follow-on requests in the same step — see
+        ``_drain_group``.  Exposed so harnesses (benchmarks, tests) can
+        drive the engine event by event instead of to completion.
+        """
+        if not self.queue:
+            raise RuntimeError("step() on an empty event queue — guard "
+                               "the loop with `while engine.queue: ...`")
+        event = self.queue.pop()
+        if event.t > self.cfg.timing.max_time:
+            raise RuntimeError("simulation exceeded max_time — deadlock?")
+        self._now = event.t
+        if event.kind is EventKind.INJECT:
+            self._inject(*event.payload)
+        elif event.kind is EventKind.COMPLETE:
+            self._complete(*event.payload)
+        elif event.kind is EventKind.OOM:
+            self._oom(*event.payload)
+        elif event.kind is EventKind.DELETE:
+            self.cluster.delete(*event.payload)
+        else:  # RETRY / READY / HEAL
+            self._drain_group(event)
+        return event
+
     def run(self) -> EngineMetrics:
         t_first: Optional[float] = None
-        while self._events:
-            t, kind, _, payload = heapq.heappop(self._events)
-            if t > self.cfg.timing.max_time:
-                raise RuntimeError("simulation exceeded max_time — deadlock?")
-            self._now = t
+        while self.queue:
+            event = self.step()
             if t_first is None:
-                t_first = t
-            if kind == _INJECT:
-                self._inject(*payload)
-            elif kind == _COMPLETE:
-                self._complete(*payload)
-            elif kind == _OOM:
-                self._oom(*payload)
-            elif kind == _DELETE:
-                self.cluster.delete(*payload)
-            elif kind in _DRAIN_KINDS:
-                self._drain_group(kind, payload)
+                t_first = event.t
             if self.cfg.invariant_checks:
                 self.cluster.check_invariants()
 

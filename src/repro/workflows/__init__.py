@@ -1,4 +1,11 @@
-from repro.workflows.arrival import PATTERNS, constant, linear, pyramid
+from repro.workflows.arrival import (
+    constant,
+    jittered,
+    linear,
+    poisson,
+    pyramid,
+    trace,
+)
 from repro.workflows.dags import (
     WORKFLOW_BUILDERS,
     cybershake,
@@ -9,7 +16,7 @@ from repro.workflows.dags import (
 from repro.workflows.spec import TaskSpec, WorkflowSpec, make_task
 
 __all__ = [
-    "PATTERNS", "constant", "linear", "pyramid",
+    "constant", "linear", "pyramid", "poisson", "jittered", "trace",
     "WORKFLOW_BUILDERS", "montage", "epigenomics", "cybershake", "ligo",
     "TaskSpec", "WorkflowSpec", "make_task",
 ]

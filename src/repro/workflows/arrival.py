@@ -1,4 +1,4 @@
-"""Workflow arrival patterns (paper §6.1.4, Fig. 5(a-c)).
+"""Workflow arrival patterns (paper §6.1.4, Fig. 5(a-c)) + stochastic ones.
 
 Each pattern is a builder returning a list of ``(time_seconds,
 num_workflows)`` bursts, registered in ``repro.api.registry.ARRIVALS``
@@ -10,10 +10,25 @@ without edits here:
 
     @ARRIVALS.register("poisson_burst")
     def poisson_burst(lam=3.0, bursts=6, interval=300.0, seed=0): ...
+
+The paper's three deterministic patterns emit lockstep bursts at exact
+``interval`` marks.  The stochastic patterns (``poisson``, ``jittered``)
+model the headline scenario — "continuous workflow requests and
+unexpected resource request spikes" — as per-workflow arrival streams
+with no two events sharing a timestamp; pair them with a positive
+``TimingConfig.batch_window`` so the engine's windowed drain folds the
+jittered arrivals back into fused dispatches.  They carry the
+``stochastic`` capability flag, which tells :class:`repro.api.Scenario`
+to wire its own ``seed`` into the builder (so ``grid(seeds=...)`` sweeps
+replicate arrivals too); ``trace`` replays an explicit timestamp list,
+e.g. one recorded from a production request log.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+import itertools
+from typing import Iterable, List, Sequence, Tuple, Union
+
+import numpy as np
 
 from repro.api.registry import ARRIVALS
 
@@ -59,10 +74,87 @@ def pyramid(start: int = 2, peak: int = 6, step: int = 2, total: int = 34,
     return out
 
 
-# Legacy name→builder view of the built-ins; the ARRIVALS registry is
-# the source of truth (and the only place third-party patterns appear).
-PATTERNS = {"constant": constant, "linear": linear, "pyramid": pyramid}
+# ------------------------------------------------------------- stochastic
+
+@ARRIVALS.register(
+    "poisson", capabilities=("stochastic",),
+    doc="homogeneous Poisson stream, per-workflow arrivals")
+def poisson(lam: float = 5.0, bursts: int = 6, interval: float = INTERVAL,
+            seed: int = 0) -> List[Tuple[float, int]]:
+    """Poisson arrival stream with the same expected load as
+    ``constant(y=lam, bursts=bursts)``: rate ``lam/interval`` over the
+    horizon ``[0, bursts·interval)``.
+
+    Sampled by conditioning-and-thinning: draw the total count
+    ``N ~ Poisson(lam·bursts)``, then thin ``N`` i.i.d. uniform
+    timestamps over the horizon — the exact conditional law of a
+    homogeneous Poisson process.  Each workflow arrives alone (bursts of
+    size 1), so without a positive ``batch_window`` every arrival is its
+    own dispatch.
+    """
+    if lam <= 0:
+        raise ValueError(f"poisson lam must be > 0, got {lam}")
+    if bursts < 1 or interval <= 0:
+        raise ValueError(f"poisson needs bursts >= 1 and interval > 0, "
+                         f"got bursts={bursts}, interval={interval}")
+    rng = np.random.default_rng(seed)
+    horizon = bursts * interval
+    n = int(rng.poisson(lam * bursts))
+    times = np.sort(rng.uniform(0.0, horizon, n))
+    return [(float(t), 1) for t in times]
 
 
-def total_workflows(pattern: List[Tuple[float, int]]) -> int:
+@ARRIVALS.register(
+    "jittered", capabilities=("stochastic",),
+    doc="deterministic base pattern with per-workflow arrival jitter")
+def jittered(base: str = "constant", jitter: float = 30.0, seed: int = 0,
+             base_params: dict = None) -> List[Tuple[float, int]]:
+    """Jittered variant of a deterministic pattern: every workflow of a
+    base burst ``(t, n)`` arrives independently at ``t + U[0, jitter)``
+    — the paper's workloads under realistic request-stream dispersion
+    (constant/linear/pyramid all jitter through this one entry).
+    """
+    entry = ARRIVALS.get(base)
+    if entry.supports("stochastic"):
+        raise ValueError(
+            f"jittered base must be a deterministic pattern, "
+            f"got stochastic {base!r}"
+        )
+    if jitter < 0:
+        raise ValueError(f"jitter must be >= 0, got {jitter}")
+    pattern = entry.factory(**dict(base_params or {}))
+    rng = np.random.default_rng(seed)
+    times: List[float] = []
+    for t, n in pattern:
+        times.extend(float(x) for x in t + rng.uniform(0.0, jitter, n))
+    return [(t, 1) for t in sorted(times)]
+
+
+@ARRIVALS.register(
+    "trace", doc="replay an explicit list of arrival timestamps")
+def trace(times: Sequence[Union[float, Tuple[float, int]]] = ()
+          ) -> List[Tuple[float, int]]:
+    """Replay explicit arrival timestamps (e.g. from a request log).
+
+    ``times`` entries are either bare timestamps (one workflow each) or
+    ``(timestamp, count)`` pairs; equal timestamps coalesce into one
+    burst, and the output is time-sorted regardless of input order.
+    """
+    flat: List[Tuple[float, int]] = []
+    for item in times:
+        t, n = item if isinstance(item, (tuple, list)) else (item, 1)
+        if not np.isfinite(t) or t < 0:
+            raise ValueError(f"trace timestamps must be finite and >= 0, "
+                             f"got {t!r}")
+        if n < 1 or n != int(n):
+            raise ValueError(f"trace counts must be integers >= 1, "
+                             f"got {n!r}")
+        flat.append((float(t), int(n)))
+    return [
+        (t, sum(n for _, n in group))
+        for t, group in itertools.groupby(sorted(flat), key=lambda p: p[0])
+    ]
+
+
+def total_workflows(pattern: Iterable[Tuple[float, int]]) -> int:
     return sum(n for _, n in pattern)

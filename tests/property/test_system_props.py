@@ -6,13 +6,13 @@ pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
-from repro.engine import EngineConfig, run_experiment
+from repro.engine import EngineConfig, TimingConfig, run_experiment
 from repro.workflows import WORKFLOW_BUILDERS
 
 pytestmark = pytest.mark.tier1
 
-FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
-                    duration_multiplier=1.0)
+FAST = EngineConfig(timing=TimingConfig(
+    pod_startup_delay=1.0, cleanup_delay=1.0, duration_multiplier=1.0))
 
 
 @settings(max_examples=12, deadline=None)
@@ -27,9 +27,7 @@ def test_simulator_invariants_random(kind, count, allocator, seed, batched):
     """For arbitrary workloads: no overcommit (checked inside the engine
     at every event), every workflow completes, utilization in [0, 1] —
     in both burst-batched and per-task allocation modes."""
-    import dataclasses
-
-    cfg = dataclasses.replace(FAST, batch_allocation=batched)
+    cfg = FAST.evolve(batch_allocation=batched)
     m = run_experiment(kind, [(0.0, count)], allocator, seed=seed,
                        config=cfg)
     assert len(m.workflow_durations) == count

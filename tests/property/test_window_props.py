@@ -1,0 +1,148 @@
+"""Windowed-drain parity properties (requires hypothesis).
+
+Three contracts for ``TimingConfig.batch_window``, each across both
+allocators, both sequential-core backends, and both engine modes
+(batched / per-task replay):
+
+* **window=0 is the legacy drain** — on a single lockstep burst a
+  positive window cannot change anything (same-timestamp folding is
+  already maximal, and every later allocatable event is guarded by the
+  capacity event that produced it), so every metric matches
+  ``batch_window=0`` bit for bit; and on all-distinct jittered arrivals
+  ``batch_window=0`` decides one dispatch per arrival timestamp, each
+  stamped at its own arrival — the seed engine's
+  one-dispatch-per-event-timestamp contract.  (Across *multiple* bursts
+  a window larger than the inter-burst gap deliberately folds the next
+  burst's arrivals into the current decision — that is the decide-at-t+ε
+  semantics, not a parity bug — so the invariance claim is per-burst.)
+* **batched ≡ replay under any window** — the windowed burst decided in
+  one fused dispatch is bit-for-bit the row-at-a-time replay of the same
+  burst, extending ``tests/test_batch_parity.py`` to positive windows.
+* **insertion-order invariance** — arrivals folded into one window batch
+  in timestamp order, regardless of submission order.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.engine import EngineConfig, KubeAdaptor, TimingConfig, \
+    run_experiment  # noqa: E402
+from repro.workflows.spec import TaskSpec, WorkflowSpec  # noqa: E402
+
+pytestmark = pytest.mark.tier1
+
+FAST = EngineConfig(timing=TimingConfig(
+    pod_startup_delay=1.0, cleanup_delay=1.0, duration_multiplier=1.0))
+
+_allocator = st.sampled_from(["aras", "fcfs"])
+_backend = st.sampled_from(["scan", "pallas"])
+_batched = st.booleans()
+
+
+def _metrics_equal(a, b):
+    assert a.makespan == b.makespan
+    assert a.workflow_durations == b.workflow_durations
+    assert a.alloc_trace == b.alloc_trace
+    assert a.oom_events == b.oom_events
+    assert a.realloc_events == b.realloc_events
+    assert a.num_allocations == b.num_allocations
+    assert a.usage_series == b.usage_series
+
+
+def _single_task_wf(i, duration=60.0):
+    # Twin of tests/test_events.py::_single_task_wf — keep the task
+    # shape in sync (duration far beyond every test's arrival span, so
+    # completions never interrupt the drained windows).
+    task = TaskSpec(task_id="t0", image="i", cpu=600.0, mem=1200.0,
+                    duration=duration, min_cpu=100.0, min_mem=200.0)
+    return WorkflowSpec(workflow_id=f"w{i}", tasks={"t0": task}, edges=[])
+
+
+def _run_times(times, config, order=None):
+    eng = KubeAdaptor(config)
+    for i in (order if order is not None else range(len(times))):
+        eng.submit(_single_task_wf(i), times[i])
+    return eng.run()
+
+
+@settings(max_examples=8, deadline=None)
+@given(allocator=_allocator, backend=_backend, batched=_batched,
+       window=st.floats(min_value=0.0, max_value=1e6, allow_nan=False),
+       seed=st.integers(0, 1000))
+def test_lockstep_burst_is_window_invariant(allocator, backend, batched,
+                                            window, seed):
+    """On a single same-timestamp burst any batch_window is bit-for-bit
+    the batch_window=0 drain — i.e. window=0 IS the lockstep legacy
+    semantics, in every allocator × backend × mode combination."""
+    def run(w):
+        cfg = FAST.evolve(alloc_backend=backend, batch_allocation=batched,
+                          batch_window=w)
+        return run_experiment("montage", [(0.0, 4)], allocator, seed=seed,
+                              config=cfg)
+
+    _metrics_equal(run(0.0), run(window))
+
+
+@settings(max_examples=8, deadline=None)
+@given(allocator=_allocator, backend=_backend, batched=_batched,
+       gaps=st.lists(st.floats(min_value=0.25, max_value=5.0,
+                               allow_nan=False), min_size=1, max_size=5),
+       )
+def test_window_zero_decides_each_arrival_alone(allocator, backend,
+                                                batched, gaps):
+    """batch_window=0 on all-distinct arrival timestamps: every arrival
+    is its own decision, stamped at its own arrival time."""
+    times, t = [], 0.0
+    for gap in gaps:
+        times.append(t)
+        t += gap
+    cfg = FAST.evolve(allocator=allocator, alloc_backend=backend,
+                      batch_allocation=batched, batch_window=0.0)
+    m = _run_times(times, cfg)
+    assert m.num_allocations == len(times)
+    assert m.num_dispatches == len(times)
+    assert [ts for ts, *_ in m.alloc_trace] == times
+
+
+@settings(max_examples=8, deadline=None)
+@given(allocator=_allocator, backend=_backend,
+       window=st.floats(min_value=0.0, max_value=30.0, allow_nan=False),
+       seed=st.integers(0, 1000), count=st.integers(2, 4))
+def test_windowed_batched_equals_replay(allocator, backend, window, seed,
+                                        count):
+    """The windowed fused dispatch ≡ its per-task replay, bit for bit,
+    under stochastic (jittered) arrivals and any window."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    pattern = [(float(t), 1)
+               for t in np.sort(rng.uniform(0.0, 20.0, count))]
+
+    def run(batched):
+        cfg = FAST.evolve(alloc_backend=backend, batch_allocation=batched,
+                          batch_window=window)
+        return run_experiment("montage", pattern, allocator, seed=seed,
+                              config=cfg)
+
+    _metrics_equal(run(True), run(False))
+
+
+@settings(max_examples=8, deadline=None)
+@given(allocator=_allocator, batched=_batched,
+       times=st.lists(st.floats(min_value=0.0, max_value=20.0,
+                                allow_nan=False),
+                      min_size=2, max_size=6, unique=True),
+       order_seed=st.integers(0, 1000))
+def test_windowed_results_invariant_to_insertion_order(allocator, batched,
+                                                       times, order_seed):
+    """Arrivals within one window fold in timestamp order: submitting
+    the same workflows in any order yields identical results."""
+    import numpy as np
+
+    times = sorted(times)
+    cfg = FAST.evolve(allocator=allocator, batch_allocation=batched,
+                      batch_window=25.0)
+    order = np.random.default_rng(order_seed).permutation(len(times))
+    _metrics_equal(_run_times(times, cfg),
+                   _run_times(times, cfg, order=[int(i) for i in order]))

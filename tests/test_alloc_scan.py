@@ -6,8 +6,6 @@ engine-level end-to-end check that a full simulation driven through the
 Pallas backend (interpret mode off-TPU) reproduces the scan backend's
 metrics exactly.
 """
-import dataclasses
-
 import numpy as np
 import pytest
 
@@ -15,12 +13,12 @@ import jax.numpy as jnp
 
 from repro.core.allocator import _burst_precompute, _core_dispatch
 from repro.core.placement import PLACEMENT_POLICIES
-from repro.engine import EngineConfig, run_experiment
+from repro.engine import EngineConfig, TimingConfig, run_experiment
 
 pytestmark = pytest.mark.tier1
 
-FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
-                    duration_multiplier=1.0)
+FAST = EngineConfig(timing=TimingConfig(
+    pod_startup_delay=1.0, cleanup_delay=1.0, duration_multiplier=1.0))
 
 
 def _random_burst(seed, m=37, num_rec=16, num_rows=8):
@@ -86,8 +84,7 @@ def test_engine_end_to_end_kernel_parity(allocator):
     for policy in PLACEMENT_POLICIES:
         runs = {}
         for backend in ("scan", "pallas"):
-            cfg = dataclasses.replace(FAST, placement=policy,
-                                      alloc_backend=backend)
+            cfg = FAST.evolve(placement=policy, alloc_backend=backend)
             runs[backend] = run_experiment("montage", [(0.0, 2)], allocator,
                                            seed=0, config=cfg)
         scan, pallas = runs["scan"], runs["pallas"]

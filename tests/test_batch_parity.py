@@ -15,21 +15,19 @@ one per attempted row — the decisions themselves are identical.)
 Also covers: the three placement policies, and batch edge cases (empty
 batch, single task, all-infeasible burst).
 """
-import dataclasses
-
 import numpy as np
 import pytest
 
 from repro.core.allocator import AdaptiveAllocator, FCFSAllocator
 from repro.core.types import TaskBatch, TaskSpec, TaskWindow
 from repro.core.placement import pick_node
-from repro.engine import EngineConfig, run_experiment
+from repro.engine import EngineConfig, TimingConfig, run_experiment
 from repro.workflows import arrival
 
 pytestmark = pytest.mark.tier1
 
-FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
-                    duration_multiplier=1.0)
+FAST = EngineConfig(timing=TimingConfig(
+    pod_startup_delay=1.0, cleanup_delay=1.0, duration_multiplier=1.0))
 
 # Scaled-down versions of the paper's three §6.1.4 arrival patterns so
 # each run stays test-sized while still producing multi-workflow bursts.
@@ -42,7 +40,7 @@ PATTERNS = {
 
 
 def _run(kind, pattern, allocator, batched, task_kwargs=None, seed=0):
-    cfg = dataclasses.replace(FAST, batch_allocation=batched)
+    cfg = FAST.evolve(batch_allocation=batched)
     return run_experiment(kind, pattern, allocator, seed=seed, config=cfg,
                           task_kwargs=task_kwargs)
 
@@ -155,7 +153,7 @@ def test_placement_unknown_policy_raises():
 @pytest.mark.parametrize("policy",
                          ["worst_fit", "best_fit", "first_fit", "balanced"])
 def test_engine_runs_under_every_policy(policy):
-    cfg = dataclasses.replace(FAST, placement=policy)
+    cfg = FAST.evolve(placement=policy)
     m = run_experiment("montage", [(0.0, 3)], "aras", seed=0, config=cfg)
     assert len(m.workflow_durations) == 3
 
@@ -166,8 +164,7 @@ def test_engine_runs_under_every_policy(policy):
 def test_engine_parity_every_policy(policy, allocator):
     """Batched ≡ per-task replay under every placement policy."""
     def run(batched):
-        cfg = dataclasses.replace(FAST, batch_allocation=batched,
-                                  placement=policy)
+        cfg = FAST.evolve(batch_allocation=batched, placement=policy)
         return run_experiment("montage", [(0.0, 4)], allocator, seed=0,
                               config=cfg)
 

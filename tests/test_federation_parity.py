@@ -19,8 +19,6 @@ Plus: scan ≡ pallas at K > 1, the multi-cluster ``ClusterSim`` mode
 walk with invariants), layout/mesh plumbing, and the single-device
 sharding fallback.
 """
-import dataclasses
-
 import numpy as np
 import pytest
 
@@ -30,12 +28,12 @@ from repro.cluster.simulator import ClusterSim
 from repro.core.allocator import AdaptiveAllocator, FCFSAllocator
 from repro.core.placement import PLACEMENT_POLICIES
 from repro.core.types import Allocation, PodPhase, TaskBatch, TaskSpec, TaskWindow
-from repro.engine import EngineConfig, run_experiment
+from repro.engine import EngineConfig, TimingConfig, run_experiment
 
 pytestmark = pytest.mark.tier1
 
-FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
-                    duration_multiplier=1.0)
+FAST = EngineConfig(timing=TimingConfig(
+    pod_startup_delay=1.0, cleanup_delay=1.0, duration_multiplier=1.0))
 
 ALLOCATORS = (AdaptiveAllocator, FCFSAllocator)
 FIELDS = ("cpu", "mem", "node", "feasible", "attempted", "scenario")
@@ -136,8 +134,7 @@ def test_engine_forced_federation_is_bitwise_legacy(allocator, policy):
     """cluster_sharding="force" routes num_clusters=1 through the K=1
     federated path; whole-simulation metrics must not move a bit."""
     def run(sharding):
-        cfg = dataclasses.replace(FAST, placement=policy,
-                                  cluster_sharding=sharding)
+        cfg = FAST.evolve(placement=policy, cluster_sharding=sharding)
         return run_experiment("montage", [(0.0, 3)], allocator, seed=0,
                               config=cfg)
 
@@ -149,8 +146,7 @@ def test_engine_forced_federation_replay_mode(allocator):
     """The per-task replay (batch_allocation=False) takes the same K=1
     federated path and still matches the legacy engine exactly."""
     def run(sharding):
-        cfg = dataclasses.replace(FAST, batch_allocation=False,
-                                  cluster_sharding=sharding)
+        cfg = FAST.evolve(batch_allocation=False, cluster_sharding=sharding)
         return run_experiment("montage", [(0.0, 3)], allocator, seed=0,
                               config=cfg)
 
@@ -202,7 +198,7 @@ def test_engine_multi_cluster_runs(allocator):
     """A 2-cluster engine drives workflows to completion under invariant
     checks; FCFS federations additionally reproduce the single-cluster
     metrics exactly (decisions are placement-only)."""
-    cfg = dataclasses.replace(FAST, num_clusters=2)
+    cfg = FAST.evolve(num_clusters=2)
     fed = run_experiment("montage", [(0.0, 3)], allocator, seed=0,
                          config=cfg)
     assert len(fed.workflow_durations) == 3
@@ -279,20 +275,18 @@ def test_device_sharded_federation_matches_unsharded():
     prog = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
-import dataclasses
 import jax
-from repro.engine import EngineConfig, run_experiment
+from repro.engine import EngineConfig, TimingConfig, run_experiment
 from repro.launch.mesh import make_cluster_mesh
 
 assert len(jax.devices()) == 2
 mesh = make_cluster_mesh(2)
 assert mesh is not None and mesh.axis_names == ("clusters",), mesh
-FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
-                    duration_multiplier=1.0)
+FAST = EngineConfig(timing=TimingConfig(
+    pod_startup_delay=1.0, cleanup_delay=1.0, duration_multiplier=1.0))
 
 def run(sharding):
-    cfg = dataclasses.replace(FAST, num_clusters=2,
-                              cluster_sharding=sharding)
+    cfg = FAST.evolve(num_clusters=2, cluster_sharding=sharding)
     return run_experiment("montage", [(0.0, 2)], "fcfs", seed=0, config=cfg)
 
 off, auto = run("off"), run("auto")

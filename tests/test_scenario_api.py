@@ -65,7 +65,12 @@ def test_builtin_registry_entries():
     assert not PLACEMENTS.get("worst_fit").supports("needs_capacity_view")
 
     assert BACKENDS.names() == ("pallas", "scan")
-    assert ARRIVALS.names() == ("constant", "linear", "pyramid")
+    assert ARRIVALS.names() == ("constant", "jittered", "linear", "poisson",
+                                "pyramid", "trace")
+    for name in ("poisson", "jittered"):
+        assert ARRIVALS.get(name).supports("stochastic"), name
+    for name in ("constant", "linear", "pyramid", "trace"):
+        assert not ARRIVALS.get(name).supports("stochastic"), name
     assert len(list(ALLOCATORS)) == 2
 
 
@@ -335,7 +340,8 @@ def test_run_result_json_schema():
                 "cpu_usage_rate", "mem_usage_rate",
                 "per_decision_latency_us", "num_workflows",
                 "num_allocations", "num_waits", "num_oom_events",
-                "num_reallocations", "sla_violation_rate", "wall_time_s"):
+                "num_reallocations", "num_dispatches", "mean_burst_width",
+                "sla_violation_rate", "wall_time_s"):
         assert key in payload, key
     assert "metrics" not in payload  # trace object stays out of the JSON
     assert payload["scenario"]["engine"]["alloc"]["algorithm"] == "aras"

@@ -5,14 +5,14 @@ import numpy as np
 
 from repro.core.allocator import AdaptiveAllocator
 from repro.core.types import ClusterSnapshot, TaskSpec, TaskWindow
-from repro.engine import EngineConfig, KubeAdaptor
+from repro.engine import EngineConfig, KubeAdaptor, TimingConfig
 from repro.workflows.dags import montage
 import pytest
 
 pytestmark = pytest.mark.tier1
 
-FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
-                    duration_multiplier=1.0)
+FAST = EngineConfig(timing=TimingConfig(
+    pod_startup_delay=1.0, cleanup_delay=1.0, duration_multiplier=1.0))
 
 
 def test_workflow_deadline_violation_recorded():

@@ -6,19 +6,18 @@ Randomized simulator-invariant properties (hypothesis) live in
 ``tests/property/test_system_props.py`` so this module collects on a
 bare jax+pytest environment.
 """
-import dataclasses
-
 import numpy as np
 import pytest
 
-from repro.engine import EngineConfig, KubeAdaptor, run_experiment
+from repro.engine import EngineConfig, KubeAdaptor, TimingConfig, \
+    run_experiment
 from repro.workflows import arrival
 from repro.workflows.dags import cybershake, epigenomics, ligo, montage
 
 pytestmark = pytest.mark.tier1
 
-FAST = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
-                    duration_multiplier=1.0)
+FAST = EngineConfig(timing=TimingConfig(
+    pod_startup_delay=1.0, cleanup_delay=1.0, duration_multiplier=1.0))
 
 
 # ------------------------------------------------------------ workflows
