@@ -4,7 +4,7 @@ The paper's Go loops are O(nodes × pods) per allocation; our JAX
 implementation is one fused segment-sum + a branchless lattice, and the
 engine decides an entire arrival burst in a single fused dispatch.
 
-Two benchmarks:
+Three benchmarks:
 
 * ``core``   — the evaluator kernel alone (discover + summarize +
   vmapped Alg. 3), as in the seed: raw device throughput.
@@ -15,6 +15,14 @@ Two benchmarks:
   ``per_task`` (the sequential reference loop, one dispatch per task) —
   the per-decision latency ratio is the win of making the burst, not the
   task, the allocation unit.
+* ``stream`` (``--stream``) — the **serving loop** at scale: a Poisson
+  arrival stream served by ``repro.serving.StreamEngine``, reporting
+  sustained decisions/sec and p50/p99 per-decision latency, with the
+  device-resident incremental state against the full re-pad baseline
+  (``AllocatorConfig.incremental_state``).  In this regime each dispatch
+  carries a handful of rows, so the O(nodes) per-dispatch re-staging is
+  the dominant cost the incremental path removes — the
+  ``p50_improvement`` column is that win.
 
 Usage::
 
@@ -23,6 +31,7 @@ Usage::
     PYTHONPATH=src python benchmarks/allocator_scale.py --nodes 1000 --burst 256
     PYTHONPATH=src python benchmarks/allocator_scale.py --clusters 4   # federated
     PYTHONPATH=src python benchmarks/allocator_scale.py --placement all
+    PYTHONPATH=src python benchmarks/allocator_scale.py --stream --nodes 100000
     PYTHONPATH=src python benchmarks/allocator_scale.py --json BENCH_allocator.json
 
 The engine benchmark takes a ``--clusters`` axis (federated multi-cluster
@@ -54,6 +63,7 @@ from repro.api import (
 )
 from repro.core import EvalInputs, evaluate_batch, node_residuals
 from repro.engine import KubeAdaptor
+from repro.serving import StreamEngine
 from repro.workflows import TaskSpec, WorkflowSpec
 
 
@@ -206,6 +216,85 @@ def report_engine(num_nodes: int, burst: int, repeats: int,
     }
 
 
+# --------------------------------------------------------------- streaming
+
+def _stream_arrivals(count: int, mean_gap: float = 1.0):
+    """Poisson arrival stream of single-task workflows, time-sorted."""
+    rng = np.random.default_rng(0)
+    out, t = [], 0.0
+    for i in range(count):
+        t += float(rng.exponential(mean_gap))
+        out.append((t, _burst_spec(1, rng, workflow_id=f"s{i}", offset=i)))
+    return out
+
+
+def bench_stream(num_nodes: int, arrivals: int, repeats: int = 3,
+                 window: float = 0.0, clusters: int = 1,
+                 incremental: bool = True):
+    """Serve a Poisson stream; returns the best repeat's StreamStats.
+
+    ``incremental`` toggles the device-resident state against the full
+    re-pad baseline — same decisions bit-for-bit, different per-dispatch
+    cost.
+    """
+    cfg = EngineConfig(
+        cluster=ClusterConfig(num_nodes=num_nodes, node_cpu=8000.0,
+                              node_mem=16000.0, num_clusters=clusters),
+        alloc=AllocatorConfig(incremental_state=incremental),
+        timing=TimingConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                            duration_multiplier=1.0, batch_window=window),
+        invariant_checks=False,
+    )
+    best = None
+    for i in range(repeats + 1):  # extra first run = compile warmup
+        stats = StreamEngine(KubeAdaptor(cfg),
+                             _stream_arrivals(arrivals)).serve()
+        if i and (best is None or stats.p50_latency_s < best.p50_latency_s):
+            best = stats
+    return best
+
+
+def report_stream(num_nodes: int, arrivals: int, repeats: int,
+                  window: float = 0.0, clusters: int = 1) -> dict:
+    inc = bench_stream(num_nodes, arrivals, repeats, window=window,
+                       clusters=clusters, incremental=True)
+    rep = bench_stream(num_nodes, arrivals, repeats, window=window,
+                       clusters=clusters, incremental=False)
+    improvement = (rep.p50_latency_s / inc.p50_latency_s
+                   if inc.p50_latency_s > 0 else float("inf"))
+    print(
+        f"stream_scale_{num_nodes}n_{clusters}c,"
+        f"incremental={1e6*inc.p50_latency_s:.0f}us_p50/"
+        f"{1e6*inc.p99_latency_s:.0f}us_p99/"
+        f"{inc.decisions_per_sec:.0f}dps,"
+        f"repad={1e6*rep.p50_latency_s:.0f}us_p50/"
+        f"{1e6*rep.p99_latency_s:.0f}us_p99/"
+        f"{rep.decisions_per_sec:.0f}dps,"
+        f"nodes={num_nodes}|arrivals={arrivals}|window={window}|"
+        f"p50_improvement={improvement:.1f}x"
+    )
+
+    def flat(stats):
+        return {
+            "decisions": stats.decisions,
+            "dispatches": stats.dispatches,
+            "decisions_per_sec": round(stats.decisions_per_sec, 1),
+            "p50_latency_us": round(1e6 * stats.p50_latency_s, 1),
+            "p99_latency_us": round(1e6 * stats.p99_latency_s, 1),
+            "overlapped_ingests": stats.overlapped_ingests,
+        }
+
+    return {
+        "nodes": num_nodes,
+        "arrivals": arrivals,
+        "clusters": clusters,
+        "window": window,
+        "incremental": flat(inc),
+        "repad": flat(rep),
+        "p50_improvement": round(improvement, 2),
+    }
+
+
 def report_core(num_nodes: int, burst: int) -> dict:
     dt = bench_core(num_nodes, burst=burst)
     print(f"allocator_scale_{num_nodes}n,{1e6*dt:.0f},"
@@ -247,6 +336,13 @@ def main():
                          "4x --window capped at 8, 0 = one lockstep "
                          "burst; keep it under ~10 s so completions stay "
                          "out of the timed region)")
+    ap.add_argument("--stream", action="store_true",
+                    help="also run the serving-loop benchmark: a Poisson "
+                         "arrival stream through repro.serving.StreamEngine, "
+                         "incremental device-resident state vs the full "
+                         "re-pad baseline (decisions/sec + p50/p99 latency)")
+    ap.add_argument("--stream-arrivals", type=int, default=64,
+                    help="arrivals in the served stream (default 64)")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-core", action="store_true")
@@ -268,8 +364,11 @@ def main():
     if args.spread < 0:
         ap.error("--spread must be >= 0")
 
-    core_sizes = [args.nodes] if args.nodes is not None else [1_000, 10_000, 100_000]
+    core_sizes = ([args.nodes] if args.nodes is not None
+                  else [1_000, 10_000, 100_000, 1_000_000])
     engine_sizes = [args.nodes] if args.nodes is not None else [1_000, 10_000]
+    stream_sizes = ([args.nodes] if args.nodes is not None
+                    else [100_000, 1_000_000])
     results = {
         "benchmark": "allocator_scale",
         "backend": jax.default_backend(),
@@ -277,6 +376,7 @@ def main():
         "burst": args.burst,
         "core": [],
         "engine": [],
+        "stream": [],
     }
     if not args.skip_core:
         for n in core_sizes:
@@ -306,6 +406,12 @@ def main():
                                       clusters=c, placement=pol,
                                       window=args.window,
                                       spread=args.spread))
+    if args.stream:
+        for n in stream_sizes:
+            results["stream"].append(
+                report_stream(n, args.stream_arrivals, args.repeats,
+                              window=args.window,
+                              clusters=args.clusters or 1))
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(results, fh, indent=2)

@@ -16,22 +16,19 @@ splits it along the paper's own seams:
 flag), JSON-round-trips via ``to_dict``/``from_dict``, and fails early
 with actionable messages via :meth:`EngineConfig.validate`.
 
-The old flat *constructor keywords* (``EngineConfig(num_nodes=...,
-alpha=...)``) still work for one release through a deprecation shim that
-routes each flat kwarg into its sub-config and emits a
-``DeprecationWarning``; the shim builds a config *identical* to the
-composed form (gated by ``tests/test_scenario_api.py``).  The shim
-covers construction only: attribute access is composed
-(``cfg.cluster.num_nodes``) and the config is frozen — there are no
-flat read-back properties and no field mutation.  ``evolve()`` is the
-blessed, warning-free way to tweak either flat or composed fields.
+Construction is composed-only: the deprecated flat constructor keywords
+(``EngineConfig(num_nodes=..., alpha=...)``) were shimmed for one
+release, warned for a release, and are now removed — an unknown keyword
+is a plain ``TypeError``.  ``evolve()`` remains the blessed spelling for
+one-knob tweaks and still accepts both composed fields and the flat
+names (``cfg.evolve(allocator="fcfs", num_nodes=64)``).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import warnings
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 from repro.core.types import DEFAULT_ALPHA, DEFAULT_BETA
 
@@ -125,6 +122,14 @@ class AllocatorConfig:
     # False replays the same burst one dispatch per row — the bit-for-bit
     # parity reference and the bisecting tool for kernel regressions.
     batch_allocation: bool = True
+    # Device-resident incremental allocator state: keep the residual/
+    # capacity tiles and block sums on device across bursts and apply
+    # bind/complete deltas as dirty-tile scatter updates instead of
+    # re-staging all O(nodes) arrays per dispatch (decisions are
+    # bit-for-bit identical — tests/test_incremental_state.py).  Takes
+    # effect in batched mode without a device mesh; False forces the
+    # legacy full re-pad path (the parity reference and bisecting tool).
+    incremental_state: bool = True
 
     def validate(self) -> "AllocatorConfig":
         from repro.api.registry import ALLOCATORS, BACKENDS, PLACEMENTS
@@ -181,7 +186,7 @@ class TimingConfig:
         return self
 
 
-# Flat (deprecated) kwarg -> (sub-config field of EngineConfig, field).
+# Flat evolve() name -> (sub-config field of EngineConfig, field).
 _FLAT_MAP: Dict[str, tuple] = {
     "num_nodes": ("cluster", "num_nodes"),
     "node_cpu": ("cluster", "node_cpu"),
@@ -194,6 +199,7 @@ _FLAT_MAP: Dict[str, tuple] = {
     "placement": ("alloc", "placement"),
     "alloc_backend": ("alloc", "backend"),
     "batch_allocation": ("alloc", "batch_allocation"),
+    "incremental_state": ("alloc", "incremental_state"),
     "pod_startup_delay": ("timing", "pod_startup_delay"),
     "cleanup_delay": ("timing", "cleanup_delay"),
     "restart_delay": ("timing", "restart_delay"),
@@ -209,13 +215,13 @@ _SUB_TYPES = {"cluster": ClusterConfig, "alloc": AllocatorConfig,
 
 def _merge_flat(cluster: ClusterConfig, alloc: AllocatorConfig,
                 timing: TimingConfig, flat: Dict[str, Any]):
-    """Route flat kwargs into the sub-configs they now live in."""
+    """Route flat evolve() names into the sub-configs they live in."""
     unknown = sorted(set(flat) - set(_FLAT_MAP))
     if unknown:
         raise TypeError(
-            f"EngineConfig got unexpected keyword argument(s) {unknown}; "
-            f"composed fields are cluster/alloc/timing/invariant_checks, "
-            f"legacy flat fields are {sorted(_FLAT_MAP)}"
+            f"EngineConfig.evolve got unexpected keyword argument(s) "
+            f"{unknown}; composed fields are cluster/alloc/timing/"
+            f"invariant_checks, flat field names are {sorted(_FLAT_MAP)}"
         )
     parts = {"cluster": cluster, "alloc": alloc, "timing": timing}
     updates: Dict[str, Dict[str, Any]] = {}
@@ -227,7 +233,7 @@ def _merge_flat(cluster: ClusterConfig, alloc: AllocatorConfig,
     return parts["cluster"], parts["alloc"], parts["timing"]
 
 
-@dataclasses.dataclass(frozen=True, init=False)
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Composed engine configuration (cluster × allocator × timing).
 
@@ -236,39 +242,18 @@ class EngineConfig:
         EngineConfig(cluster=ClusterConfig(num_nodes=64),
                      alloc=AllocatorConfig(algorithm="fcfs"))
 
-    The old flat keywords (``EngineConfig(num_nodes=64,
-    allocator="fcfs")``) still work for one release, emit a
-    ``DeprecationWarning`` and build an identical config.
+    The flat constructor keywords of the pre-Scenario-API surface
+    (``EngineConfig(num_nodes=64, allocator="fcfs")``) are gone after
+    their one-release deprecation window; flat *names* survive only in
+    :meth:`evolve`, the one-knob tweak spelling.
     """
 
-    cluster: ClusterConfig
-    alloc: AllocatorConfig
-    timing: TimingConfig
+    cluster: ClusterConfig = ClusterConfig()
+    alloc: AllocatorConfig = AllocatorConfig()
+    timing: TimingConfig = TimingConfig()
     # Per-event O(nodes+pods) accounting cross-checks; disable for
     # large-scale benchmarking.
-    invariant_checks: bool
-
-    def __init__(self,
-                 cluster: Optional[ClusterConfig] = None,
-                 alloc: Optional[AllocatorConfig] = None,
-                 timing: Optional[TimingConfig] = None,
-                 invariant_checks: bool = True,
-                 **flat: Any):
-        cluster, alloc, timing = _merge_flat(
-            cluster or ClusterConfig(), alloc or AllocatorConfig(),
-            timing or TimingConfig(), flat,
-        )
-        if flat:  # only warn for kwargs that actually mapped somewhere
-            warnings.warn(
-                f"flat EngineConfig keyword(s) {sorted(flat)} are "
-                f"deprecated; compose ClusterConfig / AllocatorConfig / "
-                f"TimingConfig instead (or use EngineConfig.evolve)",
-                DeprecationWarning, stacklevel=2,
-            )
-        object.__setattr__(self, "cluster", cluster)
-        object.__setattr__(self, "alloc", alloc)
-        object.__setattr__(self, "timing", timing)
-        object.__setattr__(self, "invariant_checks", bool(invariant_checks))
+    invariant_checks: bool = True
 
     # ------------------------------------------------------------- updates
     def evolve(self, **updates: Any) -> "EngineConfig":

@@ -21,8 +21,15 @@ transform of the existing burst pipeline:
   core debits only the accepting shard's entry (O(1), like the legacy
   scalar totals) and re-derives the federation-wide total by a static
   left-fold, which at K=1 is the identity.
-* ``global_nodes`` — kernel flat node indices → global node ids (the
-  engine binds pods against the global node table).
+* ``global_nodes`` / ``flat_positions`` — kernel flat node indices ↔
+  global node ids (the engine binds pods against the global node table;
+  the device-resident state scatters dirty nodes back into the tiles).
+* ``tile_mask`` / ``tile_block_sums`` / ``totals_from_block_sums`` — the
+  hierarchical totals shared by the full re-pad path and the
+  incremental dirty-tile path (``repro.cluster.device_state``): masked
+  per-block sums ``[nb]``, then a fixed-order reduce to the legacy
+  scalar or per-shard ``[K]`` totals.  Equal tile contents give
+  bitwise-equal totals, which is what holds the two paths bit-for-bit.
 * ``resolve_mesh`` / ``shard_tiles`` — ``jax.sharding`` placement of the
   tile arrays along a 1-D ``clusters`` device mesh
   (``launch.mesh.make_cluster_mesh``); on a single device the mesh is
@@ -171,6 +178,65 @@ def shard_totals(arr: jax.Array, layout: Optional[FederatedLayout]):
         jnp.sum(arr[off: off + m])
         for off, m in zip(layout.offsets, layout.node_counts)
     ])
+
+
+@functools.lru_cache(maxsize=None)
+def tile_mask(num_nodes: int, layout: Optional[FederatedLayout]) -> np.ndarray:
+    """Bool ``[nb, LANE]``: which tile lanes hold real nodes.
+
+    The incremental-state path and the full re-pad path both derive their
+    block sums from this one mask, so padding lanes contribute exactly
+    ``0.0`` to every reduction in both.  Cached per (size, layout) — the
+    mask is static shape metadata, like the layout itself.
+    """
+    if layout is None or layout.num_clusters == 1:
+        nb = _ceil_div(num_nodes, LANE)
+        mask = np.zeros((nb * LANE,), bool)
+        mask[:num_nodes] = True
+        return mask.reshape(nb, LANE)
+    return (layout.node_perm >= 0).reshape(layout.num_blocks, LANE)
+
+
+def tile_block_sums(tiles: jax.Array, mask2) -> jax.Array:
+    """Per-block masked sums ``[nb]`` of residual tiles.
+
+    The single reduction shape both totals paths share: the re-pad path
+    computes it from freshly padded tiles, the incremental path re-sums
+    only dirty blocks — equal tile contents therefore give bitwise-equal
+    block sums, and (via :func:`totals_from_block_sums`) bitwise-equal
+    carried totals.
+    """
+    return jnp.sum(jnp.where(mask2, tiles, jnp.float32(0.0)), axis=1)
+
+
+def totals_from_block_sums(
+    bsum: jax.Array, layout: Optional[FederatedLayout]
+) -> jax.Array:
+    """Residual totals from block sums: legacy scalar or per-shard [K].
+
+    Replaces the flat ``[m]`` reduction of :func:`shard_totals` on the
+    burst path so the totals can be re-derived from device-resident
+    block sums without ever re-staging the flat node arrays.
+    """
+    if layout is None:
+        return jnp.sum(bsum)
+    return jnp.sum(bsum.reshape(layout.num_clusters, layout.nb_per), axis=1)
+
+
+def flat_positions(
+    nodes: np.ndarray, layout: Optional[FederatedLayout]
+) -> np.ndarray:
+    """Global node ids → padded flat tile positions (host-side).
+
+    The inverse of :func:`global_nodes`, used to target dirty-node
+    scatter updates at the device-resident tiles.
+    """
+    nodes = np.asarray(nodes, np.int64)
+    if layout is None or layout.num_clusters == 1:
+        return nodes
+    offs = np.asarray(layout.offsets, np.int64)
+    k = np.searchsorted(offs, nodes, side="right") - 1
+    return k * (layout.nb_per * LANE) + (nodes - offs[k])
 
 
 def global_nodes(

@@ -100,6 +100,12 @@ class ClusterSim:
         self._pod_cpu = np.zeros((0,), np.float32)
         self._pod_mem = np.zeros((0,), np.float32)
         self._pod_active = np.zeros((0,), bool)
+        # Dirty-node journal for the device-resident allocator state:
+        # when tracking is on, every bind/finish records the touched node
+        # so the engine can scatter just those rows into the device tiles
+        # instead of re-staging all [m] residuals per dispatch.
+        self._track_dirty = False
+        self._dirty: List[int] = []
 
     # ------------------------------------------------------------- plumbing
     def _grow(self) -> None:
@@ -141,6 +147,8 @@ class ClusterSim:
         self._used_mem_total += alloc.mem
         self._res_cpu32[i] -= np.float32(alloc.cpu)
         self._res_mem32[i] -= np.float32(alloc.mem)
+        if self._track_dirty:
+            self._dirty.append(i)
         if not self._free_slots:
             self._grow()
         slot = self._free_slots.pop()
@@ -173,6 +181,8 @@ class ClusterSim:
         # (releases only ever happen between bursts).
         self._res_cpu32[i] = np.float32(self._alloc_cpu[i] - self._used_cpu[i])
         self._res_mem32[i] = np.float32(self._alloc_mem[i] - self._used_mem[i])
+        if self._track_dirty:
+            self._dirty.append(i)
         self._pod_active[pod.slot] = False
         pod.phase = phase
         pod.t_finished = now
@@ -185,6 +195,34 @@ class ClusterSim:
         self._pod_cpu[pod.slot] = 0.0
         self._pod_mem[pod.slot] = 0.0
         self._free_slots.append(pod.slot)
+
+    # --------------------------------------------------------- dirty nodes
+    def track_dirty(self, on: bool = True) -> None:
+        """Start (or stop) journaling nodes whose residuals change.
+
+        The engine turns this on when it maintains device-resident
+        allocator state; ``delete`` never touches residuals, so only
+        ``bind``/``finish`` record entries.
+        """
+        self._track_dirty = on
+        self._dirty.clear()
+
+    def drain_dirty(self):
+        """Unique dirty node ids + their current float32 residuals.
+
+        Returns ``(nodes, res_cpu, res_mem)`` — copies, safe to hold
+        across further mutation — and clears the journal.  The residual
+        values are read from the authoritative mirror at drain time, so
+        scattering them into device tiles reproduces ``residual_view``
+        exactly for those rows.
+        """
+        if not self._dirty:
+            return (np.zeros((0,), np.int64), np.zeros((0,), np.float32),
+                    np.zeros((0,), np.float32))
+        nodes = np.unique(np.asarray(self._dirty, np.int64))
+        self._dirty.clear()
+        return (nodes, self._res_cpu32[nodes].copy(),
+                self._res_mem32[nodes].copy())
 
     # ----------------------------------------------------------- informer
     @property

@@ -45,6 +45,17 @@ debit only the owning shard, the evaluator pools federation-wide
 capacity), optionally with the tiles sharded across a ``clusters``
 device mesh.  ``layout=None`` is the legacy single-cluster path, bit for
 bit — ``tests/test_federation_parity.py`` holds the K=1 layout to it.
+
+Device-resident incremental dispatch (``repro.cluster.device_state``):
+``allocate_batch`` stages the full O(nodes) residual arrays per burst;
+``allocate_batch_async`` instead decides against a
+``DeviceResidualState`` whose tiles/block sums persist on device and are
+maintained by dirty-tile scatter updates, so only the O(burst) rows move
+per dispatch.  It returns a ``PendingBurst`` (sync deferred to
+``wait()``), letting the engine overlap host event folding with the
+in-flight fused dispatch.  Both paths share the hierarchical totals
+reduction, so decisions stay bit-for-bit identical
+(``tests/test_incremental_state.py``).
 """
 from __future__ import annotations
 
@@ -57,7 +68,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.registry import ALLOCATORS
-from repro.cluster import federation
+from repro.cluster import device_state, federation
+from repro.cluster.device_state import DeviceResidualState
 from repro.cluster.federation import FederatedLayout
 from repro.core import discovery, lifecycle
 from repro.core.evaluation import SCENARIO_NAMES
@@ -108,23 +120,45 @@ def _burst_precompute(
     cluster-major, per-shard totals); ``None`` is the legacy
     single-cluster path, bit for bit.
     """
-    num_slots = rec_t_start.shape[0]
-    num_rows = b_cpu.shape[0]
     rc2 = federation.pad_tiles_federated(residual_cpu, layout, RES_PAD)
     rm2 = federation.pad_tiles_federated(residual_mem, layout, RES_PAD)
     cc2 = federation.pad_tiles_federated(cap_cpu, layout, 0.0)
     cm2 = federation.pad_tiles_federated(cap_mem, layout, 0.0)
-    # Alg. 1 lines 15-18, hoisted: one [m] reduction per burst (per shard
-    # in federated mode); the core debits O(1) on every accept.
-    tot_cpu = federation.shard_totals(residual_cpu, layout)
-    tot_mem = federation.shard_totals(residual_mem, layout)
+    # Alg. 1 lines 15-18, hoisted: one reduction per burst (per shard in
+    # federated mode); the core debits O(1) on every accept.  Derived
+    # hierarchically — masked per-block tile sums, then a fixed-order
+    # block reduce — which is the exact reduction the device-resident
+    # incremental state maintains, so the re-pad and incremental paths
+    # carry bitwise-equal totals into the sequential core.
+    mask2 = jnp.asarray(federation.tile_mask(residual_cpu.shape[0], layout))
+    tot_cpu = federation.totals_from_block_sums(
+        federation.tile_block_sums(rc2, mask2), layout)
+    tot_mem = federation.totals_from_block_sums(
+        federation.tile_block_sums(rm2, mask2), layout)
+    base_cpu, base_mem, delta_cpu, delta_mem = _demand_tables(
+        rec_t_start, rec_cpu, rec_mem, rec_done,
+        b_cpu, b_mem, b_wend, b_self, now, mode=mode,
+    )
+    return (rc2, rm2, cc2, cm2, tot_cpu, tot_mem,
+            base_cpu, base_mem, delta_cpu, delta_mem)
+
+
+def _demand_tables(rec_t_start, rec_cpu, rec_mem, rec_done,
+                   b_cpu, b_mem, b_wend, b_self, now, *, mode):
+    """Hoisted window-demand terms, shared by both precompute entries.
+
+    Traced inside ``_burst_precompute`` (re-pad path) and
+    ``_state_dispatch`` (device-resident path) alike, so the two paths
+    cannot drift.
+    """
+    num_slots = rec_t_start.shape[0]
+    num_rows = b_cpu.shape[0]
     if mode != "aras":
         # FCFS never reads the demand terms; stream width-1 placeholders
         # instead of dense [B, B] zero tables.
         zeros_b = jnp.zeros((num_rows,), jnp.float32)
         zeros_bb = jnp.zeros((num_rows, 1), jnp.float32)
-        return (rc2, rm2, cc2, cm2, tot_cpu, tot_mem,
-                zeros_b, zeros_b, zeros_bb, zeros_bb)
+        return zeros_b, zeros_b, zeros_bb, zeros_bb
     # Alg. 1 lines 4-13, hoisted: in-window demand of every row against
     # the record table at its *pre-burst* start times.
     slot_ids = jnp.arange(num_slots, dtype=jnp.int32)
@@ -150,8 +184,171 @@ def _burst_precompute(
     dw = w_now.astype(jnp.float32) - w_pre.astype(jnp.float32)
     delta_cpu = g_cpu[None, :] * dw
     delta_mem = g_mem[None, :] * dw
-    return (rc2, rm2, cc2, cm2, tot_cpu, tot_mem,
-            base_cpu, base_mem, delta_cpu, delta_mem)
+    return base_cpu, base_mem, delta_cpu, delta_mem
+
+
+# Slot order of the packed staging arrays used by the device-resident
+# fast path.  On small bursts the staging cost is dominated by the fixed
+# per-transfer dispatch overhead, not bytes, so the eight row arrays
+# travel as one [8, B] float32 transfer (ints and bools ride along as
+# exact float32: slot ids stay below 2**24, flags are 0/1) and the four
+# record columns as one [4, T] — two host→device copies per dispatch
+# instead of twelve.
+_ROW_CPU, _ROW_MEM, _ROW_MIN_CPU, _ROW_MIN_MEM, _ROW_WEND, _ROW_SELF, \
+    _ROW_ATTEMPT, _ROW_PENDING = range(8)
+_REC_T_START, _REC_CPU, _REC_MEM, _REC_DONE = range(4)
+
+
+def _fill_packed(rows: np.ndarray, recs: np.ndarray,
+                 batch: TaskBatch, window: TaskWindow) -> None:
+    """Fill preallocated ``[8, B]`` / ``[4, T]`` staging views in place."""
+    n = batch.size
+    rows[_ROW_CPU, :n] = batch.cpu
+    rows[_ROW_MEM, :n] = batch.mem
+    rows[_ROW_MIN_CPU, :n] = batch.min_cpu
+    rows[_ROW_MIN_MEM, :n] = batch.min_mem
+    rows[_ROW_WEND, :n] = batch.window_end
+    rows[_ROW_SELF] = -1.0  # pad rows exclude no record slot
+    rows[_ROW_SELF, :n] = batch.self_slot
+    rows[_ROW_ATTEMPT, :n] = 1.0
+    rows[_ROW_PENDING, :n] = batch.pending
+    nrec = window.t_start.shape[0]
+    recs[_REC_T_START, :nrec] = window.t_start
+    recs[_REC_CPU, :nrec] = window.cpu
+    recs[_REC_MEM, :nrec] = window.mem
+    recs[_REC_DONE] = 1.0  # padding records are done: numerically inert
+    recs[_REC_DONE, :nrec] = window.done
+
+
+def _packed_row_inputs(batch: TaskBatch, window: TaskWindow, now: float):
+    """``_row_inputs`` packed into two transfers, for the hot stream path."""
+    rows = np.zeros((8, _pow2(batch.size)), np.float32)
+    recs = np.zeros((4, _pow2(window.t_start.shape[0])), np.float32)
+    _fill_packed(rows, recs, batch, window)
+    return jnp.asarray(rows), jnp.asarray(recs), jnp.float32(now)
+
+
+def _decide_packed(rc2, rm2, cc2, cm2, bsum_c, bsum_m, rows, recs, now,
+                   *, alpha, beta, policy, mode, backend, layout):
+    """Traceable device-resident decision over packed staging arrays.
+
+    ``_burst_precompute`` minus the tiles, fused with the sequential
+    core: the residual/capacity tiles already live on device
+    (``repro.cluster.device_state``), the carried totals come from the
+    incrementally-maintained block sums via the same fixed-order reduce
+    the re-pad path uses, and the hoisted demand tables feed straight
+    into ``alloc_scan`` without re-crossing a dispatch boundary.
+    """
+    b_cpu, b_mem = rows[_ROW_CPU], rows[_ROW_MEM]
+    b_min_cpu, b_min_mem = rows[_ROW_MIN_CPU], rows[_ROW_MIN_MEM]
+    b_wend = rows[_ROW_WEND]
+    b_self = rows[_ROW_SELF].astype(jnp.int32)
+    b_attempt = rows[_ROW_ATTEMPT] != 0
+    b_pending = rows[_ROW_PENDING] != 0
+    rec_done = recs[_REC_DONE] != 0
+    tot_cpu = federation.totals_from_block_sums(bsum_c, layout)
+    tot_mem = federation.totals_from_block_sums(bsum_m, layout)
+    base_cpu, base_mem, delta_cpu, delta_mem = _demand_tables(
+        recs[_REC_T_START], recs[_REC_CPU], recs[_REC_MEM], rec_done,
+        b_cpu, b_mem, b_wend, b_self, now, mode=mode,
+    )
+    return alloc_scan(
+        rc2, rm2, cc2, cm2, tot_cpu, tot_mem,
+        b_cpu, b_mem, b_min_cpu, b_min_mem, base_cpu, base_mem,
+        delta_cpu, delta_mem, b_self, b_attempt, b_pending,
+        alpha=alpha, beta=beta, policy=policy, mode=mode, backend=backend,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha", "beta", "policy", "mode", "backend", "layout"),
+)
+def _state_dispatch(
+    rc2, rm2, cc2, cm2,  # device-resident tiles (DeviceResidualState)
+    bsum_c, bsum_m,  # [nb] f32 incrementally-maintained block sums
+    rows,  # [8, B] f32 packed burst rows (_ROW_* slots)
+    recs,  # [4, T] f32 packed record table (_REC_* slots)
+    now,  # scalar f32
+    *,
+    alpha, beta, policy, mode, backend,
+    layout: FederatedLayout | None = None,
+):
+    """The device-resident decision as **one** jitted dispatch.
+
+    Nothing O(nodes) moves, and the host pays a single call's fixed
+    overhead per burst (see :func:`_decide_packed`).
+    """
+    return _decide_packed(
+        rc2, rm2, cc2, cm2, bsum_c, bsum_m, rows, recs, now,
+        alpha=alpha, beta=beta, policy=policy, mode=mode, backend=backend,
+        layout=layout,
+    )
+
+
+def _pack_state_step(batch: TaskBatch, window: TaskWindow, now: float,
+                     seg: np.ndarray):
+    """Stage one maintain-and-decide step as a single flat f32 buffer.
+
+    Layout: the dirty-set update segment (``pack_update_segment``), the
+    ``[8, B]`` packed rows, the ``[4, T]`` packed record table, then the
+    scalar ``now`` — one host→device copy for the whole step.
+    """
+    n_rows = _pow2(batch.size)
+    n_rec = _pow2(window.t_start.shape[0])
+    u = seg.shape[0]
+    buf = np.zeros((u + 8 * n_rows + 4 * n_rec + 1,), np.float32)
+    buf[:u] = seg
+    rows = buf[u: u + 8 * n_rows].reshape(8, n_rows)
+    recs = buf[u + 8 * n_rows: u + 8 * n_rows + 4 * n_rec].reshape(4, n_rec)
+    _fill_packed(rows, recs, batch, window)
+    buf[-1] = now
+    return jnp.asarray(buf), n_rows, n_rec
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_idx", "n_blk", "n_rows", "n_rec",
+                     "alpha", "beta", "policy", "mode", "backend", "layout"),
+    # The caller hands over the pre-update tiles/block sums for good
+    # (PendingBurst.state replaces them), so XLA scatters in place
+    # instead of copying the whole residual tile table per step.
+    donate_argnums=(0, 1, 4, 5),
+)
+def _state_step(
+    rc2, rm2, cc2, cm2, bsum_c, bsum_m, mask2,  # DeviceResidualState
+    buf,  # flat f32 staging buffer (_pack_state_step)
+    *,
+    n_idx, n_blk, n_rows, n_rec,
+    alpha, beta, policy, mode, backend,
+    layout: FederatedLayout | None = None,
+):
+    """Maintain **and** decide in one fused jitted dispatch.
+
+    The streaming hot path: scatter the dirty-node deltas into the
+    device-resident tiles (``repro.cluster.device_state.apply_packed``),
+    re-derive the dirty block sums, then run the fused decision against
+    the updated state — one host→device copy, one dispatch, per burst.
+    Returns the updated ``(rc2, rm2, bsum_c, bsum_m)`` carry (device
+    arrays the next step chains on without syncing) plus the decision
+    outputs.  The residual tiles and block sums are **donated**: the
+    input state is consumed (its buffers updated in place) and only the
+    returned state is valid afterwards.  Ops are identical to
+    ``apply_updates`` followed by ``_state_dispatch``, so decisions stay
+    bit-for-bit with the re-pad path
+    (``tests/test_incremental_state.py``).
+    """
+    u = 3 * n_idx + n_blk
+    rc2, rm2, bsum_c, bsum_m = device_state.apply_packed(
+        rc2, rm2, bsum_c, bsum_m, mask2, buf[:u], n_idx, n_blk)
+    rows = buf[u: u + 8 * n_rows].reshape(8, n_rows)
+    recs = buf[u + 8 * n_rows: u + 8 * n_rows + 4 * n_rec].reshape(4, n_rec)
+    outs = _decide_packed(
+        rc2, rm2, cc2, cm2, bsum_c, bsum_m, rows, recs, buf[-1],
+        alpha=alpha, beta=beta, policy=policy, mode=mode, backend=backend,
+        layout=layout,
+    )
+    return (rc2, rm2, bsum_c, bsum_m), outs
 
 
 _core_dispatch = jax.jit(
@@ -200,26 +397,16 @@ def _pad_1d(arr: np.ndarray, size: int, fill) -> np.ndarray:
     return out
 
 
-def _device_inputs(
-    batch: TaskBatch,
-    residual_cpu,
-    residual_mem,
-    window: TaskWindow,
-    now: float,
-    cap_cpu,
-    cap_mem,
-):
-    """Pad to shape buckets and stage the burst on device."""
+def _row_inputs(batch: TaskBatch, window: TaskWindow, now: float):
+    """Pad the burst rows + record table to shape buckets and stage them.
+
+    The O(burst)-sized half of ``_device_inputs`` — all the
+    device-resident dispatch path ever stages per burst (the O(nodes)
+    residual/capacity arrays stay on device across dispatches).
+    """
     n = batch.size
     nb = _pow2(n)
     nt = _pow2(window.t_start.shape[0])
-    res_c = jnp.asarray(residual_cpu, jnp.float32)
-    res_m = jnp.asarray(residual_mem, jnp.float32)
-    # Capacity defaults to the current residuals when the caller has no
-    # capacity view (legacy snapshot-less paths); only ``balanced``
-    # scoring reads it.
-    cap_c = res_c if cap_cpu is None else jnp.asarray(cap_cpu, jnp.float32)
-    cap_m = res_m if cap_mem is None else jnp.asarray(cap_mem, jnp.float32)
     rows = dict(
         b_cpu=jnp.asarray(_pad_1d(batch.cpu, nb, 0.0)),
         b_mem=jnp.asarray(_pad_1d(batch.mem, nb, 0.0)),
@@ -240,10 +427,70 @@ def _device_inputs(
         # Padding records are complete zero-demand rows: numerically inert.
         rec_done=jnp.asarray(_pad_1d(np.asarray(window.done, bool), nt, True)),
     )
-    return res_c, res_m, cap_c, cap_m, rows, recs, jnp.float32(now)
+    return rows, recs, jnp.float32(now)
 
 
-def _dispatch_burst(
+def _device_inputs(
+    batch: TaskBatch,
+    residual_cpu,
+    residual_mem,
+    window: TaskWindow,
+    now: float,
+    cap_cpu,
+    cap_mem,
+):
+    """Pad to shape buckets and stage the burst on device."""
+    res_c = jnp.asarray(residual_cpu, jnp.float32)
+    res_m = jnp.asarray(residual_mem, jnp.float32)
+    # Capacity defaults to the current residuals when the caller has no
+    # capacity view (legacy snapshot-less paths); only ``balanced``
+    # scoring reads it.
+    cap_c = res_c if cap_cpu is None else jnp.asarray(cap_cpu, jnp.float32)
+    cap_m = res_m if cap_mem is None else jnp.asarray(cap_mem, jnp.float32)
+    rows, recs, now32 = _row_inputs(batch, window, now)
+    return res_c, res_m, cap_c, cap_m, rows, recs, now32
+
+
+@dataclasses.dataclass
+class PendingBurst:
+    """A fused dispatch issued but not yet synced back to the host.
+
+    JAX dispatch is asynchronous: once ``_core_dispatch`` returns, the
+    device is computing while the host is free — so the engine can fold
+    queued events (and flush dirty-tile updates into the *next* state)
+    before paying the one blocking ``wait()`` sync of the burst.  The
+    split is what makes the double-buffered overlap of the streaming
+    engine possible; ``wait()`` is exactly the sync the one-shot path
+    always did, so decisions are unaffected.
+    """
+
+    outs: tuple | None  # device arrays; None = empty burst
+    n: int
+    layout: FederatedLayout | None
+    # Post-update device state when the dispatch also folded dirty-node
+    # deltas (the fused maintain-and-decide step): valid immediately —
+    # device arrays chain asynchronously — and never synced by wait().
+    state: "DeviceResidualState | None" = None
+
+    def wait(self) -> BatchAllocation:
+        """Block on the device results and map nodes back to global ids."""
+        if self.outs is None:
+            return BatchAllocation.empty()
+        # The one host↔device sync of the whole burst.
+        cpu, mem, node, feasible, attempted, scenario = \
+            jax.device_get(self.outs)
+        n = self.n
+        return BatchAllocation(
+            cpu=cpu[:n],
+            mem=mem[:n],
+            node=federation.global_nodes(node[:n], self.layout),
+            feasible=feasible[:n],
+            attempted=attempted[:n],
+            scenario=scenario[:n],
+        )
+
+
+def _issue_burst(
     batch: TaskBatch,
     residual_cpu,
     residual_mem,
@@ -259,18 +506,18 @@ def _dispatch_burst(
     cap_mem=None,
     layout: FederatedLayout | None = None,
     mesh=None,
-) -> BatchAllocation:
-    """Precompute → sequential core → sync back **once**.
+) -> PendingBurst:
+    """Stage → precompute → sequential core; returns without syncing.
 
     ``layout`` runs the burst on the federated multi-cluster tile layout
     (``repro.cluster.federation``); ``mesh`` additionally lays the tiles
     out across a ``clusters`` device mesh via ``jax.sharding``.  Node
-    indices are mapped back to global node ids before the result is
-    returned, so callers never see the padded federated index space.
+    indices are mapped back to global node ids at ``wait()``, so callers
+    never see the padded federated index space.
     """
     n = batch.size
     if n == 0:
-        return BatchAllocation.empty()
+        return PendingBurst(None, 0, layout)
     res_c, res_m, cap_c, cap_m, rows, recs, now32 = _device_inputs(
         batch, residual_cpu, residual_mem, window, now, cap_cpu, cap_mem
     )
@@ -298,16 +545,73 @@ def _dispatch_burst(
         alpha=alpha, beta=beta, policy=policy, mode=mode,
         backend=concrete_backend,
     )
-    # The one host↔device sync of the whole burst.
-    cpu, mem, node, feasible, attempted, scenario = jax.device_get(outs)
-    return BatchAllocation(
-        cpu=cpu[:n],
-        mem=mem[:n],
-        node=federation.global_nodes(node[:n], layout),
-        feasible=feasible[:n],
-        attempted=attempted[:n],
-        scenario=scenario[:n],
+    return PendingBurst(outs, n, layout)
+
+
+def _issue_state_burst(
+    batch: TaskBatch,
+    state,
+    window: TaskWindow,
+    now: float,
+    *,
+    alpha: float,
+    beta: float,
+    policy: str,
+    mode: str,
+    backend: str,
+    updates=None,
+) -> PendingBurst:
+    """Issue one fused dispatch against device-resident allocator state.
+
+    The O(nodes) staging of ``_issue_burst`` disappears: tiles and block
+    sums come straight from the :class:`DeviceResidualState` the engine
+    maintains by dirty-tile scatter updates; only the O(burst) rows and
+    the record table cross to the device, and precompute + sequential
+    core run as one fused jit call.  With ``updates`` (a
+    ``(nodes, res_cpu, res_mem)`` dirty set, as drained from
+    ``ClusterSim.drain_dirty``) the scatter maintenance fuses into the
+    same dispatch — one flat staging buffer, one call — and the
+    returned burst carries the post-update state (``PendingBurst.
+    state``); the input state is **consumed** (its residual buffers are
+    donated to the in-place scatter) and must not be used again.  Tile
+    contents equal to what the re-pad path would build give
+    bitwise-identical decisions (``tests/test_incremental_state.py``).
+    """
+    n = batch.size
+    if n == 0:
+        if updates is not None:
+            state = state.apply_updates(*updates)
+        return PendingBurst(None, 0, state.layout, state=state)
+    if updates is None:
+        rows, recs, now32 = _packed_row_inputs(batch, window, now)
+        outs = _state_dispatch(
+            state.rc2, state.rm2, state.cc2, state.cm2,
+            state.bsum_c, state.bsum_m, rows, recs, now32,
+            alpha=alpha, beta=beta, policy=policy, mode=mode,
+            backend=resolve_backend(backend), layout=state.layout,
+        )
+        return PendingBurst(outs, n, state.layout, state=state)
+    seg, n_idx, n_blk = device_state.pack_update_segment(
+        updates[0], updates[1], updates[2],
+        state.layout, int(state.rc2.shape[0]),
     )
+    buf, n_rows, n_rec = _pack_state_step(batch, window, now, seg)
+    (rc2, rm2, bsum_c, bsum_m), outs = _state_step(
+        state.rc2, state.rm2, state.cc2, state.cm2,
+        state.bsum_c, state.bsum_m, state.mask2, buf,
+        n_idx=n_idx, n_blk=n_blk, n_rows=n_rows, n_rec=n_rec,
+        alpha=alpha, beta=beta, policy=policy, mode=mode,
+        backend=resolve_backend(backend), layout=state.layout,
+    )
+    new_state = dataclasses.replace(
+        state, rc2=rc2, rm2=rm2, bsum_c=bsum_c, bsum_m=bsum_m)
+    return PendingBurst(outs, n, state.layout, state=new_state)
+
+
+def _dispatch_burst(*args, **kwargs) -> BatchAllocation:
+    """Precompute → sequential core → sync back **once** (the one-shot
+    form of ``_issue_burst``)."""
+    return _issue_burst(*args, **kwargs).wait()
 
 
 class BurstReplay:
@@ -437,6 +741,40 @@ class AdaptiveAllocator:
             layout=self.layout, mesh=self._mesh(),
         )
 
+    def create_state(self, residual_cpu, residual_mem, cap_cpu, cap_mem
+                     ) -> DeviceResidualState:
+        """Stage the cluster state on device once, for the incremental
+        dispatch path (``allocate_batch_async``)."""
+        return DeviceResidualState.create(
+            residual_cpu, residual_mem, cap_cpu, cap_mem,
+            self.layout, RES_PAD,
+        )
+
+    def allocate_batch_async(
+        self,
+        batch: TaskBatch,
+        window: TaskWindow,
+        now: float,
+        *,
+        state: DeviceResidualState,
+        updates=None,
+    ) -> PendingBurst:
+        """Issue one fused dispatch against device-resident state.
+
+        Returns a :class:`PendingBurst`; the caller overlaps host work
+        with the in-flight dispatch and syncs via ``wait()``.  Requires
+        the ``device_state`` capability path: ``state`` plus the pending
+        ``updates`` dirty set (``(nodes, res_cpu, res_mem)``, folded
+        into the same dispatch; the post-update state comes back on
+        ``PendingBurst.state``) must mirror the residuals
+        ``allocate_batch`` would have been handed.
+        """
+        return _issue_state_burst(
+            batch, state, window, now,
+            alpha=self.alpha, beta=self.beta, policy=self.placement,
+            mode=self.mode, backend=self.backend, updates=updates,
+        )
+
     def begin_replay(
         self,
         batch: TaskBatch,
@@ -508,6 +846,30 @@ class FCFSAllocator:
             layout=self.layout, mesh=self._mesh(),
         )
 
+    def create_state(self, residual_cpu, residual_mem, cap_cpu, cap_mem
+                     ) -> DeviceResidualState:
+        """See ``AdaptiveAllocator.create_state``."""
+        return DeviceResidualState.create(
+            residual_cpu, residual_mem, cap_cpu, cap_mem,
+            self.layout, RES_PAD,
+        )
+
+    def allocate_batch_async(
+        self,
+        batch: TaskBatch,
+        window: TaskWindow,
+        now: float,
+        *,
+        state: DeviceResidualState,
+        updates=None,
+    ) -> PendingBurst:
+        """See ``AdaptiveAllocator.allocate_batch_async``."""
+        return _issue_state_burst(
+            batch, state, window, now,
+            alpha=0.0, beta=0.0, policy=self.placement, mode=self.mode,
+            backend=self.backend, updates=updates,
+        )
+
     def begin_replay(
         self,
         batch: TaskBatch,
@@ -548,7 +910,7 @@ class FCFSAllocator:
 @ALLOCATORS.register(
     "aras",
     capabilities=("adaptive_scaling", "federation_aware",
-                  "lifecycle_window"),
+                  "lifecycle_window", "device_state"),
     doc="ARAS (Alg. 1): lifecycle-window demand + Alg. 3 adaptive "
         "scaling")
 def _build_aras(**kwargs) -> AdaptiveAllocator:
@@ -558,7 +920,7 @@ def _build_aras(**kwargs) -> AdaptiveAllocator:
 @ALLOCATORS.register(
     "fcfs",
     aliases=("baseline",),
-    capabilities=("federation_aware",),
+    capabilities=("federation_aware", "device_state"),
     doc="§6.1.6 baseline: first-come-first-serve full-request allocation")
 def _build_fcfs(**kwargs) -> FCFSAllocator:
     # FCFS has no scaling knobs: accept-and-drop alpha/beta so callers

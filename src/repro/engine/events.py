@@ -27,8 +27,13 @@ This module extracts it into a small, testable subsystem:
   legacy drain.
 
 The fold is otherwise *contiguous*: a capacity-changing event (e.g. a
-``COMPLETE`` inside the window) stops the merge, because it must be
-applied before any later allocation decision.
+``COMPLETE`` inside the window) stops the merge once the burst holds an
+undecided request, because it must be applied before any later
+allocation decision.  While the burst is still *empty* the engine opts
+in to folding through strictly-later ``COMPLETE``/``DELETE`` events
+(``fold_capacity_free``) — freed capacity cannot change a decision that
+does not exist yet, and short-task streams stop fragmenting into tiny
+dispatches on their own completions.
 """
 from __future__ import annotations
 
@@ -82,8 +87,8 @@ class EventQueue:
     def peek(self) -> Optional[Event]:
         return self._heap[0] if self._heap else None
 
-    def pop_mergeable(self, head_t: float, deadline: float
-                      ) -> Optional[Event]:
+    def pop_mergeable(self, head_t: float, deadline: float,
+                      fold_capacity_free: bool = False) -> Optional[Event]:
         """Pop the head iff it can fold into the burst drained at
         ``head_t`` with fold deadline ``deadline`` (= ``head_t +
         batch_window``).
@@ -95,17 +100,33 @@ class EventQueue:
         the burst.  The strict inequality keeps a same-timestamp INJECT
         out of the fold, exactly as the legacy same-timestamp drain
         ordered it (and makes clause (b) unreachable at
-        ``batch_window=0``).  Anything else — a capacity-changing event
-        inside the window, or any event beyond the deadline — returns
-        ``None`` and stays queued.
+        ``batch_window=0``).
+
+        ``fold_capacity_free=True`` adds clause (c): a strictly-later
+        ``COMPLETE`` or ``DELETE`` within the deadline folds too.  The
+        engine passes it only while the drained burst holds *no* undecided
+        request, so the freed capacity cannot change an in-flight
+        decision — it keeps short-task streams from fragmenting every
+        window on their own completions.  ``OOM`` never folds: it mutates
+        a pod's outcome (self-healing) and anchors its own drain.  Like
+        clause (b), the strict inequality makes it unreachable at
+        ``batch_window=0``.
+
+        Anything else — a capacity-changing event the caller must apply
+        first, or any event beyond the deadline — returns ``None`` and
+        stays queued.
         """
         head = self.peek()
         if head is None or head.t > deadline:
             return None
-        if head.kind not in ALLOCATABLE and not (
-                head.kind is EventKind.INJECT and head.t > head_t):
-            return None
-        return heapq.heappop(self._heap)
+        if head.kind in ALLOCATABLE:
+            return heapq.heappop(self._heap)
+        foldable_later = (EventKind.INJECT, EventKind.COMPLETE,
+                          EventKind.DELETE) if fold_capacity_free \
+            else (EventKind.INJECT,)
+        if head.kind in foldable_later and head.t > head_t:
+            return heapq.heappop(self._heap)
+        return None
 
     def __len__(self) -> int:
         return len(self._heap)

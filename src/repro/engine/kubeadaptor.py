@@ -49,7 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -76,8 +76,8 @@ from repro.workflows.spec import WorkflowSpec
 
 # The engine configuration is the composed, typed form from the
 # Scenario API (repro.api.config): frozen ClusterConfig /
-# AllocatorConfig / TimingConfig composed into EngineConfig, with the
-# old flat kwargs shimmed (DeprecationWarning) for one release.
+# AllocatorConfig / TimingConfig composed into EngineConfig (flat
+# constructor kwargs completed their deprecation cycle and are gone).
 # Re-exported here so `from repro.engine import EngineConfig` keeps
 # working across the redesign.
 __all__ = [
@@ -175,12 +175,31 @@ class KubeAdaptor:
         if entry.supports("adaptive_scaling"):
             kwargs.update(alpha=alloc_cfg.alpha, beta=alloc_cfg.beta)
         self.allocator = entry.factory(**kwargs)
+        # Device-resident incremental dispatch: fused bursts decide
+        # against tiles that persist on device, maintained by dirty-node
+        # scatter updates instead of per-burst O(nodes) re-pads.  Gated
+        # on the allocator capability, batched mode (the replay path is
+        # *defined* as rebuilding the carry from host caches), the
+        # config knob, and the absence of a device mesh (the sharded
+        # layout re-places tiles per dispatch).
+        self._use_device_state = (
+            alloc_cfg.batch_allocation
+            and alloc_cfg.incremental_state
+            and entry.supports("device_state")
+            and self.allocator._mesh() is None
+        )
+        self._state = None  # DeviceResidualState, created on first burst
+        # Streaming overlap hook: called between issuing a fused dispatch
+        # and syncing its results, while the device is busy
+        # (repro.serving.stream sets it to pump arrival ingestion).
+        self.ingest_hook: Optional[Callable[[], None]] = None
         self.store = StateStore()
         self.runs: Dict[str, WorkflowRun] = {}
         self.metrics = EngineMetrics()
         self.queue = EventQueue()
         self._pending: Deque[Tuple[str, TaskSpec]] = deque()
         self._now = 0.0
+        self._t_first: Optional[float] = None
         self._last_sample = (0.0, 0.0, 0.0)  # (t, cpu_util, mem_util)
         self._util_integral = np.zeros(2)
 
@@ -230,6 +249,27 @@ class KubeAdaptor:
             pending=[origin == "pending" for _, _, origin in entries],
         )
 
+    def _flush_state(self):
+        """The device state plus the dirty set pending against it.
+
+        First call stages the whole cluster once and turns on the
+        simulator's dirty-node journal (no updates pending); afterwards
+        it drains the nodes touched since the previous burst, with
+        values read from the same authoritative float32 caches
+        ``residual_view`` exposes.  The allocator folds the returned
+        dirty set into the decision dispatch itself (one fused
+        maintain-and-decide call), so the tiles always equal what the
+        re-pad path would rebuild.
+        """
+        if self._state is None:
+            res_cpu, res_mem = self.cluster.residual_view()
+            cap_cpu, cap_mem = self.cluster.capacity_view()
+            self._state = self.allocator.create_state(
+                res_cpu, res_mem, cap_cpu, cap_mem)
+            self.cluster.track_dirty()
+            return self._state, None
+        return self._state, self.cluster.drain_dirty()
+
     def _decide(self, entries: List[Tuple[str, TaskSpec, str]]
                 ) -> BatchAllocation:
         """One fused MAPE-K cycle for a burst of task requests.
@@ -238,7 +278,23 @@ class KubeAdaptor:
         Analyse/Plan run inside the allocator's single dispatch; Execute
         happens in ``_allocate_group``/``_bind`` from the one synced
         result.
+
+        On the device-state path the dispatch is issued asynchronously
+        against the incrementally-maintained tiles; while the device
+        computes, the streaming ingest hook (if any) runs — the
+        double-buffered overlap — and only then does the engine block on
+        the results.
         """
+        if self._use_device_state:
+            state, updates = self._flush_state()
+            pending = self.allocator.allocate_batch_async(
+                self._batch_of(entries), self.store.window(), self._now,
+                state=state, updates=updates,
+            )
+            self._state = pending.state
+            if self.ingest_hook is not None:
+                self.ingest_hook()
+            return pending.wait()
         res_cpu, res_mem = self.cluster.residual_view()
         cap_cpu, cap_mem = self.cluster.capacity_view()
         return self.allocator.allocate_batch(
@@ -345,13 +401,19 @@ class KubeAdaptor:
         burst.  The clock advances with each folded event, so the fused
         decision is made at the *last* arrival's timestamp, never before
         a request exists; a capacity-changing event inside the window
-        (completion, deletion, OOM) stops the fold, because it must
-        apply first.  With ``batch_window=0.0`` the deadline is the
-        head's own timestamp and only same-timestamp allocatable events
-        fold — the seed's lockstep drain, bit for bit.  Both engine
-        modes share this drain; they differ only in how the group is
-        decided (one fused dispatch vs the row-at-a-time replay — see
-        ``_decision_rows``).
+        (completion, deletion, OOM) stops the fold once the burst holds
+        an undecided request, because it must apply first.  While the
+        burst is still *empty* (no entries and no retried pending queue)
+        strictly-later ``COMPLETE``/``DELETE`` events fold through — the
+        freed capacity cannot change a decision that does not exist yet,
+        so short-task streams stop fragmenting every window on their own
+        completions (``OOM`` always anchors its own drain: it mutates a
+        pod's outcome and schedules self-healing).  With
+        ``batch_window=0.0`` the deadline is the head's own timestamp
+        and only same-timestamp allocatable events fold — the seed's
+        lockstep drain, bit for bit.  Both engine modes share this
+        drain; they differ only in how the group is decided (one fused
+        dispatch vs the row-at-a-time replay — see ``_decision_rows``).
         """
         deadline = first.t + self.cfg.timing.batch_window
         include_pending = False
@@ -361,6 +423,11 @@ class KubeAdaptor:
             self._now = event.t
             if event.kind is EventKind.INJECT:
                 self._inject(*event.payload)
+            elif event.kind is EventKind.COMPLETE:
+                # Folded only while the burst is idle (see below).
+                self._complete(*event.payload)
+            elif event.kind is EventKind.DELETE:
+                self.cluster.delete(*event.payload)
             elif event.kind is EventKind.RETRY:
                 include_pending = True
             elif event.kind is EventKind.READY:
@@ -377,7 +444,9 @@ class KubeAdaptor:
                     (self._now, f"{wf_id}/{task.task_id}")
                 )
                 entries.append((wf_id, task, "heal"))
-            event = self.queue.pop_mergeable(first.t, deadline)
+            idle = not entries and not (include_pending and self._pending)
+            event = self.queue.pop_mergeable(first.t, deadline,
+                                             fold_capacity_free=idle)
         self._allocate_group(entries, include_pending)
 
     # --------------------------------------------------------- completion
@@ -440,6 +509,8 @@ class KubeAdaptor:
         if event.t > self.cfg.timing.max_time:
             raise RuntimeError("simulation exceeded max_time — deadlock?")
         self._now = event.t
+        if self._t_first is None:
+            self._t_first = event.t
         if event.kind is EventKind.INJECT:
             self._inject(*event.payload)
         elif event.kind is EventKind.COMPLETE:
@@ -452,27 +523,32 @@ class KubeAdaptor:
             self._drain_group(event)
         return event
 
-    def run(self) -> EngineMetrics:
-        t_first: Optional[float] = None
-        while self.queue:
-            event = self.step()
-            if t_first is None:
-                t_first = event.t
-            if self.cfg.invariant_checks:
-                self.cluster.check_invariants()
+    def finalize(self) -> EngineMetrics:
+        """Deadlock check + final metrics — the epilogue of ``run()``.
 
+        Public so harnesses that drive ``step()`` themselves (the
+        streaming engine, benchmarks) finish a drained run identically
+        to ``run()``.
+        """
         incomplete = [w for w, r in self.runs.items() if not r.complete]
         if incomplete or self._pending:
             raise RuntimeError(
                 f"deadlocked workflows: {incomplete}, pending={len(self._pending)}"
             )
         self._sample_usage()
-        total = self._now - (t_first or 0.0)
+        total = self._now - (self._t_first or 0.0)
         self.metrics.makespan = total
         if total > 0:
             self.metrics.avg_cpu_usage = float(self._util_integral[0] / total)
             self.metrics.avg_mem_usage = float(self._util_integral[1] / total)
         return self.metrics
+
+    def run(self) -> EngineMetrics:
+        while self.queue:
+            self.step()
+            if self.cfg.invariant_checks:
+                self.cluster.check_invariants()
+        return self.finalize()
 
 
 def run_experiment(

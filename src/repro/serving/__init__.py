@@ -1,3 +1,5 @@
 from repro.serving.engine import ServeConfig, ServeEngine
+from repro.serving.stream import StreamEngine, StreamStats, serve_stream
 
-__all__ = ["ServeConfig", "ServeEngine"]
+__all__ = ["ServeConfig", "ServeEngine", "StreamEngine", "StreamStats",
+           "serve_stream"]

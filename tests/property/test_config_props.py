@@ -2,13 +2,11 @@
 
 Under hypothesis-drawn field values: (a) ``EngineConfig`` and
 ``Scenario`` survive a JSON round-trip as *equal* dataclasses (the
-serialized form is the spec, so nothing may be lost or coerced); (b) the
-deprecated flat-kwarg shim builds a config identical to routing the same
-values through the composed sub-configs, for every subset of flat keys;
-(c) ``evolve()`` agrees with the shim, warning-free.
+serialized form is the spec, so nothing may be lost or coerced); (b)
+``evolve()`` routes any subset of flat names into the right sub-configs
+(the constructor shim is retired; ``evolve()`` is the flat spelling).
 """
 import dataclasses
-import warnings
 
 import pytest
 
@@ -46,6 +44,7 @@ _alloc = st.builds(
                                "balanced"]),
     backend=st.sampled_from(["auto", "scan", "pallas"]),
     batch_allocation=st.booleans(),
+    incremental_state=st.booleans(),
 )
 _timing = st.builds(
     TimingConfig,
@@ -89,25 +88,19 @@ def test_scenario_json_round_trip(sc):
 
 
 @given(cfg=_engine, keys=st.sets(st.sampled_from(sorted(_FLAT_MAP))))
-def test_flat_shim_equals_composed_for_any_key_subset(cfg, keys):
-    """Any subset of flat kwargs == the same values routed composed."""
+def test_evolve_routes_any_flat_key_subset(cfg, keys):
+    """Any subset of flat evolve() names == the same values routed
+    through the composed sub-configs."""
     flat = {}
     for key in keys:
         part, field = _FLAT_MAP[key]
         flat[key] = getattr(getattr(cfg, part), field)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        shimmed = EngineConfig(invariant_checks=cfg.invariant_checks,
-                               **flat)
     parts = {"cluster": ClusterConfig(), "alloc": AllocatorConfig(),
              "timing": TimingConfig()}
     for key, value in flat.items():
         part, field = _FLAT_MAP[key]
         parts[part] = dataclasses.replace(parts[part], **{field: value})
     composed = EngineConfig(invariant_checks=cfg.invariant_checks, **parts)
-    assert shimmed == composed
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        evolved = EngineConfig(
-            invariant_checks=cfg.invariant_checks).evolve(**flat)
+    evolved = EngineConfig(
+        invariant_checks=cfg.invariant_checks).evolve(**flat)
     assert evolved == composed

@@ -86,6 +86,38 @@ def test_pop_mergeable_inject_requires_strictly_later_time():
     assert q.pop_mergeable(0.5, 1.0).kind is EventKind.INJECT
 
 
+@pytest.mark.parametrize("kind", [EventKind.COMPLETE, EventKind.DELETE])
+def test_pop_mergeable_fold_capacity_free_folds_later_events(kind):
+    """Clause (c): with ``fold_capacity_free`` a strictly-later COMPLETE
+    or DELETE within the deadline folds through — the engine passes the
+    flag only while the drained burst holds no undecided request."""
+    q = EventQueue()
+    q.push(1.0, kind)
+    assert q.pop_mergeable(0.0, 10.0) is None          # default still blocks
+    assert q.pop_mergeable(0.0, 0.9, fold_capacity_free=True) is None
+    got = q.pop_mergeable(0.0, 1.0, fold_capacity_free=True)  # inclusive
+    assert got is not None and got.kind is kind
+    assert not q
+
+
+def test_pop_mergeable_fold_capacity_free_same_time_blocks():
+    # Strictly later only: unreachable at batch_window=0, where deadline
+    # == head_t, preserving the seed's lockstep drain bit for bit.
+    q = EventQueue()
+    q.push(1.0, EventKind.COMPLETE)
+    assert q.pop_mergeable(1.0, 1.0, fold_capacity_free=True) is None
+    assert len(q) == 1
+
+
+def test_pop_mergeable_oom_never_folds():
+    # OOM mutates a pod's outcome (self-healing) and must anchor its own
+    # drain, flag or no flag.
+    q = EventQueue()
+    q.push(1.0, EventKind.OOM)
+    assert q.pop_mergeable(0.0, 10.0, fold_capacity_free=True) is None
+    assert len(q) == 1
+
+
 # ------------------------------------------------- windowed drain, engine
 
 def _single_task_wf(i: int, duration: float = 60.0) -> WorkflowSpec:
@@ -156,6 +188,34 @@ def test_window_larger_than_burst_gap_folds_across_bursts():
     m0 = _run_jittered(19.5, times)
     assert m0.num_dispatches == 2  # window short of the gap: two bursts
     assert [t for t, *_ in m0.alloc_trace] == [0.0, 0.0, 20.0]
+
+
+def test_window_folds_idle_completions_through_the_drain():
+    """Short-task streams no longer fragment on their own completions:
+    a RETRY-anchored drain with no undecided rows folds strictly-later
+    COMPLETE/DELETE events through (clause (c) of ``pop_mergeable``),
+    settling the run in fewer event-loop steps while the decisions,
+    dispatch count, and allocation trace stay identical to lockstep."""
+    def drive(window):
+        eng = KubeAdaptor(FAST.evolve(batch_window=window))
+        eng.submit(_single_task_wf(0, duration=2.0), 0.0)
+        eng.submit(_single_task_wf(1, duration=2.5), 0.0)
+        # Arrives between the first completion's RETRY anchor (t=3) and
+        # that anchor's deadline (t=5), but beyond the t=0 burst's own
+        # window — only the folded-through drain catches it in one step.
+        eng.submit(_single_task_wf(2, duration=2.0), 4.2)
+        steps = 0
+        while eng.queue:
+            eng.step()
+            steps += 1
+        return steps, eng.finalize()
+
+    steps_w, m_w = drive(2.0)
+    steps_0, m_0 = drive(0.0)
+    assert m_w.num_allocations == m_0.num_allocations == 3
+    assert m_w.num_dispatches == m_0.num_dispatches == 2
+    assert m_w.alloc_trace == m_0.alloc_trace
+    assert steps_w < steps_0
 
 
 def test_window_invariant_to_submission_order():

@@ -7,8 +7,8 @@ Four contracts:
   unknown names fail with actionable messages;
 * **typed configs** — ``Scenario``/``EngineConfig`` JSON-round-trip to
   equal dataclasses, ``validate()`` raises actionable errors, and the
-  deprecated flat-kwarg shim builds a config *identical* to the
-  composed form (``DeprecationWarning`` included);
+  retired flat constructor kwargs stay gone (``TypeError``; ``evolve()``
+  is the supported flat spelling);
 * **runner** — the paper grid (aras/fcfs × constant/linear/pyramid)
   runs end-to-end through ``run_scenario()``, and a single-kind
   scenario reproduces the legacy ``run_experiment`` bit for bit;
@@ -16,7 +16,6 @@ Four contracts:
 """
 import dataclasses
 import json
-import warnings
 
 import pytest
 
@@ -227,6 +226,19 @@ def test_unknown_flat_kwarg_is_a_type_error():
         EngineConfig(num_noodles=3)
 
 
+def test_flat_constructor_kwargs_are_retired():
+    """The deprecated flat-kwarg shim completed its cycle: flat names
+    are constructor TypeErrors now; ``evolve()`` keeps the flat
+    spelling."""
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        EngineConfig(num_nodes=64)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        EngineConfig(allocator="fcfs", alpha=0.5)
+    evolved = EngineConfig().evolve(num_nodes=64, allocator="fcfs")
+    assert evolved.cluster.num_nodes == 64
+    assert evolved.alloc.algorithm == "fcfs"
+
+
 def test_from_dict_rejects_unknown_keys():
     """A typo'd or legacy-flat serialized config must not silently
     deserialize to defaults."""
@@ -236,51 +248,6 @@ def test_from_dict_rejects_unknown_keys():
         EngineConfig.from_dict({"aloc": {"algorithm": "fcfs"}})
     with pytest.raises(TypeError):  # unknown key inside a sub-config
         EngineConfig.from_dict({"cluster": {"num_noodles": 3}})
-
-
-# -------------------------------------------------- flat-kwarg shim parity
-
-def test_flat_kwargs_deprecated_but_identical():
-    flat_kwargs = dict(
-        num_nodes=9, node_cpu=7000.0, node_mem=14000.0, num_clusters=3,
-        cluster_sharding="off", allocator="fcfs", alpha=0.5, beta=10.0,
-        placement="first_fit", alloc_backend="scan",
-        batch_allocation=False, pod_startup_delay=1.0, cleanup_delay=2.0,
-        restart_delay=3.0, oom_fraction=0.5, duration_multiplier=1.0,
-        max_time=1e6,
-    )
-    with pytest.deprecated_call():
-        flat = EngineConfig(**flat_kwargs)
-    composed = EngineConfig(
-        cluster=ClusterConfig(num_nodes=9, node_cpu=7000.0,
-                              node_mem=14000.0, num_clusters=3,
-                              sharding="off"),
-        alloc=AllocatorConfig(algorithm="fcfs", alpha=0.5, beta=10.0,
-                              placement="first_fit", backend="scan",
-                              batch_allocation=False),
-        timing=TimingConfig(pod_startup_delay=1.0, cleanup_delay=2.0,
-                            restart_delay=3.0, oom_fraction=0.5,
-                            duration_multiplier=1.0, max_time=1e6),
-    )
-    assert flat == composed
-    # evolve() is the warning-free spelling of the same flat updates.
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        evolved = EngineConfig().evolve(**flat_kwargs)
-    assert evolved == composed
-
-
-def test_flat_and_composed_runs_are_identical():
-    pattern = arrival.constant(y=2, bursts=2, interval=30.0)
-    with pytest.deprecated_call():
-        flat = EngineConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
-                            duration_multiplier=1.0)
-    m_flat = run_experiment("montage", pattern, "aras", seed=0, config=flat)
-    m_comp = run_experiment("montage", pattern, "aras", seed=0, config=FAST)
-    assert m_flat.makespan == m_comp.makespan
-    assert m_flat.alloc_trace == m_comp.alloc_trace
-    assert m_flat.workflow_durations == m_comp.workflow_durations
-    assert m_flat.usage_series == m_comp.usage_series
 
 
 # ------------------------------------------------------ the paper grid
