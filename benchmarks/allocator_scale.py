@@ -32,6 +32,7 @@ Usage::
     PYTHONPATH=src python benchmarks/allocator_scale.py --clusters 4   # federated
     PYTHONPATH=src python benchmarks/allocator_scale.py --placement all
     PYTHONPATH=src python benchmarks/allocator_scale.py --stream --nodes 100000
+    PYTHONPATH=src python benchmarks/allocator_scale.py --stream --chaos --nodes 64
     PYTHONPATH=src python benchmarks/allocator_scale.py --json BENCH_allocator.json
 
 The engine benchmark takes a ``--clusters`` axis (federated multi-cluster
@@ -59,6 +60,7 @@ from repro.api import (
     AllocatorConfig,
     ClusterConfig,
     EngineConfig,
+    FaultConfig,
     TimingConfig,
 )
 from repro.core import EvalInputs, evaluate_batch, node_residuals
@@ -230,19 +232,26 @@ def _stream_arrivals(count: int, mean_gap: float = 1.0):
 
 def bench_stream(num_nodes: int, arrivals: int, repeats: int = 3,
                  window: float = 0.0, clusters: int = 1,
-                 incremental: bool = True):
+                 incremental: bool = True, chaos: bool = False):
     """Serve a Poisson stream; returns the best repeat's StreamStats.
 
     ``incremental`` toggles the device-resident state against the full
     re-pad baseline — same decisions bit-for-bit, different per-dispatch
-    cost.
+    cost.  ``chaos`` crashes an eighth of the cluster (seed-chosen, min
+    2 nodes) at sim-time 10 s — mid-stream — so the measured path
+    includes cordon, drain and HEAL re-admission traffic.
     """
+    faults = FaultConfig(
+        schedule="node_crash",
+        params={"at": 10.0, "nodes": max(2, num_nodes // 8)},
+        seed=0) if chaos else FaultConfig()
     cfg = EngineConfig(
         cluster=ClusterConfig(num_nodes=num_nodes, node_cpu=8000.0,
                               node_mem=16000.0, num_clusters=clusters),
         alloc=AllocatorConfig(incremental_state=incremental),
         timing=TimingConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
                             duration_multiplier=1.0, batch_window=window),
+        faults=faults,
         invariant_checks=False,
     )
     best = None
@@ -255,15 +264,16 @@ def bench_stream(num_nodes: int, arrivals: int, repeats: int = 3,
 
 
 def report_stream(num_nodes: int, arrivals: int, repeats: int,
-                  window: float = 0.0, clusters: int = 1) -> dict:
+                  window: float = 0.0, clusters: int = 1,
+                  chaos: bool = False) -> dict:
     inc = bench_stream(num_nodes, arrivals, repeats, window=window,
-                       clusters=clusters, incremental=True)
+                       clusters=clusters, incremental=True, chaos=chaos)
     rep = bench_stream(num_nodes, arrivals, repeats, window=window,
-                       clusters=clusters, incremental=False)
+                       clusters=clusters, incremental=False, chaos=chaos)
     improvement = (rep.p50_latency_s / inc.p50_latency_s
                    if inc.p50_latency_s > 0 else float("inf"))
     print(
-        f"stream_scale_{num_nodes}n_{clusters}c,"
+        f"stream_scale_{num_nodes}n_{clusters}c{'_chaos' if chaos else ''},"
         f"incremental={1e6*inc.p50_latency_s:.0f}us_p50/"
         f"{1e6*inc.p99_latency_s:.0f}us_p99/"
         f"{inc.decisions_per_sec:.0f}dps,"
@@ -284,15 +294,20 @@ def report_stream(num_nodes: int, arrivals: int, repeats: int,
             "overlapped_ingests": stats.overlapped_ingests,
         }
 
-    return {
+    out = {
         "nodes": num_nodes,
         "arrivals": arrivals,
         "clusters": clusters,
         "window": window,
+        "chaos": chaos,
         "incremental": flat(inc),
         "repad": flat(rep),
         "p50_improvement": round(improvement, 2),
     }
+    if chaos:
+        out["displaced"] = inc.metrics.num_displaced
+        out["recovered"] = inc.metrics.num_recovered
+    return out
 
 
 def report_core(num_nodes: int, burst: int) -> dict:
@@ -343,6 +358,11 @@ def main():
                          "re-pad baseline (decisions/sec + p50/p99 latency)")
     ap.add_argument("--stream-arrivals", type=int, default=64,
                     help="arrivals in the served stream (default 64)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="crash an eighth of the cluster at sim-time 10 s "
+                         "mid-stream (repro.chaos node_crash): the "
+                         "measured path then includes cordon, drain and "
+                         "HEAL re-admission traffic")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-core", action="store_true")
@@ -411,7 +431,8 @@ def main():
             results["stream"].append(
                 report_stream(n, args.stream_arrivals, args.repeats,
                               window=args.window,
-                              clusters=args.clusters or 1))
+                              clusters=args.clusters or 1,
+                              chaos=args.chaos))
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(results, fh, indent=2)

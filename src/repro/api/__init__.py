@@ -3,12 +3,12 @@
 Three layers (see the README "Scenario API" section):
 
 * **registries** (:mod:`repro.api.registry`) — pluggable allocators,
-  placement policies, sequential-core backends and arrival patterns,
-  registered by decorator with capability flags;
+  placement policies, sequential-core backends, arrival patterns and
+  fault schedules, registered by decorator with capability flags;
 * **typed configs** (:mod:`repro.api.config`) — frozen
-  ``ClusterConfig`` / ``AllocatorConfig`` / ``TimingConfig`` composed
-  into ``EngineConfig`` (JSON-round-trippable, ``validate()``, flat
-  kwargs deprecated but shimmed);
+  ``ClusterConfig`` / ``AllocatorConfig`` / ``TimingConfig`` /
+  ``FaultConfig`` composed into ``EngineConfig``
+  (JSON-round-trippable, ``validate()``);
 * **scenarios** (:mod:`repro.api.scenario`) — declarative ``Scenario``
   specs, the ``run_scenario()`` runner and its structured ``RunResult``.
 """
@@ -16,12 +16,14 @@ from repro.api.config import (
     AllocatorConfig,
     ClusterConfig,
     EngineConfig,
+    FaultConfig,
     TimingConfig,
 )
 from repro.api.registry import (
     ALLOCATORS,
     ARRIVALS,
     BACKENDS,
+    FAULTS,
     PLACEMENTS,
     Registry,
     RegistryEntry,
@@ -38,12 +40,14 @@ __all__ = [
     "ALLOCATORS",
     "ARRIVALS",
     "BACKENDS",
+    "FAULTS",
     "PLACEMENTS",
     "Registry",
     "RegistryEntry",
     "AllocatorConfig",
     "ClusterConfig",
     "EngineConfig",
+    "FaultConfig",
     "TimingConfig",
     "RunResult",
     "Scenario",

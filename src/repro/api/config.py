@@ -11,8 +11,11 @@ splits it along the paper's own seams:
   the burst-vs-per-task allocation unit.
 * :class:`TimingConfig` — the discrete-event delays of Figs. 1/9:
   startup, cleanup, restart, OOM fraction, stress duration multiplier.
+* :class:`FaultConfig` — injected chaos (a seed-deterministic
+  ``FAULTS`` schedule) plus the graceful-degradation knobs: bounded
+  retry budget, exponential backoff, per-workflow deadline.
 
-``EngineConfig`` composes the three (plus the ``invariant_checks`` debug
+``EngineConfig`` composes the four (plus the ``invariant_checks`` debug
 flag), JSON-round-trips via ``to_dict``/``from_dict``, and fails early
 with actionable messages via :meth:`EngineConfig.validate`.
 
@@ -26,9 +29,10 @@ names (``cfg.evolve(allocator="fcfs", num_nodes=64)``).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import json
 import warnings
-from typing import Any, Dict
+from typing import Any, Dict, Mapping, Optional
 
 from repro.core.types import DEFAULT_ALPHA, DEFAULT_BETA
 
@@ -186,6 +190,69 @@ class TimingConfig:
         return self
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Fault injection + graceful degradation (repro.chaos).
+
+    ``schedule`` names a :data:`repro.api.registry.FAULTS` entry whose
+    seed-deterministic event list the engine pushes at construction;
+    ``params`` are its keyword arguments (the engine supplies
+    ``num_nodes``, and ``seed`` defaults to this config's ``seed`` unless
+    ``params`` pins one explicitly).  The remaining knobs replace the
+    seed engine's infinite-retry semantics with bounded degradation:
+
+    * ``max_retries`` — a task may fail admission at most this many
+      times; the next failure terminates its whole workflow as a
+      ``FAILED`` outcome (``None`` = unbounded, the legacy behaviour;
+      ``0`` = first failure kills).  Bounded retry alone cannot
+      terminate a run that never completes anything — the first failure
+      parks the task in the pending queue and with no completions no
+      RETRY ever fires — so pair it with ``workflow_timeout`` as the
+      backstop terminator.
+    * ``backoff_base``/``backoff_factor`` — after a failed retry round
+      the pending queue is gated for ``base * factor**round`` seconds
+      (a scheduled RETRY reopens it); 0.0 disables backoff.
+    * ``workflow_timeout`` — each workflow gets a deadline this many
+      seconds after injection; an incomplete workflow at its deadline
+      terminates ``FAILED`` (``None`` = no deadline).
+    """
+
+    schedule: str = "none"  # repro.api.registry.FAULTS name
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    seed: int = 0
+    max_retries: Optional[int] = None
+    backoff_base: float = 0.0
+    backoff_factor: float = 2.0
+    workflow_timeout: Optional[float] = None
+
+    def validate(self) -> "FaultConfig":
+        from repro.api.registry import FAULTS
+
+        entry = FAULTS.get(self.schedule)  # raises with registered names
+        merged = {"seed": self.seed, **dict(self.params)}
+        try:
+            inspect.signature(entry.factory).bind(num_nodes=1, **merged)
+        except TypeError as exc:
+            raise _err(
+                f"FaultConfig.params do not fit fault schedule "
+                f"{self.schedule!r}: {exc} (signature is "
+                f"{inspect.signature(entry.factory)})"
+            ) from None
+        if self.max_retries is not None and self.max_retries < 0:
+            raise _err(f"FaultConfig.max_retries must be None (unbounded) "
+                       f"or >= 0, got {self.max_retries}")
+        if self.backoff_base < 0:
+            raise _err(f"FaultConfig.backoff_base is a delay in seconds, "
+                       f"need >= 0, got {self.backoff_base}")
+        if self.backoff_factor < 1.0:
+            raise _err(f"FaultConfig.backoff_factor must be >= 1, "
+                       f"got {self.backoff_factor}")
+        if self.workflow_timeout is not None and self.workflow_timeout <= 0:
+            raise _err(f"FaultConfig.workflow_timeout must be None or > 0, "
+                       f"got {self.workflow_timeout}")
+        return self
+
+
 # Flat evolve() name -> (sub-config field of EngineConfig, field).
 _FLAT_MAP: Dict[str, tuple] = {
     "num_nodes": ("cluster", "num_nodes"),
@@ -207,30 +274,40 @@ _FLAT_MAP: Dict[str, tuple] = {
     "duration_multiplier": ("timing", "duration_multiplier"),
     "max_time": ("timing", "max_time"),
     "batch_window": ("timing", "batch_window"),
+    "fault_schedule": ("faults", "schedule"),
+    "fault_params": ("faults", "params"),
+    "fault_seed": ("faults", "seed"),
+    "max_retries": ("faults", "max_retries"),
+    "backoff_base": ("faults", "backoff_base"),
+    "backoff_factor": ("faults", "backoff_factor"),
+    "workflow_timeout": ("faults", "workflow_timeout"),
 }
 
 _SUB_TYPES = {"cluster": ClusterConfig, "alloc": AllocatorConfig,
-              "timing": TimingConfig}
+              "timing": TimingConfig, "faults": FaultConfig}
 
 
 def _merge_flat(cluster: ClusterConfig, alloc: AllocatorConfig,
-                timing: TimingConfig, flat: Dict[str, Any]):
+                timing: TimingConfig, faults: FaultConfig,
+                flat: Dict[str, Any]):
     """Route flat evolve() names into the sub-configs they live in."""
     unknown = sorted(set(flat) - set(_FLAT_MAP))
     if unknown:
         raise TypeError(
             f"EngineConfig.evolve got unexpected keyword argument(s) "
-            f"{unknown}; composed fields are cluster/alloc/timing/"
+            f"{unknown}; composed fields are cluster/alloc/timing/faults/"
             f"invariant_checks, flat field names are {sorted(_FLAT_MAP)}"
         )
-    parts = {"cluster": cluster, "alloc": alloc, "timing": timing}
+    parts = {"cluster": cluster, "alloc": alloc, "timing": timing,
+             "faults": faults}
     updates: Dict[str, Dict[str, Any]] = {}
     for key, value in flat.items():
         part, field = _FLAT_MAP[key]
         updates.setdefault(part, {})[field] = value
     for part, kwargs in updates.items():
         parts[part] = dataclasses.replace(parts[part], **kwargs)
-    return parts["cluster"], parts["alloc"], parts["timing"]
+    return (parts["cluster"], parts["alloc"], parts["timing"],
+            parts["faults"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -251,6 +328,7 @@ class EngineConfig:
     cluster: ClusterConfig = ClusterConfig()
     alloc: AllocatorConfig = AllocatorConfig()
     timing: TimingConfig = TimingConfig()
+    faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
     # Per-event O(nodes+pods) accounting cross-checks; disable for
     # large-scale benchmarking.
     invariant_checks: bool = True
@@ -268,10 +346,12 @@ class EngineConfig:
         cluster = updates.pop("cluster", self.cluster)
         alloc = updates.pop("alloc", self.alloc)
         timing = updates.pop("timing", self.timing)
+        faults = updates.pop("faults", self.faults)
         checks = updates.pop("invariant_checks", self.invariant_checks)
-        cluster, alloc, timing = _merge_flat(cluster, alloc, timing, updates)
+        cluster, alloc, timing, faults = _merge_flat(
+            cluster, alloc, timing, faults, updates)
         return EngineConfig(cluster=cluster, alloc=alloc, timing=timing,
-                            invariant_checks=checks)
+                            faults=faults, invariant_checks=checks)
 
     # ---------------------------------------------------------- validation
     def validate(self) -> "EngineConfig":
@@ -279,14 +359,18 @@ class EngineConfig:
         self.cluster.validate()
         self.alloc.validate()
         self.timing.validate()
+        self.faults.validate()
         return self
 
     # --------------------------------------------------------- (de)serial
     def to_dict(self) -> Dict[str, Any]:
+        faults = dataclasses.asdict(self.faults)
+        faults["params"] = dict(self.faults.params)
         return {
             "cluster": dataclasses.asdict(self.cluster),
             "alloc": dataclasses.asdict(self.alloc),
             "timing": dataclasses.asdict(self.timing),
+            "faults": faults,
             "invariant_checks": self.invariant_checks,
         }
 
@@ -296,8 +380,8 @@ class EngineConfig:
         if unknown:
             raise ValueError(
                 f"unknown EngineConfig field(s) {unknown} "
-                f"(want cluster/alloc/timing/invariant_checks; flat "
-                f"fields do not appear in the serialized form)"
+                f"(want cluster/alloc/timing/faults/invariant_checks; "
+                f"flat fields do not appear in the serialized form)"
             )
         kwargs: Dict[str, Any] = {}
         for part, sub_cls in _SUB_TYPES.items():

@@ -160,7 +160,7 @@ class Registry:
         return f"Registry({self.kind!r}, entries={list(self._entries)})"
 
 
-# The four engine registries.  Built-ins register at import time of the
+# The five engine registries.  Built-ins register at import time of the
 # modules that implement them (lazily triggered on first lookup).
 ALLOCATORS = Registry(
     "allocator", bootstrap_modules=("repro.core.allocator",))
@@ -170,3 +170,5 @@ BACKENDS = Registry(
     "alloc backend", bootstrap_modules=("repro.kernels.alloc_scan.ops",))
 ARRIVALS = Registry(
     "arrival pattern", bootstrap_modules=("repro.workflows.arrival",))
+FAULTS = Registry(
+    "fault schedule", bootstrap_modules=("repro.chaos",))

@@ -52,6 +52,15 @@ class Scenario:
     # Optional task-shape overrides handed to every non-virtual task
     # builder (repro.workflows.spec.make_task kwargs).
     task_kwargs: Optional[Mapping[str, Any]] = None
+    # Serving mode: run the arrival schedule through the streaming loop
+    # (repro.serving.StreamEngine — just-in-time pump, optional
+    # admission control) instead of submitting everything up front.
+    # stream_params are StreamEngine keyword arguments (prefetch_chunk,
+    # max_pending, overload_policy); the serving telemetry lands on the
+    # RunResult (decisions/sec, p50/p99 latency, shed/deferred counts).
+    stream: bool = False
+    stream_params: Mapping[str, Any] = dataclasses.field(
+        default_factory=dict)
 
     # --------------------------------------------------------------- seeds
     def _arrival_args(self) -> Dict[str, Any]:
@@ -89,6 +98,16 @@ class Scenario:
                 f"arrival_params {dict(self.arrival_params)} do not fit "
                 f"arrival pattern {self.arrival!r}: {exc}"
             ) from exc
+        unknown_stream = sorted(
+            set(self.stream_params)
+            - {"prefetch_chunk", "max_pending", "overload_policy"})
+        if unknown_stream:
+            raise ValueError(
+                f"unknown stream_params {unknown_stream} (StreamEngine "
+                f"accepts prefetch_chunk/max_pending/overload_policy)")
+        if self.stream_params and not self.stream:
+            raise ValueError("stream_params given but stream=False — set "
+                             "stream=True to run the serving loop")
         self.engine.validate()
         return self
 
@@ -111,6 +130,8 @@ class Scenario:
             "seed": self.seed,
             "task_kwargs": dict(self.task_kwargs)
             if self.task_kwargs is not None else None,
+            "stream": self.stream,
+            "stream_params": dict(self.stream_params),
         }
 
     @classmethod
@@ -198,6 +219,23 @@ class RunResult:
     mean_burst_width: float
     sla_violation_rate: float
     wall_time_s: float
+    # Fault injection + graceful degradation (EngineConfig.faults):
+    # displaced = running pods lost to NODE_DOWN, recovered = displaced
+    # tasks that re-bound via HEAL, failed = retry-budget/deadline
+    # terminations (FAILED outcomes; failed workflows do not count in
+    # num_workflows, which stays completed-only).
+    num_displaced: int = 0
+    num_recovered: int = 0
+    num_failed_tasks: int = 0
+    num_failed_workflows: int = 0
+    mean_time_to_recovery: float = 0.0
+    # Serving telemetry (Scenario.stream=True): StreamStats wired in so
+    # grid() sweeps can gate on serving latency, not just makespan.
+    decisions_per_sec: float = 0.0
+    p50_latency_us: float = 0.0
+    p99_latency_us: float = 0.0
+    shed_workflows: int = 0
+    deferred_workflows: int = 0
     metrics: Any = dataclasses.field(repr=False, compare=False, default=None)
 
     def to_dict(self) -> Dict[str, Any]:
@@ -230,16 +268,30 @@ def run_scenario(scenario: Scenario) -> RunResult:
     engine = KubeAdaptor(scenario.engine)
     rng = np.random.default_rng(scenario.seed)
     task_kwargs = dict(scenario.task_kwargs) if scenario.task_kwargs else None
+    arrivals = []
     idx = 0
     for t, count in scenario.pattern():
         for _ in range(count):
             kind = scenario.workflows[idx % len(scenario.workflows)]
             spec = WORKFLOW_BUILDERS[kind](f"{kind}-{idx}", rng, task_kwargs)
-            engine.submit(spec, t)
+            arrivals.append((t, spec))
             idx += 1
-    t0 = time.perf_counter()
-    metrics = engine.run()
-    wall = time.perf_counter() - t0
+    stats = None
+    if scenario.stream:
+        from repro.serving.stream import StreamEngine
+
+        server = StreamEngine(engine, arrivals,
+                              **dict(scenario.stream_params))
+        t0 = time.perf_counter()
+        stats = server.serve()
+        wall = time.perf_counter() - t0
+        metrics = stats.metrics
+    else:
+        for t, spec in arrivals:
+            engine.submit(spec, t)
+        t0 = time.perf_counter()
+        metrics = engine.run()
+        wall = time.perf_counter() - t0
     decisions = max(metrics.num_allocations, 1)
     return RunResult(
         scenario=scenario,
@@ -257,6 +309,16 @@ def run_scenario(scenario: Scenario) -> RunResult:
         mean_burst_width=metrics.mean_burst_width,
         sla_violation_rate=metrics.sla_violation_rate,
         wall_time_s=wall,
+        num_displaced=metrics.num_displaced,
+        num_recovered=metrics.num_recovered,
+        num_failed_tasks=len(metrics.failed_tasks),
+        num_failed_workflows=len(metrics.failed_workflows),
+        mean_time_to_recovery=metrics.mean_time_to_recovery,
+        decisions_per_sec=stats.decisions_per_sec if stats else 0.0,
+        p50_latency_us=1e6 * stats.p50_latency_s if stats else 0.0,
+        p99_latency_us=1e6 * stats.p99_latency_s if stats else 0.0,
+        shed_workflows=stats.shed_workflows if stats else 0,
+        deferred_workflows=stats.deferred_workflows if stats else 0,
         metrics=metrics,
     )
 

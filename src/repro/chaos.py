@@ -1,0 +1,141 @@
+"""Seeded fault-injection schedules (chaos engineering for the engine).
+
+The paper's robustness story (§6.2.2, Fig. 9) covers a single failure
+mode — OOMKilled pods.  Real Kubernetes clusters lose whole nodes, flap,
+and suffer correlated memory storms; this module makes those failure
+modes *declarative and deterministic* so chaos runs are reproducible
+experiments, not flaky ones.
+
+A fault schedule is a builder registered in
+:data:`repro.api.registry.FAULTS` that returns a list of
+:class:`FaultEvent` — ``(t, EventKind, payload)`` triples the engine
+pushes onto its event queue at construction.  Builders receive the
+cluster size (``num_nodes``) and a ``seed`` from the engine (from
+``FaultConfig``), so the *same* config replays the *same* faults bit for
+bit — the chaos determinism suite in ``tests/test_chaos.py`` holds two
+runs of a seeded schedule to identical results.
+
+Built-in schedules:
+
+* ``node_crash`` — permanently crash ``nodes`` distinct (seed-chosen)
+  nodes at time ``at``.  Running pods on those nodes terminate
+  ``FAILED`` and re-enter admission through the engine's HEAL path.
+* ``node_flap`` — down/up pairs: the same seed-chosen nodes go offline
+  at ``at`` (+ ``period`` per repeat) and recover ``down_for`` seconds
+  later, exercising capacity loss *and* restoration through the
+  dirty-tile path into the device-resident allocator state.
+* ``oom_storm`` — at each firing, force-OOM the ``victims``
+  longest-running pods (lowest uid — deterministic without a host
+  registry scan), driving the Fig-9 self-healing path under correlated
+  memory pressure instead of a single mistuned quota.
+* ``none`` — the empty schedule (the ``FaultConfig`` default).
+
+Schedules compose into scenarios via
+:class:`repro.api.config.FaultConfig` (``EngineConfig.faults``), which
+also carries the graceful-degradation knobs: bounded retry budgets,
+exponential backoff and the per-workflow deadline.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Tuple
+
+import numpy as np
+
+from repro.api.registry import FAULTS
+from repro.engine.events import EventKind
+
+
+class FaultEvent(NamedTuple):
+    """One scheduled fault: pushed verbatim onto the engine's queue."""
+
+    t: float
+    kind: EventKind
+    payload: Tuple = ()
+
+
+def _pick_nodes(num_nodes: int, nodes: int, seed: int) -> List[int]:
+    """Seed-deterministic choice of distinct victim nodes (sorted)."""
+    if num_nodes < 1:
+        raise ValueError(f"fault schedule needs num_nodes >= 1, "
+                         f"got {num_nodes}")
+    if nodes < 1:
+        raise ValueError(f"fault schedule needs nodes >= 1, got {nodes}")
+    rng = np.random.default_rng(seed)
+    picks = rng.choice(num_nodes, size=min(nodes, num_nodes), replace=False)
+    return sorted(int(n) for n in picks)
+
+
+@FAULTS.register("none", doc="the empty fault schedule")
+def none(num_nodes: int = 0, seed: int = 0) -> List[FaultEvent]:
+    """No injected faults — the ``FaultConfig`` default."""
+    return []
+
+
+@FAULTS.register("node_crash", capabilities=("seeded",),
+                 doc="permanently crash seed-chosen nodes at time `at`")
+def node_crash(num_nodes: int, nodes: int = 1, at: float = 300.0,
+               seed: int = 0) -> List[FaultEvent]:
+    """Crash ``nodes`` distinct nodes at time ``at``; they never recover.
+
+    The node choice is drawn from ``default_rng(seed)``, so a scenario's
+    fault seed pins *which* nodes die, independently of the workload
+    seed.
+    """
+    if at < 0:
+        raise ValueError(f"node_crash at must be >= 0, got {at}")
+    return [FaultEvent(float(at), EventKind.NODE_DOWN, (n,))
+            for n in _pick_nodes(num_nodes, nodes, seed)]
+
+
+@FAULTS.register("node_flap", capabilities=("seeded",),
+                 doc="seed-chosen nodes go down at `at` and recover "
+                     "`down_for` seconds later, `repeats` times")
+def node_flap(num_nodes: int, nodes: int = 1, at: float = 300.0,
+              down_for: float = 120.0, repeats: int = 1,
+              period: float = 600.0, seed: int = 0) -> List[FaultEvent]:
+    """Down/up pairs for the same seed-chosen nodes.
+
+    Repeat ``r`` takes the nodes offline at ``at + r·period`` and brings
+    them back ``down_for`` seconds later — capacity leaves *and* rejoins
+    the allocator's view, riding the dirty-tile path both ways.
+    """
+    if at < 0 or down_for <= 0 or period <= 0:
+        raise ValueError(
+            f"node_flap needs at >= 0, down_for > 0 and period > 0, got "
+            f"at={at}, down_for={down_for}, period={period}")
+    if repeats < 1:
+        raise ValueError(f"node_flap repeats must be >= 1, got {repeats}")
+    if down_for >= period and repeats > 1:
+        raise ValueError(
+            f"node_flap down_for ({down_for}) must be shorter than the "
+            f"repeat period ({period}) or flaps overlap")
+    picks = _pick_nodes(num_nodes, nodes, seed)
+    events: List[FaultEvent] = []
+    for r in range(repeats):
+        t = at + r * period
+        for n in picks:
+            events.append(FaultEvent(t, EventKind.NODE_DOWN, (n,)))
+            events.append(FaultEvent(t + down_for, EventKind.NODE_UP, (n,)))
+    return sorted(events, key=lambda e: (e.t, e.kind))
+
+
+@FAULTS.register("oom_storm", capabilities=("seeded",),
+                 doc="force-OOM the `victims` longest-running pods at "
+                     "each firing")
+def oom_storm(num_nodes: int, at: float = 300.0, victims: int = 2,
+              repeats: int = 1, period: float = 600.0,
+              seed: int = 0) -> List[FaultEvent]:
+    """Correlated memory pressure: at each firing the engine force-OOMs
+    the ``victims`` longest-running pods (chosen by lowest uid at fire
+    time — deterministic given the seeded simulation).  Each victim goes
+    through the ordinary §6.2.2 self-healing path: OOMKilled → delete →
+    re-allocate with the learned memory floor.
+    """
+    if at < 0 or period <= 0:
+        raise ValueError(f"oom_storm needs at >= 0 and period > 0, got "
+                         f"at={at}, period={period}")
+    if victims < 1 or repeats < 1:
+        raise ValueError(f"oom_storm needs victims >= 1 and repeats >= 1, "
+                         f"got victims={victims}, repeats={repeats}")
+    return [FaultEvent(at + r * period, EventKind.OOM_STORM, (victims,))
+            for r in range(repeats)]

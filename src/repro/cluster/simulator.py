@@ -106,6 +106,14 @@ class ClusterSim:
         # instead of re-staging all [m] residuals per dispatch.
         self._track_dirty = False
         self._dirty: List[int] = []
+        # Cordon/offline mask (fault injection): an offline node's float32
+        # residual mirrors are zeroed — the allocator sees no capacity —
+        # and its capacity leaves the O(1) utilization totals, while the
+        # float64 books stay untouched so recovery is an exact resync.
+        # The counter keeps the hot-path guard in bind() a no-op when no
+        # chaos is configured.
+        self._offline = np.zeros((num_nodes,), bool)
+        self._num_offline = 0
 
     # ------------------------------------------------------------- plumbing
     def _grow(self) -> None:
@@ -131,6 +139,12 @@ class ClusterSim:
              workflow_id: str = "") -> Pod:
         """Create a pod with the allocated quota on the chosen node."""
         i = alloc.node
+        if self._num_offline and self._offline[i]:
+            raise RuntimeError(
+                f"bind on offline node {i}: the allocator placed "
+                f"quota=({alloc.cpu}, {alloc.mem}) on a cordoned node "
+                f"whose residuals should read zero"
+            )
         if (self._used_cpu[i] + alloc.cpu
                 > self._alloc_cpu[i] + self._OVERCOMMIT_EPS
                 or self._used_mem[i] + alloc.mem
@@ -195,6 +209,66 @@ class ClusterSim:
         self._pod_cpu[pod.slot] = 0.0
         self._pod_mem[pod.slot] = 0.0
         self._free_slots.append(pod.slot)
+
+    # ------------------------------------------------------------ fault ops
+    def set_node_down(self, node: int, now: float):
+        """Take a node offline (injected fault / cordon).
+
+        Every Running pod on the node terminates ``FAILED`` (registry
+        insertion order — deterministic), then the node's float32
+        residual mirrors are zeroed and journaled dirty so the capacity
+        loss rides the same scatter path into device-resident allocator
+        state as any bind.  The float64 books are untouched — recovery
+        (:meth:`set_node_up`) is an exact resync, not a replay.
+
+        Returns the displaced pods (post-``finish``), or ``None`` if the
+        node was already offline (idempotent no-op).
+        """
+        if self._offline[node]:
+            return None
+        displaced = [pod for pod in self.pods.values()
+                     if pod.node == node and pod.phase is PodPhase.RUNNING]
+        # Finish first: each finish resyncs the residual mirror from the
+        # books, so the zeroing below must come after.
+        for pod in displaced:
+            self.finish(pod.uid, now, PodPhase.FAILED)
+        self._offline[node] = True
+        self._num_offline += 1
+        self._res_cpu32[node] = np.float32(0.0)
+        self._res_mem32[node] = np.float32(0.0)
+        if self._track_dirty:
+            self._dirty.append(node)
+        self._alloc_cpu_total -= float(self._alloc_cpu[node])
+        self._alloc_mem_total -= float(self._alloc_mem[node])
+        return displaced
+
+    def set_node_up(self, node: int) -> bool:
+        """Bring an offline node back (recovery half of a flap).
+
+        Resyncs the float32 residual mirrors from the float64 books
+        (nothing ran while offline, so that is the full allocatable
+        capacity), journals the node dirty, and restores its capacity to
+        the utilization totals.  Returns ``False`` if the node was not
+        offline (idempotent no-op).
+        """
+        if not self._offline[node]:
+            return False
+        self._offline[node] = False
+        self._num_offline -= 1
+        self._res_cpu32[node] = np.float32(
+            self._alloc_cpu[node] - self._used_cpu[node])
+        self._res_mem32[node] = np.float32(
+            self._alloc_mem[node] - self._used_mem[node])
+        if self._track_dirty:
+            self._dirty.append(node)
+        self._alloc_cpu_total += float(self._alloc_cpu[node])
+        self._alloc_mem_total += float(self._alloc_mem[node])
+        return True
+
+    @property
+    def offline_nodes(self):
+        """Sorted global ids of currently-offline nodes."""
+        return [int(n) for n in np.flatnonzero(self._offline)]
 
     # --------------------------------------------------------- dirty nodes
     def track_dirty(self, on: bool = True) -> None:
@@ -303,7 +377,11 @@ class ClusterSim:
 
         O(1): reads the incrementally-maintained cluster totals instead of
         re-summing the node arrays (this runs on every bind/finish).
+        Offline nodes' capacity is excluded; a fully-offline cluster
+        reports zero utilization rather than dividing by zero.
         """
+        if self._alloc_cpu_total <= 0.0 or self._alloc_mem_total <= 0.0:
+            return Resources(0.0, 0.0)
         return Resources(
             self._used_cpu_total / self._alloc_cpu_total,
             self._used_mem_total / self._alloc_mem_total,
@@ -325,13 +403,26 @@ class ClusterSim:
             (cpu, self._used_cpu)
         assert np.abs(mem - self._used_mem).max(initial=0.0) < 1e-3, \
             (mem, self._used_mem)
-        # the O(1) cluster totals must track the per-node books
+        # the O(1) cluster totals must track the per-node books; capacity
+        # totals count online nodes only
+        online = ~self._offline
         assert abs(self._used_cpu_total - self._used_cpu.sum()) < 1e-3
         assert abs(self._used_mem_total - self._used_mem.sum()) < 1e-3
+        assert abs(self._alloc_cpu_total - self._alloc_cpu[online].sum()) \
+            < 1e-3
+        assert abs(self._alloc_mem_total - self._alloc_mem[online].sum()) \
+            < 1e-3
+        # offline nodes hold no consuming pods and read zero residuals
+        if self._num_offline:
+            assert (self._used_cpu[self._offline] == 0.0).all()
+            assert (self._res_cpu32[self._offline] == 0.0).all()
+            assert (self._res_mem32[self._offline] == 0.0).all()
         # the float32 residual caches must track the float64 books
+        # (offline nodes are pinned to zero by construction, so the drift
+        # check covers online nodes only)
         for res32, alloc, used in (
             (self._res_cpu32, self._alloc_cpu, self._used_cpu),
             (self._res_mem32, self._alloc_mem, self._used_mem),
         ):
-            drift = np.abs(res32.astype(np.float64) - (alloc - used))
+            drift = np.abs(res32.astype(np.float64) - (alloc - used))[online]
             assert drift.max(initial=0.0) < 1.0, drift

@@ -3,6 +3,7 @@ from repro.engine.kubeadaptor import (
     ClusterConfig,
     EngineConfig,
     EngineMetrics,
+    FaultConfig,
     KubeAdaptor,
     TimingConfig,
     run_experiment,
@@ -14,6 +15,7 @@ __all__ = [
     "ClusterConfig",
     "EngineConfig",
     "EngineMetrics",
+    "FaultConfig",
     "KubeAdaptor",
     "TimingConfig",
     "run_experiment",

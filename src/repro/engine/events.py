@@ -44,15 +44,28 @@ from typing import List, NamedTuple, Optional, Tuple
 
 
 class EventKind(enum.IntEnum):
-    """Engine event taxonomy; the integer values define heap order."""
+    """Engine event taxonomy; the integer values define heap order.
 
-    COMPLETE = 0  # pod ran to completion
-    OOM = 1       # pod OOMKilled mid-run (§6.2.2)
-    DELETE = 2    # Task Container Cleaner removes a terminal pod
-    RETRY = 3     # re-attempt the pending queue
-    INJECT = 4    # Workflow Injection Module delivers a workflow
-    READY = 5     # a task's dependencies are satisfied
-    HEAL = 105    # self-healing re-allocation; sorts after same-time READY
+    The chaos kinds (``OOM_STORM``/``NODE_DOWN``/``NODE_UP``/
+    ``WF_DEADLINE``) sort between the pod-lifecycle events and the
+    allocatable requests: at equal timestamps an injected fault (and the
+    capacity it removes or restores) is applied *before* any same-time
+    retry or arrival decides against the cluster.  None of them ever
+    folds into a drained burst — like ``OOM`` they mutate pod/workflow
+    outcomes, so each anchors its own drain.
+    """
+
+    COMPLETE = 0   # pod ran to completion
+    OOM = 1        # pod OOMKilled mid-run (§6.2.2)
+    OOM_STORM = 2  # injected fault: force-OOM k running pods (repro.chaos)
+    DELETE = 3     # Task Container Cleaner removes a terminal pod
+    NODE_DOWN = 4  # injected fault: a node goes offline (capacity loss)
+    NODE_UP = 5    # injected fault: an offline node recovers
+    WF_DEADLINE = 6  # per-workflow deadline check -> FAILED outcome
+    RETRY = 7      # re-attempt the pending queue
+    INJECT = 8     # Workflow Injection Module delivers a workflow
+    READY = 9      # a task's dependencies are satisfied
+    HEAL = 105     # self-healing re-allocation; sorts after same-time READY
 
 
 # Allocatable task requests: the kinds the drain folds into one fused

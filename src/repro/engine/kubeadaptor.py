@@ -14,6 +14,21 @@ Fault-tolerance semantics follow §6.2.2: a pod whose memory quota is below
 its *runtime* requirement + β turns OOMKilled mid-run; the engine deletes
 it, re-allocates with the learned floor, and relaunches (self-healing).
 
+Injected chaos (``EngineConfig.faults``, schedules from ``repro.chaos``)
+extends that story beyond OOM: ``NODE_DOWN`` cordons a node (its running
+pods terminate ``FAILED`` and re-enter admission through the same HEAL
+path), ``NODE_UP`` restores it (scheduling a retry against the recovered
+capacity), and ``OOM_STORM`` force-OOMs the longest-running pods.  Pod
+events can therefore go *stale* — a queued COMPLETE/OOM whose pod was
+already killed by chaos or a workflow failure — so the handlers guard on
+the pod still being Running.  Degradation is bounded: an optional retry
+budget (``max_retries``) turns the next admission failure into a FAILED
+workflow outcome, exponential backoff (``backoff_base``/``factor``)
+gates the retry queue between failed rounds, and ``workflow_timeout``
+deadlines terminate stuck workflows — all surfaced on
+:class:`EngineMetrics` (displaced/recovered/failed counters and
+time-to-recovery).
+
 The allocation unit is the **arrival burst**: retry/ready/heal events
 within ``TimingConfig.batch_window`` seconds of the head event drain into
 a single ``allocate_batch`` dispatch (one fused MAPE-K cycle for the
@@ -57,6 +72,7 @@ from repro.api.config import (
     AllocatorConfig,
     ClusterConfig,
     EngineConfig,
+    FaultConfig,
     TimingConfig,
 )
 from repro.api.registry import ALLOCATORS
@@ -82,7 +98,8 @@ from repro.workflows.spec import WorkflowSpec
 # working across the redesign.
 __all__ = [
     "AllocatorConfig", "ClusterConfig", "EngineConfig", "EngineMetrics",
-    "KubeAdaptor", "TimingConfig", "WorkflowRun", "run_experiment",
+    "FaultConfig", "KubeAdaptor", "TimingConfig", "WorkflowRun",
+    "run_experiment",
 ]
 
 
@@ -129,11 +146,42 @@ class EngineMetrics:
     sla_violations: List[Tuple[str, float, float]] = dataclasses.field(
         default_factory=list  # (workflow, finished_at, deadline)
     )
+    # Fault-injection + graceful-degradation accounting (repro.chaos):
+    node_events: List[Tuple[float, int, str]] = dataclasses.field(
+        default_factory=list  # (t, node, "down"|"up")
+    )
+    displaced_tasks: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list  # (t, wf/task) running pods lost to NODE_DOWN
+    )
+    recovery_times: List[Tuple[str, float]] = dataclasses.field(
+        default_factory=list  # (wf/task, displaced -> re-bound seconds)
+    )
+    failed_tasks: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list  # (t, wf/task) retry budget exhausted
+    )
+    failed_workflows: List[Tuple[float, str, str]] = dataclasses.field(
+        default_factory=list  # (t, workflow, "retry_budget"|"deadline")
+    )
 
     @property
     def sla_violation_rate(self) -> float:
         n = len(self.workflow_durations)
         return len(self.sla_violations) / n if n else 0.0
+
+    @property
+    def num_displaced(self) -> int:
+        return len(self.displaced_tasks)
+
+    @property
+    def num_recovered(self) -> int:
+        """Displaced tasks that re-entered admission and re-bound."""
+        return len(self.recovery_times)
+
+    @property
+    def mean_time_to_recovery(self) -> float:
+        """Mean seconds from displacement to the recovering bind."""
+        return (float(np.mean([dt for _, dt in self.recovery_times]))
+                if self.recovery_times else 0.0)
 
     @property
     def avg_workflow_duration(self) -> float:
@@ -202,6 +250,32 @@ class KubeAdaptor:
         self._t_first: Optional[float] = None
         self._last_sample = (0.0, 0.0, 0.0)  # (t, cpu_util, mem_util)
         self._util_integral = np.zeros(2)
+        # Fault injection + graceful degradation (repro.chaos).  The
+        # bookkeeping dicts stay empty without a FaultConfig, so the hot
+        # path pays one falsy check per bind at most.
+        faults = config.faults
+        self._fault_cfg = faults
+        self._attempts: Dict[str, int] = {}  # wf/task -> failed admissions
+        self._displaced_at: Dict[str, float] = {}  # wf/task -> t displaced
+        self._failed_workflows: set = set()
+        self._retry_gate = 0.0  # retries before this time stay gated
+        self._backoff_round = 0
+        # Stale-event dropping (see _event_stale) only matters once
+        # something can kill pods or fail workflows; keep it off the
+        # no-fault hot path.
+        self._chaos_on = (faults.schedule != "none"
+                          or faults.max_retries is not None
+                          or faults.workflow_timeout is not None
+                          or faults.backoff_base > 0)
+        if faults.schedule != "none":
+            from repro.api.registry import FAULTS
+
+            entry = FAULTS.get(faults.schedule)
+            schedule = entry.factory(
+                num_nodes=cluster_cfg.num_nodes,
+                **{"seed": faults.seed, **dict(faults.params)})
+            for fault in schedule:
+                self._push(fault.t, fault.kind, fault.payload)
 
     # ----------------------------------------------------------- plumbing
     def _push(self, t: float, kind: EventKind, payload: tuple) -> None:
@@ -235,6 +309,9 @@ class KubeAdaptor:
             ))
         for tid in spec.roots():
             self._push(self._now, EventKind.READY, (spec.workflow_id, tid))
+        if self._fault_cfg.workflow_timeout is not None:
+            self._push(self._now + self._fault_cfg.workflow_timeout,
+                       EventKind.WF_DEADLINE, (spec.workflow_id,))
 
     # --------------------------------------------------- burst allocation
     def _batch_of(self, entries: List[Tuple[str, TaskSpec, str]]
@@ -334,6 +411,13 @@ class KubeAdaptor:
         key = f"{wf_id}/{task.task_id}"
         pod = self.cluster.bind(task, alloc, self._now, workflow_id=wf_id)
         self.store.mark_started(key, self._now)
+        if self._displaced_at:
+            t0 = self._displaced_at.pop(key, None)
+            if t0 is not None:  # a displaced task recovered (re-bound)
+                self.metrics.recovery_times.append((key, self._now - t0))
+        if self._attempts:
+            # A successful bind resets the task's retry budget.
+            self._attempts.pop(key, None)
         run = self.runs[wf_id]
         if run.first_start is None:
             run.first_start = self._now
@@ -354,9 +438,39 @@ class KubeAdaptor:
             self._push(t_done, EventKind.COMPLETE, (pod.uid, wf_id))
         self._sample_usage()
 
+    def _budget_exhausted(self, wf_id: str, task: TaskSpec) -> bool:
+        """Count one attempted admission failure against the retry budget.
+
+        Returns True once the task has failed more than ``max_retries``
+        times since its last successful bind — the caller then terminates
+        the whole workflow as a FAILED outcome.  With the default
+        unbounded budget this is a no-op returning False.
+        """
+        budget = self._fault_cfg.max_retries
+        if budget is None:
+            return False
+        key = f"{wf_id}/{task.task_id}"
+        n = self._attempts.get(key, 0) + 1
+        self._attempts[key] = n
+        if n <= budget:
+            return False
+        self.metrics.failed_tasks.append((self._now, key))
+        return True
+
     def _allocate_group(self, entries: List[Tuple[str, TaskSpec, str]],
                         include_pending: bool) -> None:
-        """Decide a drained burst and apply the results in admission order."""
+        """Decide a drained burst and apply the results in admission order.
+
+        Graceful degradation rides the result application: every
+        *attempted* failure counts against the task's retry budget (a
+        blown budget marks the workflow dying — terminated after the
+        pending queue is rebuilt, so the rebuild sees a consistent
+        deque), and a round that made no progress arms the exponential
+        backoff gate.  Which rows bind is untouched — decided rows of a
+        dying workflow still bind (batched and replay modes already
+        applied their in-scan debits identically) and are then killed by
+        ``_fail_workflow``, keeping the two modes bit-for-bit.
+        """
         if include_pending:
             entries = [(wf_id, task, "pending")
                        for wf_id, task in self._pending] + entries
@@ -367,25 +481,52 @@ class KubeAdaptor:
             1 if self.cfg.alloc.batch_allocation else len(entries))
         kept: Deque[Tuple[str, TaskSpec]] = deque()
         failed: List[Tuple[str, TaskSpec]] = []
+        dying: Dict[str, None] = {}  # insertion-ordered workflow set
+        bound_any = False
+        waited_any = False
         rows = self._decision_rows(entries)
         for (wf_id, task, origin), (feasible, attempted, alloc) in zip(
                 entries, rows):
             if feasible:
                 self._bind(wf_id, task, alloc)
+                bound_any = True
             elif origin == "pending":
                 # Skipped rows (head-of-line) were never attempted and do
                 # not count as waits, matching the sequential retry loop.
                 if attempted:
                     self.metrics.num_waits += 1
+                    waited_any = True
+                    if self._budget_exhausted(wf_id, task):
+                        dying[wf_id] = None
+                        continue
                 kept.append((wf_id, task))
             else:
                 self.metrics.num_waits += 1
+                waited_any = True
+                if self._budget_exhausted(wf_id, task):
+                    dying[wf_id] = None
+                    continue
                 failed.append((wf_id, task))
         if include_pending:
             kept.extend(failed)
             self._pending = kept
         else:
             self._pending.extend(failed)
+        for wf_id in dying:
+            if wf_id not in self._failed_workflows:
+                self._fail_workflow(wf_id, "retry_budget")
+        if bound_any:
+            self._backoff_round = 0
+            self._retry_gate = 0.0
+        elif waited_any and self._pending \
+                and self._fault_cfg.backoff_base > 0:
+            # No progress this round: park the pending queue and schedule
+            # the RETRY that reopens the gate — base * factor^round.
+            delay = self._fault_cfg.backoff_base * \
+                self._fault_cfg.backoff_factor ** self._backoff_round
+            self._backoff_round += 1
+            self._retry_gate = self._now + delay
+            self._push(self._retry_gate, EventKind.RETRY, ("backoff",))
 
     def _drain_group(self, first: Event) -> None:
         """Fold the head's allocatable-event window into one burst.
@@ -429,21 +570,28 @@ class KubeAdaptor:
             elif event.kind is EventKind.DELETE:
                 self.cluster.delete(*event.payload)
             elif event.kind is EventKind.RETRY:
-                include_pending = True
+                # Backoff gate: retries scheduled before the gate reopens
+                # leave the pending queue parked (the gate-time RETRY
+                # pushed by the failed round reopens it).
+                include_pending = self._now >= self._retry_gate
             elif event.kind is EventKind.READY:
                 wf_id, tid = event.payload
-                task = self.runs[wf_id].spec.tasks[tid]
-                if task.cpu == 0 and task.mem == 0:
-                    # Virtual entrance/exit: complete instantly, no pod.
-                    self._task_done(wf_id, tid)
+                if wf_id in self._failed_workflows:
+                    pass  # workflow already terminated FAILED
                 else:
-                    entries.append((wf_id, task, "ready"))
+                    task = self.runs[wf_id].spec.tasks[tid]
+                    if task.cpu == 0 and task.mem == 0:
+                        # Virtual entrance/exit: complete instantly, no pod.
+                        self._task_done(wf_id, tid)
+                    else:
+                        entries.append((wf_id, task, "ready"))
             else:  # HEAL
                 wf_id, task = event.payload
-                self.metrics.realloc_events.append(
-                    (self._now, f"{wf_id}/{task.task_id}")
-                )
-                entries.append((wf_id, task, "heal"))
+                if wf_id not in self._failed_workflows:
+                    self.metrics.realloc_events.append(
+                        (self._now, f"{wf_id}/{task.task_id}")
+                    )
+                    entries.append((wf_id, task, "heal"))
             idle = not entries and not (include_pending and self._pending)
             event = self.queue.pop_mergeable(first.t, deadline,
                                              fold_capacity_free=idle)
@@ -470,7 +618,15 @@ class KubeAdaptor:
                 self.metrics.sla_violations.append(
                     (wf_id, self._now, run.injected_at + run.spec.deadline))
 
+    def _stale(self, uid: int) -> bool:
+        """A queued pod event whose pod was already terminated (killed by
+        injected chaos or a workflow failure) — drop it."""
+        pod = self.cluster.pods.get(uid)
+        return pod is None or pod.phase is not PodPhase.RUNNING
+
     def _complete(self, uid: int, wf_id: str) -> None:
+        if self._stale(uid):
+            return
         pod = self.cluster.finish(uid, self._now, PodPhase.SUCCEEDED)
         self._sample_usage()
         self._push(self._now + self.cfg.timing.cleanup_delay,
@@ -480,6 +636,8 @@ class KubeAdaptor:
 
     def _oom(self, uid: int, wf_id: str) -> None:
         """OOMKilled watch → delete → reallocate (self-healing, Fig. 9)."""
+        if self._stale(uid):
+            return
         pod = self.cluster.finish(uid, self._now, PodPhase.OOM_KILLED)
         self._sample_usage()
         key = f"{wf_id}/{pod.task.task_id}"
@@ -493,7 +651,121 @@ class KubeAdaptor:
         self._push(self._now + self.cfg.timing.restart_delay, EventKind.HEAL,
                    (wf_id, learned))
 
+    # ------------------------------------------------------- fault handling
+    def _node_down(self, node: int) -> None:
+        """Injected NODE_DOWN: cordon the node, displace its pods.
+
+        Each displaced Running pod terminates ``FAILED`` (inside
+        ``ClusterSim.set_node_down``), is cleaned up like any terminal
+        pod, and its *original* task re-enters admission through the HEAL
+        path after ``restart_delay`` — the same self-healing road an
+        OOMKilled pod takes, minus the learned floor (the task itself was
+        fine; its node was not).
+        """
+        displaced = self.cluster.set_node_down(node, self._now)
+        if displaced is None:  # already offline
+            return
+        self.metrics.node_events.append((self._now, node, "down"))
+        self._sample_usage()
+        timing = self.cfg.timing
+        for pod in displaced:
+            key = f"{pod.workflow_id}/{pod.task.task_id}"
+            self.metrics.displaced_tasks.append((self._now, key))
+            self._push(self._now + timing.cleanup_delay,
+                       EventKind.DELETE, (pod.uid,))
+            if pod.workflow_id in self._failed_workflows:
+                continue
+            self._displaced_at.setdefault(key, self._now)
+            self._push(self._now + timing.restart_delay, EventKind.HEAL,
+                       (pod.workflow_id, pod.task))
+
+    def _node_up(self, node: int) -> None:
+        """Injected NODE_UP: restore the node, retry against it.
+
+        The same-time RETRY sorts after NODE_UP (kind order), so pending
+        tasks decide against the recovered capacity immediately.
+        """
+        if not self.cluster.set_node_up(node):  # was not offline
+            return
+        self.metrics.node_events.append((self._now, node, "up"))
+        self._sample_usage()
+        self._push(self._now, EventKind.RETRY, ())
+
+    def _oom_storm(self, victims: int) -> None:
+        """Injected OOM_STORM: force-OOM the longest-running pods.
+
+        Victims are the lowest-uid Running pods — creation order, so the
+        choice is deterministic for a seeded run.  Each goes through the
+        ordinary ``_oom`` self-healing path; its still-queued COMPLETE
+        event goes stale and is dropped by the guard.
+        """
+        running = sorted(uid for uid, pod in self.cluster.pods.items()
+                         if pod.phase is PodPhase.RUNNING)
+        for uid in running[:victims]:
+            self._oom(uid, self.cluster.pods[uid].workflow_id)
+
+    def _wf_deadline(self, wf_id: str) -> None:
+        """Per-workflow deadline check: incomplete -> FAILED outcome."""
+        run = self.runs.get(wf_id)
+        if run is None or run.complete \
+                or wf_id in self._failed_workflows:
+            return
+        self._fail_workflow(wf_id, "deadline")
+
+    def _fail_workflow(self, wf_id: str, reason: str) -> None:
+        """Terminate a workflow as a FAILED outcome (graceful degradation).
+
+        Its queued tasks leave the pending queue, its Running pods are
+        killed (``FAILED`` + cleanup), and its unfinished task records go
+        numerically inert via ``mark_done`` so the allocator's demand
+        window no longer prices them in.  The workflow is *not* added to
+        ``workflow_durations`` — completed-workflow statistics stay
+        completed-only; it is counted on ``metrics.failed_workflows``.
+        """
+        self._failed_workflows.add(wf_id)
+        self.metrics.failed_workflows.append((self._now, wf_id, reason))
+        if self._pending:
+            self._pending = deque(
+                (w, t) for w, t in self._pending if w != wf_id)
+        victims = [pod for pod in self.cluster.pods.values()
+                   if pod.workflow_id == wf_id
+                   and pod.phase is PodPhase.RUNNING]
+        for pod in victims:
+            self.cluster.finish(pod.uid, self._now, PodPhase.FAILED)
+            self._push(self._now + self.cfg.timing.cleanup_delay,
+                       EventKind.DELETE, (pod.uid,))
+        run = self.runs[wf_id]
+        run.finished_at = self._now
+        for tid in run.spec.tasks:
+            if tid not in run.done:
+                self.store.mark_done(f"{wf_id}/{tid}", self._now)
+        if victims:
+            self._sample_usage()
+            # Freed capacity: let the pending queue retry against it.
+            self._push(self._now, EventKind.RETRY, ())
+
     # ------------------------------------------------------------ run loop
+    def _event_stale(self, event: Event) -> bool:
+        """Queued events whose subject already terminated are no-ops.
+
+        They are dropped *before* the clock advances, so a trailing
+        deadline check for a long-completed workflow, a COMPLETE for a
+        chaos-killed pod, or a backoff retry with nothing left pending
+        cannot inflate the makespan (only consulted when faults are
+        configured — without them no event ever goes stale).
+        """
+        kind = event.kind
+        if kind is EventKind.COMPLETE or kind is EventKind.OOM:
+            return self._stale(event.payload[0])
+        if kind is EventKind.WF_DEADLINE:
+            wf_id = event.payload[0]
+            run = self.runs.get(wf_id)
+            return run is None or run.complete \
+                or wf_id in self._failed_workflows
+        if kind is EventKind.RETRY and event.payload == ("backoff",):
+            return not self._pending
+        return False
+
     def step(self) -> Event:
         """Pop and process the next event; returns the processed head.
 
@@ -506,6 +778,8 @@ class KubeAdaptor:
             raise RuntimeError("step() on an empty event queue — guard "
                                "the loop with `while engine.queue: ...`")
         event = self.queue.pop()
+        if self._chaos_on and self._event_stale(event):
+            return event
         if event.t > self.cfg.timing.max_time:
             raise RuntimeError("simulation exceeded max_time — deadlock?")
         self._now = event.t
@@ -517,8 +791,16 @@ class KubeAdaptor:
             self._complete(*event.payload)
         elif event.kind is EventKind.OOM:
             self._oom(*event.payload)
+        elif event.kind is EventKind.OOM_STORM:
+            self._oom_storm(*event.payload)
         elif event.kind is EventKind.DELETE:
             self.cluster.delete(*event.payload)
+        elif event.kind is EventKind.NODE_DOWN:
+            self._node_down(*event.payload)
+        elif event.kind is EventKind.NODE_UP:
+            self._node_up(*event.payload)
+        elif event.kind is EventKind.WF_DEADLINE:
+            self._wf_deadline(*event.payload)
         else:  # RETRY / READY / HEAL
             self._drain_group(event)
         return event
@@ -530,7 +812,8 @@ class KubeAdaptor:
         streaming engine, benchmarks) finish a drained run identically
         to ``run()``.
         """
-        incomplete = [w for w, r in self.runs.items() if not r.complete]
+        incomplete = [w for w, r in self.runs.items()
+                      if not r.complete and w not in self._failed_workflows]
         if incomplete or self._pending:
             raise RuntimeError(
                 f"deadlocked workflows: {incomplete}, pending={len(self._pending)}"

@@ -29,6 +29,15 @@ the pieces this engine already has:
   (step wall time amortized over the rows it decided).  ``serve()``
   returns :class:`StreamStats` with sustained decisions/sec and
   p50/p99 per-decision latency next to the usual engine metrics.
+* **Admission control (backpressure).**  With ``max_pending`` set, the
+  pump watches the engine's pending admission queue; while its backlog
+  exceeds the bound, new arrivals are *shed* (dropped and counted — the
+  AHPA-style graceful degradation) or *deferred* (withheld and
+  submitted once the backlog drains, re-timed to the engine clock so
+  time never runs backwards), per ``overload_policy``.  Overload then
+  produces a measured, bounded queue instead of unbounded growth;
+  ``StreamStats`` reports the shed/deferred counts.  Unset (default),
+  the pump admits everything — bit-for-bit the offline run.
 
 The stream driver works with any engine configuration; it is fastest
 with the device-resident incremental state (``AllocatorConfig.
@@ -58,6 +67,8 @@ class StreamStats:
     p50_latency_s: float  # per-decision latency percentiles, wall time
     p99_latency_s: float  # of the deciding step / rows it decided
     overlapped_ingests: int  # arrivals submitted under in-flight dispatches
+    shed_workflows: int  # arrivals dropped by admission control
+    deferred_workflows: int  # arrivals withheld (at least once) by backlog
     metrics: EngineMetrics  # the usual offline-run metrics
 
     def to_dict(self) -> Dict[str, float]:
@@ -70,6 +81,8 @@ class StreamStats:
             "p50_latency_s": self.p50_latency_s,
             "p99_latency_s": self.p99_latency_s,
             "overlapped_ingests": self.overlapped_ingests,
+            "shed_workflows": self.shed_workflows,
+            "deferred_workflows": self.deferred_workflows,
         }
 
 
@@ -84,34 +97,74 @@ class StreamEngine:
 
     def __init__(self, engine: KubeAdaptor,
                  arrivals: Sequence[Tuple[float, WorkflowSpec]],
-                 prefetch_chunk: int = 64):
+                 prefetch_chunk: int = 64,
+                 max_pending: Optional[int] = None,
+                 overload_policy: str = "shed"):
         times = [t for t, _ in arrivals]
         if any(b < a for a, b in zip(times, times[1:])):
             raise ValueError("arrivals must be sorted by time")
+        if overload_policy not in ("shed", "defer"):
+            raise ValueError(
+                f"unknown overload_policy {overload_policy!r} "
+                f"(want 'shed' or 'defer')")
+        if max_pending is not None and max_pending < 0:
+            raise ValueError(f"max_pending must be None (unbounded) or "
+                             f">= 0, got {max_pending}")
         self.engine = engine
         self._arrivals: List[Tuple[float, WorkflowSpec]] = list(arrivals)
         self._next = 0  # first arrival not yet submitted
         self._prefetch_chunk = prefetch_chunk
+        self._max_pending = max_pending
+        self._overload_policy = overload_policy
         self.overlapped_ingests = 0
+        self.shed_workflows = 0
+        self.deferred_workflows = 0
+        self._deferred_seen = 0  # arrivals counted deferred at least once
         engine.ingest_hook = self._overlap_ingest
 
     # ------------------------------------------------------------ ingestion
+    def _backlogged(self) -> bool:
+        """Admission control: is the engine's pending queue over bound?"""
+        return (self._max_pending is not None
+                and len(self.engine._pending) > self._max_pending)
+
     def _pump(self) -> None:
         """Submit every arrival the next step is entitled to see.
 
         The fold deadline is re-anchored after each submission: an
         arrival earlier than the current head becomes the head, and its
         own window may entitle the step to further arrivals.
+
+        Under admission control (``max_pending``) an over-bound backlog
+        sheds the arrival (dropped + counted) or defers the whole pump
+        until the backlog drains — except on an empty event queue, where
+        withholding would stall the loop (an empty queue also implies an
+        empty pending queue: pending tasks always have a completion or
+        retry scheduled, so the backlog check passes there anyway).
+        Deferred arrivals whose timestamp the engine has already passed
+        are submitted at the engine clock — time never runs backwards.
         """
-        window = self.engine.cfg.timing.batch_window
+        engine = self.engine
+        window = engine.cfg.timing.batch_window
         while self._next < len(self._arrivals):
-            head = self.engine.queue.peek()
+            head = engine.queue.peek()
             t, spec = self._arrivals[self._next]
             if head is not None and t > head.t + window:
                 break
+            if self._backlogged():
+                if self._overload_policy == "shed":
+                    self.shed_workflows += 1
+                    self._next += 1
+                    continue
+                if self._next >= self._deferred_seen:
+                    self.deferred_workflows += 1
+                    self._deferred_seen = self._next + 1
+                break
             # An empty queue (quiescent gap between workload phases)
             # anchors the next period on this arrival itself.
-            self.engine.submit(spec, t)
+            if self._max_pending is not None:
+                t = max(t, engine._now)
+            engine.submit(spec, t)
             self._next += 1
 
     def _overlap_ingest(self) -> None:
@@ -122,8 +175,11 @@ class StreamEngine:
         beyond the current fold deadline (``_pump`` already submitted
         everything inside it), so queueing them cannot change the
         decision in flight — this is pure host-side work hidden under
-        device compute.
+        device compute.  Disabled under admission control: prefetched
+        arrivals would bypass the backlog check.
         """
+        if self._max_pending is not None:
+            return
         end = min(self._next + self._prefetch_chunk, len(self._arrivals))
         for i in range(self._next, end):
             t, spec = self._arrivals[i]
@@ -162,13 +218,18 @@ class StreamEngine:
             p50_latency_s=float(np.percentile(lat, 50)) if lat.size else 0.0,
             p99_latency_s=float(np.percentile(lat, 99)) if lat.size else 0.0,
             overlapped_ingests=self.overlapped_ingests,
+            shed_workflows=self.shed_workflows,
+            deferred_workflows=self.deferred_workflows,
             metrics=metrics,
         )
 
 
 def serve_stream(engine: KubeAdaptor,
                  arrivals: Sequence[Tuple[float, WorkflowSpec]],
-                 prefetch_chunk: int = 64) -> StreamStats:
+                 prefetch_chunk: int = 64,
+                 max_pending: Optional[int] = None,
+                 overload_policy: str = "shed") -> StreamStats:
     """One-call convenience: build a :class:`StreamEngine` and serve."""
-    return StreamEngine(engine, arrivals,
-                        prefetch_chunk=prefetch_chunk).serve()
+    return StreamEngine(engine, arrivals, prefetch_chunk=prefetch_chunk,
+                        max_pending=max_pending,
+                        overload_policy=overload_policy).serve()

@@ -4,6 +4,7 @@ from repro.workflows.arrival import (
     linear,
     poisson,
     pyramid,
+    spike,
     trace,
 )
 from repro.workflows.dags import (
@@ -16,7 +17,8 @@ from repro.workflows.dags import (
 from repro.workflows.spec import TaskSpec, WorkflowSpec, make_task
 
 __all__ = [
-    "constant", "linear", "pyramid", "poisson", "jittered", "trace",
+    "constant", "linear", "pyramid", "poisson", "jittered", "spike",
+    "trace",
     "WORKFLOW_BUILDERS", "montage", "epigenomics", "cybershake", "ligo",
     "TaskSpec", "WorkflowSpec", "make_task",
 ]

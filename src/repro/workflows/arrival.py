@@ -76,32 +76,112 @@ def pyramid(start: int = 2, peak: int = 6, step: int = 2, total: int = 34,
 
 # ------------------------------------------------------------- stochastic
 
+def _thin(rng: np.random.Generator, rel_rate, peak: float,
+          mean_total: float, horizon: float) -> List[float]:
+    """Inhomogeneous Poisson sampling by conditioning + thinning.
+
+    Draw the total count ``N ~ Poisson(mean_total)`` (``mean_total`` =
+    the rate function's integral over the horizon), then rejection-
+    sample ``N`` timestamps from the normalized rate density: uniform
+    candidates accepted with probability ``rel_rate(t) / peak``.  One
+    rng draw per candidate, in a fixed order — seed-deterministic.
+    """
+    n = int(rng.poisson(mean_total))
+    times: List[float] = []
+    while len(times) < n:
+        t = float(rng.uniform(0.0, horizon))
+        if float(rng.uniform()) * peak <= rel_rate(t):
+            times.append(t)
+    return sorted(times)
+
+
 @ARRIVALS.register(
     "poisson", capabilities=("stochastic",),
-    doc="homogeneous Poisson stream, per-workflow arrivals")
+    doc="Poisson stream, optionally rate-ramped, per-workflow arrivals")
 def poisson(lam: float = 5.0, bursts: int = 6, interval: float = INTERVAL,
-            seed: int = 0) -> List[Tuple[float, int]]:
-    """Poisson arrival stream with the same expected load as
-    ``constant(y=lam, bursts=bursts)``: rate ``lam/interval`` over the
-    horizon ``[0, bursts·interval)``.
+            seed: int = 0, ramp: float = 0.0) -> List[Tuple[float, int]]:
+    """Poisson arrival stream with the same *average* load as
+    ``constant(y=lam, bursts=bursts)``: mean rate ``lam/interval`` over
+    the horizon ``[0, bursts·interval)``.
 
     Sampled by conditioning-and-thinning: draw the total count
-    ``N ~ Poisson(lam·bursts)``, then thin ``N`` i.i.d. uniform
-    timestamps over the horizon — the exact conditional law of a
-    homogeneous Poisson process.  Each workflow arrives alone (bursts of
-    size 1), so without a positive ``batch_window`` every arrival is its
-    own dispatch.
+    ``N ~ Poisson(∫rate)``, then thin ``N`` timestamps from the rate
+    density — the exact conditional law of a Poisson process.  Each
+    workflow arrives alone (bursts of size 1), so without a positive
+    ``batch_window`` every arrival is its own dispatch.
+
+    ``ramp`` makes the stream inhomogeneous: the rate climbs linearly
+    from ``1`` to ``1 + ramp`` (relative) across the horizon — e.g.
+    ``ramp=2.0`` ends at 3× the starting rate, ``ramp=-0.5`` decays to
+    half.  The expected total becomes ``lam·bursts·(1 + ramp/2)``.
+    ``ramp=0`` keeps the homogeneous sampling path byte-identical to
+    previous releases (same rng draws).
     """
     if lam <= 0:
         raise ValueError(f"poisson lam must be > 0, got {lam}")
     if bursts < 1 or interval <= 0:
         raise ValueError(f"poisson needs bursts >= 1 and interval > 0, "
                          f"got bursts={bursts}, interval={interval}")
+    if ramp < -1.0:
+        raise ValueError(f"poisson ramp must be >= -1 (the end rate "
+                         f"1 + ramp cannot go negative), got {ramp}")
     rng = np.random.default_rng(seed)
     horizon = bursts * interval
-    n = int(rng.poisson(lam * bursts))
-    times = np.sort(rng.uniform(0.0, horizon, n))
-    return [(float(t), 1) for t in times]
+    if ramp == 0.0:
+        # Homogeneous: the original two-draw path, byte for byte.
+        n = int(rng.poisson(lam * bursts))
+        times = np.sort(rng.uniform(0.0, horizon, n))
+        return [(float(t), 1) for t in times]
+    times = _thin(
+        rng, lambda t: 1.0 + ramp * t / horizon,
+        peak=max(1.0, 1.0 + ramp),
+        mean_total=lam * bursts * (1.0 + ramp / 2.0),
+        horizon=horizon,
+    )
+    return [(t, 1) for t in times]
+
+
+@ARRIVALS.register(
+    "spike", capabilities=("stochastic",),
+    doc="Poisson stream with a rate spike — the overload stress input")
+def spike(lam: float = 5.0, bursts: int = 6, interval: float = INTERVAL,
+          spike_at: float = 0.5, spike_width: float = 0.15,
+          spike_factor: float = 4.0, seed: int = 0
+          ) -> List[Tuple[float, int]]:
+    """Poisson stream at base rate ``lam/interval`` with a
+    ``spike_factor``× rate spike over the horizon fraction
+    ``[spike_at, spike_at + spike_width)`` — the paper's "unexpected
+    resource request spikes" as a declarative stress input for chaos
+    and backpressure scenarios.  Sampled by the same conditioning +
+    thinning as the ramped ``poisson``.
+    """
+    if lam <= 0:
+        raise ValueError(f"spike lam must be > 0, got {lam}")
+    if bursts < 1 or interval <= 0:
+        raise ValueError(f"spike needs bursts >= 1 and interval > 0, "
+                         f"got bursts={bursts}, interval={interval}")
+    if not 0.0 <= spike_at < 1.0 or spike_width <= 0 \
+            or spike_at + spike_width > 1.0:
+        raise ValueError(
+            f"spike window must satisfy 0 <= spike_at < 1, "
+            f"spike_width > 0, spike_at + spike_width <= 1, got "
+            f"spike_at={spike_at}, spike_width={spike_width}")
+    if spike_factor < 1.0:
+        raise ValueError(f"spike_factor must be >= 1 (use ramp for "
+                         f"decaying rates), got {spike_factor}")
+    rng = np.random.default_rng(seed)
+    horizon = bursts * interval
+    lo, hi = spike_at * horizon, (spike_at + spike_width) * horizon
+
+    def rel(t: float) -> float:
+        return spike_factor if lo <= t < hi else 1.0
+
+    times = _thin(
+        rng, rel, peak=spike_factor,
+        mean_total=lam * bursts * (1.0 + (spike_factor - 1.0) * spike_width),
+        horizon=horizon,
+    )
+    return [(t, 1) for t in times]
 
 
 @ARRIVALS.register(

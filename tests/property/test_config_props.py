@@ -17,6 +17,7 @@ from repro.api import (  # noqa: E402
     AllocatorConfig,
     ClusterConfig,
     EngineConfig,
+    FaultConfig,
     Scenario,
     TimingConfig,
 )
@@ -55,8 +56,24 @@ _timing = st.builds(
     duration_multiplier=_pos,
     max_time=_pos,
 )
+_faults = st.builds(
+    FaultConfig,
+    schedule=st.sampled_from(["none", "node_crash", "node_flap",
+                              "oom_storm"]),
+    params=st.dictionaries(
+        st.sampled_from(["at", "seed"]),
+        st.one_of(st.integers(min_value=0, max_value=100)), max_size=2),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    max_retries=st.one_of(st.none(),
+                          st.integers(min_value=0, max_value=10)),
+    backoff_base=st.floats(min_value=0.0, max_value=1e3, allow_nan=False),
+    backoff_factor=st.floats(min_value=1.0, max_value=10.0,
+                             allow_nan=False),
+    workflow_timeout=st.one_of(st.none(), _pos),
+)
 _engine = st.builds(EngineConfig, cluster=_cluster, alloc=_alloc,
-                    timing=_timing, invariant_checks=st.booleans())
+                    timing=_timing, faults=_faults,
+                    invariant_checks=st.booleans())
 
 _scenario = st.builds(
     Scenario,
@@ -96,7 +113,7 @@ def test_evolve_routes_any_flat_key_subset(cfg, keys):
         part, field = _FLAT_MAP[key]
         flat[key] = getattr(getattr(cfg, part), field)
     parts = {"cluster": ClusterConfig(), "alloc": AllocatorConfig(),
-             "timing": TimingConfig()}
+             "timing": TimingConfig(), "faults": FaultConfig()}
     for key, value in flat.items():
         part, field = _FLAT_MAP[key]
         parts[part] = dataclasses.replace(parts[part], **{field: value})

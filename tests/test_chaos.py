@@ -1,0 +1,313 @@
+"""Fault injection & graceful degradation (``repro.chaos`` + engine).
+
+Three layers of contract:
+
+* **Schedules are data.**  ``FAULTS`` builders return deterministic,
+  time-sorted :class:`FaultEvent` lists from ``(num_nodes, seed)`` —
+  the same config replays the same faults bit for bit.
+* **No lost pods.**  Every task displaced by a node failure either
+  re-enters admission through HEAL and recovers, or belongs to a
+  workflow terminally counted ``FAILED`` (bounded retry budget /
+  deadline) — never silently dropped.  Chaos runs repeat bit-identically
+  under a fixed seed.
+* **Bounded overload.**  The graceful-degradation knobs
+  (``max_retries``, ``backoff_base``, ``workflow_timeout``) turn
+  infinite retry into a terminal ``FAILED`` outcome, and the stream
+  pump's ``max_pending`` bound turns unbounded queue growth into
+  measured shed/defer counts.
+"""
+import dataclasses
+
+import pytest
+
+from repro.api import (
+    FAULTS,
+    EngineConfig,
+    FaultConfig,
+    Scenario,
+    TimingConfig,
+    run_scenario,
+)
+from repro.chaos import FaultEvent, node_crash, node_flap, oom_storm
+from repro.engine import KubeAdaptor
+from repro.engine.events import EventKind
+from repro.serving import StreamEngine
+from repro.workflows.spec import TaskSpec, WorkflowSpec
+
+pytestmark = pytest.mark.tier1
+
+
+def _chain_wf(i: int, n_tasks: int = 2, duration: float = 6.0,
+              cpu: float = 600.0) -> WorkflowSpec:
+    tasks = {
+        f"t{j}": TaskSpec(task_id=f"t{j}", image="img", cpu=cpu,
+                          mem=2.0 * cpu, duration=duration + j,
+                          min_cpu=cpu / 6.0, min_mem=cpu / 3.0)
+        for j in range(n_tasks)
+    }
+    edges = [(f"t{j}", f"t{j + 1}") for j in range(n_tasks - 1)]
+    return WorkflowSpec(workflow_id=f"w{i}", tasks=tasks, edges=edges)
+
+
+_ARRIVALS = [(0.0, _chain_wf(0)), (0.5, _chain_wf(1, n_tasks=1)),
+             (4.0, _chain_wf(2, duration=2.0)), (4.2, _chain_wf(3)),
+             (11.0, _chain_wf(4, n_tasks=3, cpu=900.0))]
+
+
+def _run(faults: FaultConfig, num_nodes: int = 10,
+         arrivals=None) -> KubeAdaptor:
+    eng = KubeAdaptor(EngineConfig(
+        timing=TimingConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                            duration_multiplier=1.0, batch_window=3.0),
+        faults=faults,
+    ).evolve(num_nodes=num_nodes))
+    for t, wf in (arrivals or _ARRIVALS):
+        eng.submit(wf, t)
+    eng.run()
+    return eng
+
+
+# ------------------------------------------------------- schedules as data
+
+def test_faults_registry_has_builtin_schedules():
+    assert {"none", "node_crash", "node_flap", "oom_storm"} <= set(
+        FAULTS.names())
+    assert FAULTS.get("none").factory() == []
+    assert FAULTS.get("node_crash").supports("seeded")
+
+
+def test_node_crash_is_seed_deterministic():
+    a = node_crash(num_nodes=64, nodes=3, at=10.0, seed=5)
+    assert a == node_crash(num_nodes=64, nodes=3, at=10.0, seed=5)
+    assert len(a) == 3
+    assert all(isinstance(e, FaultEvent) and e.kind is EventKind.NODE_DOWN
+               and e.t == 10.0 for e in a)
+    victims = [e.payload[0] for e in a]
+    assert victims == sorted(set(victims))  # distinct, sorted
+    assert a != node_crash(num_nodes=64, nodes=3, at=10.0, seed=6)
+
+
+def test_node_flap_pairs_and_validation():
+    ev = node_flap(num_nodes=8, nodes=2, at=5.0, down_for=3.0,
+                   repeats=2, period=20.0, seed=1)
+    assert len(ev) == 8  # 2 nodes x 2 repeats x (down + up)
+    assert [e.t for e in ev] == sorted(e.t for e in ev)
+    downs = [e for e in ev if e.kind is EventKind.NODE_DOWN]
+    ups = [e for e in ev if e.kind is EventKind.NODE_UP]
+    assert len(downs) == len(ups) == 4
+    assert {e.payload for e in downs} == {e.payload for e in ups}
+    with pytest.raises(ValueError, match="shorter than"):
+        node_flap(num_nodes=8, down_for=30.0, repeats=2, period=20.0)
+
+
+def test_oom_storm_schedule():
+    ev = oom_storm(num_nodes=8, at=7.0, victims=3, repeats=2, period=10.0)
+    assert [e.t for e in ev] == [7.0, 17.0]
+    assert all(e.kind is EventKind.OOM_STORM and e.payload == (3,)
+               for e in ev)
+    with pytest.raises(ValueError, match="victims"):
+        oom_storm(num_nodes=8, victims=0)
+
+
+def test_fault_config_validation_and_round_trip():
+    cfg = EngineConfig().evolve(
+        fault_schedule="node_crash", fault_params={"at": 9.0, "nodes": 2},
+        fault_seed=3, max_retries=4, backoff_base=2.0, workflow_timeout=500.0)
+    assert cfg.faults.schedule == "node_crash"
+    assert EngineConfig.from_json(cfg.to_json()) == cfg
+    with pytest.raises(ValueError, match="unknown fault schedule"):
+        FaultConfig(schedule="nope").validate()
+    with pytest.raises(ValueError, match="node_crash"):
+        FaultConfig(schedule="node_crash",
+                    params={"bogus": 1}).validate()
+    with pytest.raises(ValueError, match="max_retries"):
+        FaultConfig(max_retries=-1).validate()
+    with pytest.raises(ValueError, match="backoff_factor"):
+        FaultConfig(backoff_factor=0.5).validate()
+    with pytest.raises(ValueError, match="workflow_timeout"):
+        FaultConfig(workflow_timeout=0.0).validate()
+
+
+# ------------------------------------------------- engine: no lost pods
+
+def _assert_no_lost_pods(eng: KubeAdaptor) -> None:
+    m = eng.metrics
+    recovered = {key for key, _ in m.recovery_times}
+    failed_wfs = {wf for _, wf, _ in m.failed_workflows}
+    for _, key in m.displaced_tasks:
+        assert key in recovered or key.split("/")[0] in failed_wfs, key
+
+
+def test_node_crash_heals_every_displaced_task():
+    eng = _run(FaultConfig(schedule="node_crash",
+                           params={"at": 5.0, "nodes": 3}, seed=2))
+    m = eng.metrics
+    assert [(t, n, w) for t, n, w in m.node_events
+            if w == "down"], "crash never fired"
+    assert m.num_displaced > 0
+    assert m.num_recovered == m.num_displaced  # ample spare capacity
+    assert m.mean_time_to_recovery > 0.0
+    assert not m.failed_workflows and not m.failed_tasks
+    _assert_no_lost_pods(eng)
+    assert len(m.workflow_durations) == len(_ARRIVALS)  # all complete
+    assert eng.cluster.offline_nodes == sorted(
+        n for _, n, w in m.node_events if w == "down")
+
+
+def test_chaos_runs_are_bit_identical():
+    faults = FaultConfig(schedule="node_flap",
+                         params={"at": 3.0, "down_for": 6.0, "nodes": 2},
+                         seed=7)
+    a, b = _run(faults).metrics, _run(faults).metrics
+    assert a.alloc_trace == b.alloc_trace
+    assert a.makespan == b.makespan
+    assert a.node_events == b.node_events
+    assert a.displaced_tasks == b.displaced_tasks
+    assert a.recovery_times == b.recovery_times
+    assert a.usage_series == b.usage_series
+
+
+def test_node_flap_restores_capacity():
+    eng = _run(FaultConfig(schedule="node_flap",
+                           params={"at": 3.0, "down_for": 6.0, "nodes": 2}))
+    m = eng.metrics
+    downs = [n for _, n, w in m.node_events if w == "down"]
+    ups = [n for _, n, w in m.node_events if w == "up"]
+    assert sorted(downs) == sorted(ups)
+    assert eng.cluster.offline_nodes == []
+    assert len(m.workflow_durations) == len(_ARRIVALS)
+    _assert_no_lost_pods(eng)
+
+
+def test_oom_storm_self_heals():
+    eng = _run(FaultConfig(schedule="oom_storm",
+                           params={"at": 4.0, "victims": 2}))
+    m = eng.metrics
+    assert len(m.oom_events) >= 2
+    assert len(m.workflow_durations) == len(_ARRIVALS)
+    eng.cluster.check_invariants()
+
+
+# --------------------------------------- graceful degradation knobs
+
+def _oversized_wf(i: int) -> WorkflowSpec:
+    # min_cpu larger than any node: admission can never succeed.
+    return WorkflowSpec(workflow_id=f"big{i}", tasks={
+        "t0": TaskSpec(task_id="t0", image="img", cpu=10_000.0,
+                       mem=20_000.0, duration=5.0, min_cpu=9_000.0,
+                       min_mem=18_000.0)}, edges=[])
+
+
+def test_retry_budget_fails_workflow_terminally():
+    eng = _run(FaultConfig(max_retries=2, workflow_timeout=400.0),
+               arrivals=[(0.0, _chain_wf(0)), (1.0, _oversized_wf(0))])
+    m = eng.metrics
+    reasons = {wf: why for _, wf, why in m.failed_workflows}
+    assert reasons.get("big0") == "retry_budget"
+    assert any(key.startswith("big0/") for _, key in m.failed_tasks)
+    assert len(m.workflow_durations) == 1  # w0 still completes
+
+
+def test_workflow_deadline_fails_stragglers():
+    eng = _run(FaultConfig(workflow_timeout=2.0),
+               arrivals=[(0.0, _oversized_wf(0))])
+    m = eng.metrics
+    assert [(wf, why) for _, wf, why in m.failed_workflows] \
+        == [("big0", "deadline")]
+    assert m.makespan <= 2.0 + 1e-9
+
+
+def test_backoff_gates_retry_churn():
+    """Exponential backoff must reduce futile admission attempts on a
+    saturated cluster without changing what eventually completes."""
+    arrivals = [(float(i) * 0.25, _chain_wf(i)) for i in range(12)]
+    plain = _run(FaultConfig(), num_nodes=2, arrivals=arrivals).metrics
+    backed = _run(FaultConfig(backoff_base=4.0, backoff_factor=2.0),
+                  num_nodes=2, arrivals=arrivals).metrics
+    assert len(plain.workflow_durations) == len(arrivals)
+    assert len(backed.workflow_durations) == len(arrivals)
+    assert backed.num_waits <= plain.num_waits
+
+
+# ------------------------------------------------ stream backpressure
+
+def _overload_arrivals(n: int = 40):
+    # Long-running, fat tasks: two nodes saturate well before the
+    # arrival burst ends, so admission genuinely backs up.
+    return [(float(i) * 0.1, _chain_wf(i, n_tasks=1, duration=30.0,
+                                       cpu=3000.0)) for i in range(n)]
+
+
+def _stream_engine(num_nodes: int = 2) -> KubeAdaptor:
+    return KubeAdaptor(EngineConfig(
+        timing=TimingConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                            duration_multiplier=1.0, batch_window=3.0),
+    ).evolve(num_nodes=num_nodes))
+
+
+def test_stream_shed_bounds_admission():
+    arrivals = _overload_arrivals()
+    stats = StreamEngine(_stream_engine(), arrivals, max_pending=4,
+                         overload_policy="shed").serve()
+    assert stats.shed_workflows > 0
+    assert stats.deferred_workflows == 0
+    done = len(stats.metrics.workflow_durations)
+    assert done == len(arrivals) - stats.shed_workflows  # shed, not lost
+    assert stats.to_dict()["shed_workflows"] == stats.shed_workflows
+
+
+def test_stream_defer_completes_everything():
+    arrivals = _overload_arrivals()
+    stats = StreamEngine(_stream_engine(), arrivals, max_pending=4,
+                         overload_policy="defer").serve()
+    assert stats.deferred_workflows > 0
+    assert stats.shed_workflows == 0
+    assert len(stats.metrics.workflow_durations) == len(arrivals)
+
+
+def test_stream_rejects_bad_admission_params():
+    eng = _stream_engine()
+    with pytest.raises(ValueError, match="overload_policy"):
+        StreamEngine(eng, [], overload_policy="panic")
+    with pytest.raises(ValueError, match="max_pending"):
+        StreamEngine(eng, [], max_pending=-1)
+
+
+# ------------------------------------------------- scenario integration
+
+def test_scenario_chaos_counters_and_determinism():
+    sc = Scenario(
+        name="chaos", workflows=("montage",), arrival="constant",
+        arrival_params={"y": 2, "bursts": 2, "interval": 60.0},
+        engine=EngineConfig(
+            timing=TimingConfig(batch_window=5.0),
+        ).evolve(num_nodes=8, fault_schedule="node_crash",
+                 fault_params={"at": 30.0, "nodes": 2}, fault_seed=4),
+        seed=3)
+    a, b = run_scenario(sc), run_scenario(sc)
+    assert a.num_displaced > 0
+    failed_wfs = {wf for _, wf, _ in a.metrics.failed_workflows}
+    assert a.num_displaced == a.num_recovered + sum(
+        1 for _, key in a.metrics.displaced_tasks
+        if key.split("/")[0] in failed_wfs)
+    assert a.metrics.alloc_trace == b.metrics.alloc_trace
+    assert a.num_displaced == b.num_displaced
+    assert a.mean_time_to_recovery == b.mean_time_to_recovery
+    assert dataclasses.asdict(a.metrics)["node_events"] \
+        == dataclasses.asdict(b.metrics)["node_events"]
+
+
+def test_scenario_stream_backpressure_round_trip():
+    sc = Scenario(
+        name="bp", workflows=("montage",), arrival="spike",
+        arrival_params={"lam": 8, "bursts": 2, "interval": 60.0},
+        engine=EngineConfig(
+            timing=TimingConfig(batch_window=10.0)).evolve(num_nodes=4),
+        seed=1, stream=True,
+        stream_params={"max_pending": 6, "overload_policy": "shed"})
+    assert Scenario.from_json(sc.to_json()) == sc
+    res = run_scenario(sc)
+    assert res.shed_workflows > 0
+    assert res.decisions_per_sec > 0.0
+    with pytest.raises(ValueError, match="stream"):
+        dataclasses.replace(sc, stream=False).validate()

@@ -246,6 +246,11 @@ def _assert_metrics_equal(a, b):
     assert a.makespan == b.makespan
     assert a.usage_series == b.usage_series
     assert a.workflow_durations == b.workflow_durations
+    assert a.node_events == b.node_events
+    assert a.displaced_tasks == b.displaced_tasks
+    assert a.recovery_times == b.recovery_times
+    assert a.failed_tasks == b.failed_tasks
+    assert a.failed_workflows == b.failed_workflows
 
 
 @pytest.mark.parametrize("name", ["aras", "fcfs"])
@@ -273,6 +278,46 @@ def test_incremental_state_config_gate():
     assert KubeAdaptor(EngineConfig())._use_device_state
     assert not KubeAdaptor(
         EngineConfig().evolve(incremental_state=False))._use_device_state
+
+
+# --------------------------------------------- chaos-path parity
+
+def _chaos_metrics(k: int, incremental: bool, schedule: str,
+                   params: dict, oom_fraction: float = 0.0):
+    eng = KubeAdaptor(EngineConfig(
+        timing=TimingConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                            duration_multiplier=1.0, batch_window=3.0,
+                            oom_fraction=oom_fraction),
+    ).evolve(allocator="aras", num_clusters=k, incremental_state=incremental,
+             fault_schedule=schedule, fault_params=params))
+    for t, wf in _ARRIVALS:
+        eng.submit(wf, t)
+    return eng.run()
+
+
+@pytest.mark.parametrize("k", [1, 2])
+@pytest.mark.parametrize("schedule,params", [
+    ("node_crash", {"at": 5.0, "nodes": 2}),
+    ("node_flap", {"at": 3.0, "down_for": 6.0, "nodes": 2}),
+])
+def test_chaos_incremental_matches_repad(k, schedule, params):
+    """Node down/up capacity deltas ride the same dirty-node journal as
+    pod binds — the device-resident state stays bit-for-bit with the
+    host re-pad path through cordons, drains, and restorations."""
+    _assert_metrics_equal(_chaos_metrics(k, True, schedule, params),
+                          _chaos_metrics(k, False, schedule, params))
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_oom_selfheal_incremental_matches_repad(k):
+    """The OOM kill → reallocate-with-learned-floor loop under federation:
+    identical healing with the dirty-tile dispatch on or off."""
+    a = _chaos_metrics(k, True, "oom_storm", {"at": 4.0, "victims": 2},
+                       oom_fraction=1.0)
+    b = _chaos_metrics(k, False, "oom_storm", {"at": 4.0, "victims": 2},
+                       oom_fraction=1.0)
+    assert a.oom_events == b.oom_events and a.oom_events
+    _assert_metrics_equal(a, b)
 
 
 # --------------------------------------------- serving-level parity
@@ -311,7 +356,9 @@ def test_stream_stats_schema():
     d = stats.to_dict()
     assert set(d) == {"decisions", "dispatches", "wall_seconds",
                       "decisions_per_sec", "p50_latency_s",
-                      "p99_latency_s", "overlapped_ingests"}
+                      "p99_latency_s", "overlapped_ingests",
+                      "shed_workflows", "deferred_workflows"}
+    assert d["shed_workflows"] == 0 and d["deferred_workflows"] == 0
     assert d["decisions"] > 0 and d["dispatches"] > 0
     assert d["decisions_per_sec"] > 0.0
     assert 0.0 < d["p50_latency_s"] <= d["p99_latency_s"]

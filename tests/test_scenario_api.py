@@ -65,8 +65,8 @@ def test_builtin_registry_entries():
 
     assert BACKENDS.names() == ("pallas", "scan")
     assert ARRIVALS.names() == ("constant", "jittered", "linear", "poisson",
-                                "pyramid", "trace")
-    for name in ("poisson", "jittered"):
+                                "pyramid", "spike", "trace")
+    for name in ("poisson", "jittered", "spike"):
         assert ARRIVALS.get(name).supports("stochastic"), name
     for name in ("constant", "linear", "pyramid", "trace"):
         assert not ARRIVALS.get(name).supports("stochastic"), name
