@@ -4,7 +4,7 @@ The paper's Go loops are O(nodes × pods) per allocation; our JAX
 implementation is one fused segment-sum + a branchless lattice, and the
 engine decides an entire arrival burst in a single fused dispatch.
 
-Three benchmarks:
+Four benchmarks:
 
 * ``core``   — the evaluator kernel alone (discover + summarize +
   vmapped Alg. 3), as in the seed: raw device throughput.
@@ -23,6 +23,12 @@ Three benchmarks:
   carries a handful of rows, so the O(nodes) per-dispatch re-staging is
   the dominant cost the incremental path removes — the
   ``p50_improvement`` column is that win.
+* ``forecast`` (``--forecast``) — **predictive allocation**: the same
+  ramping Poisson stream served twice, static-window ARAS vs the
+  forecast-driven ``adaptive_scaling`` allocator
+  (``EngineConfig.forecast`` / ``repro.forecast``) — the
+  ``makespan_improvement`` / ``dispatch_reduction`` columns are the
+  predictive win the scenario grid gates on.
 
 Usage::
 
@@ -33,6 +39,7 @@ Usage::
     PYTHONPATH=src python benchmarks/allocator_scale.py --placement all
     PYTHONPATH=src python benchmarks/allocator_scale.py --stream --nodes 100000
     PYTHONPATH=src python benchmarks/allocator_scale.py --stream --chaos --nodes 64
+    PYTHONPATH=src python benchmarks/allocator_scale.py --forecast --skip-core --skip-engine
     PYTHONPATH=src python benchmarks/allocator_scale.py --json BENCH_allocator.json
 
 The engine benchmark takes a ``--clusters`` axis (federated multi-cluster
@@ -310,6 +317,69 @@ def report_stream(num_nodes: int, arrivals: int, repeats: int,
     return out
 
 
+# --------------------------------------------------------------- forecast
+
+def report_forecast(num_nodes: int, seed: int = 7) -> dict:
+    """Predictive allocation vs static ARAS on a ramping Poisson stream.
+
+    Both runs serve the same contended trace through the streaming loop
+    (honest prediction: the forecaster only ever sees past arrivals).
+    The adaptive run uses the ``adaptive_scaling`` allocator with the
+    default ``ForecastConfig`` — the makespan/dispatch deltas are the
+    predictive-allocation win the scenario grid gates on.
+    """
+    from repro.api import ForecastConfig, Scenario, run_scenario
+
+    eng = EngineConfig(
+        cluster=ClusterConfig(num_nodes=num_nodes),
+        invariant_checks=False,
+    )
+    base = Scenario(
+        name=f"forecast-bench-{num_nodes}n", workflows=("ligo",),
+        arrival="poisson",
+        arrival_params={"lam": 3.0, "bursts": 8, "interval": 60.0,
+                        "seed": seed, "ramp": 3.0},
+        engine=eng, seed=3, stream=True)
+    r_static = run_scenario(base)
+    import dataclasses as _dc
+    r_adaptive = run_scenario(_dc.replace(base, engine=eng.evolve(
+        allocator="adaptive_scaling",
+        forecast=ForecastConfig(enabled=True))))
+
+    def flat(r):
+        return {
+            "makespan": round(r.avg_total_duration, 2),
+            "num_dispatches": r.num_dispatches,
+            "mean_burst_width": round(r.mean_burst_width, 2),
+            "num_waits": r.num_waits,
+            "forecast_predictions": r.forecast_predictions,
+            "mean_forecast_window": round(r.mean_forecast_window, 3),
+            "forecast_ghost_rows": r.forecast_ghost_rows,
+        }
+
+    mk_gain = (r_static.avg_total_duration / r_adaptive.avg_total_duration
+               if r_adaptive.avg_total_duration > 0 else float("inf"))
+    disp_gain = (r_static.num_dispatches / r_adaptive.num_dispatches
+                 if r_adaptive.num_dispatches else float("inf"))
+    print(
+        f"forecast_scale_{num_nodes}n,"
+        f"static={r_static.avg_total_duration:.1f}mk/"
+        f"{r_static.num_dispatches}disp,"
+        f"adaptive={r_adaptive.avg_total_duration:.1f}mk/"
+        f"{r_adaptive.num_dispatches}disp,"
+        f"nodes={num_nodes}|makespan_improvement={mk_gain:.3f}x|"
+        f"dispatch_reduction={disp_gain:.3f}x"
+    )
+    return {
+        "nodes": num_nodes,
+        "arrival": dict(base.arrival_params),
+        "static": flat(r_static),
+        "adaptive": flat(r_adaptive),
+        "makespan_improvement": round(mk_gain, 4),
+        "dispatch_reduction": round(disp_gain, 4),
+    }
+
+
 def report_core(num_nodes: int, burst: int) -> dict:
     dt = bench_core(num_nodes, burst=burst)
     print(f"allocator_scale_{num_nodes}n,{1e6*dt:.0f},"
@@ -351,6 +421,11 @@ def main():
                          "4x --window capped at 8, 0 = one lockstep "
                          "burst; keep it under ~10 s so completions stay "
                          "out of the timed region)")
+    ap.add_argument("--forecast", action="store_true",
+                    help="also run the predictive-allocation benchmark: "
+                         "static-window ARAS vs the forecast-driven "
+                         "adaptive_scaling allocator on the same ramped "
+                         "Poisson stream (makespan + dispatch deltas)")
     ap.add_argument("--stream", action="store_true",
                     help="also run the serving-loop benchmark: a Poisson "
                          "arrival stream through repro.serving.StreamEngine, "
@@ -397,6 +472,7 @@ def main():
         "core": [],
         "engine": [],
         "stream": [],
+        "forecast": [],
     }
     if not args.skip_core:
         for n in core_sizes:
@@ -433,6 +509,10 @@ def main():
                               window=args.window,
                               clusters=args.clusters or 1,
                               chaos=args.chaos))
+    if args.forecast:
+        # Contended small clusters are where prediction moves the
+        # needle; the axis rides --nodes when given, else a 6-node run.
+        results["forecast"].append(report_forecast(args.nodes or 6))
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(results, fh, indent=2)

@@ -17,6 +17,7 @@ from repro.api.config import (
     ClusterConfig,
     EngineConfig,
     FaultConfig,
+    ForecastConfig,
     TimingConfig,
 )
 from repro.api.registry import (
@@ -48,6 +49,7 @@ __all__ = [
     "ClusterConfig",
     "EngineConfig",
     "FaultConfig",
+    "ForecastConfig",
     "TimingConfig",
     "RunResult",
     "Scenario",

@@ -14,8 +14,11 @@ splits it along the paper's own seams:
 * :class:`FaultConfig` — injected chaos (a seed-deterministic
   ``FAULTS`` schedule) plus the graceful-degradation knobs: bounded
   retry budget, exponential backoff, per-workflow deadline.
+* :class:`ForecastConfig` — online arrival forecasting
+  (``repro.forecast``): the adaptive fold window and the predictive
+  ``adaptive_scaling`` allocator's look-ahead knobs.
 
-``EngineConfig`` composes the four (plus the ``invariant_checks`` debug
+``EngineConfig`` composes the five (plus the ``invariant_checks`` debug
 flag), JSON-round-trips via ``to_dict``/``from_dict``, and fails early
 with actionable messages via :meth:`EngineConfig.validate`.
 
@@ -253,6 +256,90 @@ class FaultConfig:
         return self
 
 
+@dataclasses.dataclass(frozen=True)
+class ForecastConfig:
+    """Online arrival forecasting (repro.forecast) — predictive knobs.
+
+    ``enabled=True`` builds an :class:`repro.forecast.ArrivalForecaster`
+    inside the engine: a small in-repo MLP fit online (AdamW) on the
+    windowed inter-arrival gaps of the live injection stream.  Two
+    consumers read it:
+
+    * the **adaptive fold window** — the engine sizes each drained
+      burst's fold deadline from the predicted next inter-arrival gap
+      (``window_scale`` × prediction, capped at ``max_window`` seconds)
+      instead of the static ``TimingConfig.batch_window``;
+    * the **predictive allocator** (``AllocatorConfig.algorithm=
+      "adaptive_scaling"``) — burst decisions price a ghost demand
+      record carrying the expected load of the next ``horizon`` seconds,
+      so ARAS quotas tighten *ahead* of a predicted burst instead of
+      reacting to it.
+
+    ``enabled=False`` (default) builds nothing and the engine is
+    bit-for-bit the static-window engine.  Until ``min_history`` gaps
+    have been observed the forecaster abstains and both consumers fall
+    back to the static behaviour, so cold starts degrade gracefully.
+    All predictions are seed-deterministic given the arrival sequence.
+    """
+
+    enabled: bool = False
+    history: int = 64  # ring buffer of recent inter-arrival gaps
+    window: int = 8  # feature vector: last `window` gaps
+    hidden: int = 16  # MLP hidden width (repro.models.layers.mlp)
+    lr: float = 0.05  # online AdamW learning rate
+    train_every: int = 1  # one fit step per this many observations
+    min_history: int = 12  # observed gaps before predictions are trusted
+    window_scale: float = 1.0  # fold window = scale × predicted gap
+    max_window: float = 4.0  # cap on the adaptive fold window, seconds
+    horizon: float = 60.0  # look-ahead for the ghost demand record, s
+    # The ghost record may claim at most this fraction of the cluster's
+    # current total residual capacity.  Pre-provisioning *shares*
+    # capacity with predicted load; an uncapped ghost under a heavy
+    # forecast would price every present task below its acceptance
+    # floor and starve admission entirely.
+    ghost_cap: float = 0.25
+    seed: int = 0  # forecaster parameter init
+
+    def validate(self) -> "ForecastConfig":
+        if self.window < 1:
+            raise _err(f"ForecastConfig.window must be >= 1, "
+                       f"got {self.window}")
+        if self.history < self.window + 1:
+            raise _err(
+                f"ForecastConfig.history must exceed window (need at "
+                f"least one training pair), got history={self.history}, "
+                f"window={self.window}"
+            )
+        if self.min_history < self.window + 1:
+            raise _err(
+                f"ForecastConfig.min_history must be >= window + 1 "
+                f"(a prediction needs {self.window + 1} observed gaps), "
+                f"got {self.min_history}"
+            )
+        if self.hidden < 1:
+            raise _err(f"ForecastConfig.hidden must be >= 1, "
+                       f"got {self.hidden}")
+        if self.lr <= 0:
+            raise _err(f"ForecastConfig.lr must be > 0, got {self.lr}")
+        if self.train_every < 1:
+            raise _err(f"ForecastConfig.train_every must be >= 1, "
+                       f"got {self.train_every}")
+        if self.window_scale <= 0:
+            raise _err(f"ForecastConfig.window_scale must be > 0, "
+                       f"got {self.window_scale}")
+        if self.max_window < 0:
+            raise _err(f"ForecastConfig.max_window is a cap in seconds, "
+                       f"need >= 0, got {self.max_window}")
+        if self.horizon < 0:
+            raise _err(f"ForecastConfig.horizon is a look-ahead in "
+                       f"seconds, need >= 0, got {self.horizon}")
+        if self.ghost_cap < 0:
+            raise _err(f"ForecastConfig.ghost_cap is a fraction of the "
+                       f"cluster's residual capacity, need >= 0, "
+                       f"got {self.ghost_cap}")
+        return self
+
+
 # Flat evolve() name -> (sub-config field of EngineConfig, field).
 _FLAT_MAP: Dict[str, tuple] = {
     "num_nodes": ("cluster", "num_nodes"),
@@ -281,25 +368,32 @@ _FLAT_MAP: Dict[str, tuple] = {
     "backoff_base": ("faults", "backoff_base"),
     "backoff_factor": ("faults", "backoff_factor"),
     "workflow_timeout": ("faults", "workflow_timeout"),
+    "forecast": ("forecast", "enabled"),
+    "forecast_window": ("forecast", "window"),
+    "forecast_horizon": ("forecast", "horizon"),
+    "forecast_max_window": ("forecast", "max_window"),
+    "forecast_seed": ("forecast", "seed"),
 }
 
 _SUB_TYPES = {"cluster": ClusterConfig, "alloc": AllocatorConfig,
-              "timing": TimingConfig, "faults": FaultConfig}
+              "timing": TimingConfig, "faults": FaultConfig,
+              "forecast": ForecastConfig}
 
 
 def _merge_flat(cluster: ClusterConfig, alloc: AllocatorConfig,
                 timing: TimingConfig, faults: FaultConfig,
-                flat: Dict[str, Any]):
+                forecast: ForecastConfig, flat: Dict[str, Any]):
     """Route flat evolve() names into the sub-configs they live in."""
     unknown = sorted(set(flat) - set(_FLAT_MAP))
     if unknown:
         raise TypeError(
             f"EngineConfig.evolve got unexpected keyword argument(s) "
             f"{unknown}; composed fields are cluster/alloc/timing/faults/"
-            f"invariant_checks, flat field names are {sorted(_FLAT_MAP)}"
+            f"forecast/invariant_checks, flat field names are "
+            f"{sorted(_FLAT_MAP)}"
         )
     parts = {"cluster": cluster, "alloc": alloc, "timing": timing,
-             "faults": faults}
+             "faults": faults, "forecast": forecast}
     updates: Dict[str, Dict[str, Any]] = {}
     for key, value in flat.items():
         part, field = _FLAT_MAP[key]
@@ -307,7 +401,7 @@ def _merge_flat(cluster: ClusterConfig, alloc: AllocatorConfig,
     for part, kwargs in updates.items():
         parts[part] = dataclasses.replace(parts[part], **kwargs)
     return (parts["cluster"], parts["alloc"], parts["timing"],
-            parts["faults"])
+            parts["faults"], parts["forecast"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -329,6 +423,8 @@ class EngineConfig:
     alloc: AllocatorConfig = AllocatorConfig()
     timing: TimingConfig = TimingConfig()
     faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+    forecast: ForecastConfig = dataclasses.field(
+        default_factory=ForecastConfig)
     # Per-event O(nodes+pods) accounting cross-checks; disable for
     # large-scale benchmarking.
     invariant_checks: bool = True
@@ -347,19 +443,36 @@ class EngineConfig:
         alloc = updates.pop("alloc", self.alloc)
         timing = updates.pop("timing", self.timing)
         faults = updates.pop("faults", self.faults)
+        # evolve(forecast=...) is overloaded the way the field reads
+        # naturally: a ForecastConfig replaces the sub-config, a bool
+        # routes to ForecastConfig.enabled via the flat map.
+        forecast = self.forecast
+        if isinstance(updates.get("forecast"), ForecastConfig):
+            forecast = updates.pop("forecast")
         checks = updates.pop("invariant_checks", self.invariant_checks)
-        cluster, alloc, timing, faults = _merge_flat(
-            cluster, alloc, timing, faults, updates)
+        cluster, alloc, timing, faults, forecast = _merge_flat(
+            cluster, alloc, timing, faults, forecast, updates)
         return EngineConfig(cluster=cluster, alloc=alloc, timing=timing,
-                            faults=faults, invariant_checks=checks)
+                            faults=faults, forecast=forecast,
+                            invariant_checks=checks)
 
     # ---------------------------------------------------------- validation
     def validate(self) -> "EngineConfig":
         """Fail early, with actionable messages, on an invalid config."""
+        from repro.api.registry import ALLOCATORS
+
         self.cluster.validate()
         self.alloc.validate()
         self.timing.validate()
         self.faults.validate()
+        self.forecast.validate()
+        if ALLOCATORS.get(self.alloc.algorithm).supports("forecast") \
+                and not self.forecast.enabled:
+            raise _err(
+                f"allocator {self.alloc.algorithm!r} is forecast-driven; "
+                f"set forecast=ForecastConfig(enabled=True) (or "
+                f"evolve(forecast=True)) to feed it predictions"
+            )
         return self
 
     # --------------------------------------------------------- (de)serial
@@ -371,6 +484,7 @@ class EngineConfig:
             "alloc": dataclasses.asdict(self.alloc),
             "timing": dataclasses.asdict(self.timing),
             "faults": faults,
+            "forecast": dataclasses.asdict(self.forecast),
             "invariant_checks": self.invariant_checks,
         }
 
@@ -380,8 +494,9 @@ class EngineConfig:
         if unknown:
             raise ValueError(
                 f"unknown EngineConfig field(s) {unknown} "
-                f"(want cluster/alloc/timing/faults/invariant_checks; "
-                f"flat fields do not appear in the serialized form)"
+                f"(want cluster/alloc/timing/faults/forecast/"
+                f"invariant_checks; flat fields do not appear in the "
+                f"serialized form)"
             )
         kwargs: Dict[str, Any] = {}
         for part, sub_cls in _SUB_TYPES.items():

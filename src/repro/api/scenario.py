@@ -171,7 +171,23 @@ def grid(base: Scenario, *,
     carrying the ``stochastic`` capability flag (``poisson``,
     ``jittered``) — the arrival timestamps too, since the scenario seed
     feeds the arrival builder unless ``arrival_params`` pins one.
+
+    Forecast-capable allocators (the ``forecast`` capability flag, e.g.
+    ``adaptive_scaling``) get ``EngineConfig.forecast`` enabled
+    automatically when the base engine leaves it off, so
+    ``allocators=("aras", "adaptive_scaling")`` sweeps static-vs-
+    predictive without a hand-built engine per cell; an explicit
+    ``base.engine.forecast`` is kept as-is for every cell.
     """
+    from repro.api.registry import ALLOCATORS
+
+    def _engine_for(algorithm: str) -> EngineConfig:
+        engine = base.engine.evolve(allocator=algorithm)
+        if ALLOCATORS.get(algorithm).supports("forecast") \
+                and not engine.forecast.enabled:
+            engine = engine.evolve(forecast=True)
+        return engine
+
     seed_axis: Tuple[Optional[int], ...] = \
         (None,) if seeds is None else tuple(seeds)
     return [
@@ -180,7 +196,7 @@ def grid(base: Scenario, *,
             name=(f"{base.name}-{algorithm}-{arrival}"
                   + ("" if seed is None else f"-s{seed}")),
             arrival=arrival,
-            engine=base.engine.evolve(allocator=algorithm),
+            engine=_engine_for(algorithm),
             seed=base.seed if seed is None else seed,
         )
         for algorithm in allocators
@@ -229,6 +245,14 @@ class RunResult:
     num_failed_tasks: int = 0
     num_failed_workflows: int = 0
     mean_time_to_recovery: float = 0.0
+    # Forecast telemetry (EngineConfig.forecast / repro.forecast):
+    # arrivals observed, drains sized by a live prediction, the mean
+    # adaptive fold window they used, and burst decisions that priced a
+    # ghost forecast-demand record (adaptive_scaling allocator).
+    forecast_observations: int = 0
+    forecast_predictions: int = 0
+    mean_forecast_window: float = 0.0
+    forecast_ghost_rows: int = 0
     # Serving telemetry (Scenario.stream=True): StreamStats wired in so
     # grid() sweeps can gate on serving latency, not just makespan.
     decisions_per_sec: float = 0.0
@@ -314,6 +338,10 @@ def run_scenario(scenario: Scenario) -> RunResult:
         num_failed_tasks=len(metrics.failed_tasks),
         num_failed_workflows=len(metrics.failed_workflows),
         mean_time_to_recovery=metrics.mean_time_to_recovery,
+        forecast_observations=metrics.forecast_observations,
+        forecast_predictions=metrics.forecast_predictions,
+        mean_forecast_window=metrics.mean_forecast_window,
+        forecast_ghost_rows=metrics.forecast_ghost_rows,
         decisions_per_sec=stats.decisions_per_sec if stats else 0.0,
         p50_latency_us=1e6 * stats.p50_latency_s if stats else 0.0,
         p99_latency_us=1e6 * stats.p99_latency_s if stats else 0.0,

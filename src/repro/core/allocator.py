@@ -918,6 +918,30 @@ def _build_aras(**kwargs) -> AdaptiveAllocator:
 
 
 @ALLOCATORS.register(
+    "adaptive_scaling",
+    capabilities=("adaptive_scaling", "federation_aware",
+                  "lifecycle_window", "device_state", "forecast"),
+    doc="predictive ARAS: Alg. 3 priced against forecast-horizon demand "
+        "(repro.forecast ghost record)")
+def _build_adaptive_scaling(**kwargs) -> AdaptiveAllocator:
+    """ARAS arithmetic, predictive demand window.
+
+    The allocator itself is the unmodified :class:`AdaptiveAllocator`
+    (mode ``"aras"`` — same fused kernel, bit-identical sequential
+    core).  The ``forecast`` capability is what changes behaviour: the
+    engine appends a *ghost record* to the knowledge-base window of
+    every burst decision, carrying the expected resource demand of the
+    forecast horizon (``repro.forecast.ArrivalForecaster.
+    horizon_demand``).  Alg. 1's request accumulation then prices load
+    that has not arrived yet, so Alg. 3's proportional cuts tighten
+    quotas *ahead* of a predicted burst — pre-provisioning — instead of
+    waiting for the burst to saturate the cluster.  Requires
+    ``ForecastConfig.enabled`` (EngineConfig.validate enforces it).
+    """
+    return AdaptiveAllocator(name="adaptive_scaling", **kwargs)
+
+
+@ALLOCATORS.register(
     "fcfs",
     aliases=("baseline",),
     capabilities=("federation_aware", "device_state"),

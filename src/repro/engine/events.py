@@ -18,10 +18,13 @@ This module extracts it into a small, testable subsystem:
   (retry/ready/heal) due at or before a deadline, or a *later* ``INJECT``
   within the deadline (injection creates READY events without touching
   cluster capacity, so jittered arrival streams fold through it).  The
-  engine's drain loop uses it to fold every allocatable event within
-  ``TimingConfig.batch_window`` seconds of the head event into a single
-  fused ``allocate_batch`` dispatch ("decide at t+ε").  With
-  ``batch_window=0.0`` the deadline is the head's own timestamp, so only
+  engine's drain loop uses it to fold every allocatable event within the
+  fold window of the head event into a single fused ``allocate_batch``
+  dispatch ("decide at t+ε").  The window is
+  ``TimingConfig.batch_window`` seconds, or — when a forecast is enabled
+  — whatever ``KubeAdaptor.fold_window()`` derives from the predicted
+  inter-arrival gap.  With a zero-width window the deadline is the
+  head's own timestamp, so only
   same-timestamp allocatable events fold (and the inject clause, which
   requires a strictly later timestamp, can never fire) — bit-for-bit the
   legacy drain.
@@ -103,8 +106,9 @@ class EventQueue:
     def pop_mergeable(self, head_t: float, deadline: float,
                       fold_capacity_free: bool = False) -> Optional[Event]:
         """Pop the head iff it can fold into the burst drained at
-        ``head_t`` with fold deadline ``deadline`` (= ``head_t +
-        batch_window``).
+        ``head_t`` with fold deadline ``deadline`` (= ``head_t`` plus the
+        engine's fold window — static ``batch_window`` or the
+        forecast-derived width from ``KubeAdaptor.fold_window()``).
 
         Foldable heads are (a) allocatable requests (retry/ready/heal)
         due at or before the deadline, and (b) ``INJECT`` events strictly

@@ -85,6 +85,7 @@ from repro.core.types import (
     PodPhase,
     TaskBatch,
     TaskSpec,
+    TaskWindow,
 )
 from repro.engine.events import ALLOCATABLE, Event, EventKind, EventQueue
 from repro.engine.state_store import StateStore, TaskRecord
@@ -162,6 +163,20 @@ class EngineMetrics:
     failed_workflows: List[Tuple[float, str, str]] = dataclasses.field(
         default_factory=list  # (t, workflow, "retry_budget"|"deadline")
     )
+    # Forecast telemetry (EngineConfig.forecast / repro.forecast):
+    # arrivals observed, drains whose fold window came from a live
+    # prediction (+ the summed window for the mean), and burst decisions
+    # that priced a ghost forecast-demand record (adaptive_scaling).
+    forecast_observations: int = 0
+    forecast_predictions: int = 0
+    forecast_window_sum: float = 0.0
+    forecast_ghost_rows: int = 0
+
+    @property
+    def mean_forecast_window(self) -> float:
+        """Mean adaptive fold window across predicted drains, seconds."""
+        return (self.forecast_window_sum / self.forecast_predictions
+                if self.forecast_predictions else 0.0)
 
     @property
     def sla_violation_rate(self) -> float:
@@ -237,6 +252,21 @@ class KubeAdaptor:
             and self.allocator._mesh() is None
         )
         self._state = None  # DeviceResidualState, created on first burst
+        # Online arrival forecasting (EngineConfig.forecast).  The
+        # forecaster observes every injection; the drain sizes its fold
+        # window from the predicted gap, and forecast-capable allocators
+        # (``adaptive_scaling``) additionally price a ghost record
+        # carrying the forecast-horizon demand.  Disabled (default) the
+        # attribute stays None and every consumer takes the static path
+        # — bit-for-bit today's engine.
+        self._predictive = entry.supports("forecast")
+        if config.forecast.enabled:
+            from repro.forecast import ArrivalForecaster
+
+            self._forecaster: Optional[ArrivalForecaster] = \
+                ArrivalForecaster(config.forecast)
+        else:
+            self._forecaster = None
         # Streaming overlap hook: called between issuing a fused dispatch
         # and syncing its results, while the device is busy
         # (repro.serving.stream sets it to pump arrival ingestion).
@@ -297,6 +327,15 @@ class KubeAdaptor:
     # -------------------------------------------------------------- phases
     def _inject(self, spec: WorkflowSpec) -> None:
         """Workflow Injection Module + Interface Unit decomposition."""
+        if self._forecaster is not None:
+            # One observation per arrival: timestamp + total declared
+            # demand (the horizon-demand intensity estimate).
+            self._forecaster.observe(
+                self._now,
+                cpu=sum(t.cpu for t in spec.tasks.values()),
+                mem=sum(t.mem for t in spec.tasks.values()),
+            )
+            self.metrics.forecast_observations += 1
         run = WorkflowRun(spec=spec, injected_at=self._now,
                           indegree=spec.indegrees())
         self.runs[spec.workflow_id] = run
@@ -324,6 +363,64 @@ class KubeAdaptor:
                 for wf_id, task, _ in entries
             ],
             pending=[origin == "pending" for _, _, origin in entries],
+        )
+
+    def fold_window(self) -> float:
+        """Seconds of fold entitlement for the next drained burst.
+
+        The static ``TimingConfig.batch_window`` unless forecasting is
+        enabled *and* the forecaster has enough history, in which case
+        the window is sized from the predicted next inter-arrival gap
+        (``repro.forecast.ArrivalForecaster.fold_window``).  Public
+        because the serving pump (``repro.serving.stream``) must grant
+        the engine exactly this entitlement when deciding which
+        arrivals the next step may see.
+        """
+        if self._forecaster is None:
+            return self.cfg.timing.batch_window
+        return self._forecaster.fold_window(self.cfg.timing.batch_window)
+
+    def _alloc_window(self) -> TaskWindow:
+        """The knowledge-base window a burst decision prices against.
+
+        For forecast-capable allocators (``adaptive_scaling``) with a
+        live prediction, one *ghost record* is appended: stamped at
+        ``now``, never done, carrying the expected resource demand of
+        the forecast horizon.  Alg. 1's request accumulation then sees
+        load that has not arrived yet and Alg. 3's proportional cuts
+        tighten quotas ahead of the predicted burst — predictive
+        pre-provisioning with zero kernel changes.  The ghost lives
+        only in this per-decision view; the store itself is untouched.
+        """
+        window = self.store.window()
+        if not self._predictive or self._forecaster is None:
+            return window
+        # Present demand outranks predicted demand: while tasks already
+        # sit in the retry queue the cluster is refusing real admissions,
+        # and a ghost on top would tighten quotas further — each
+        # no-progress round arms the exponential backoff gate, so the
+        # compounding idle time dwarfs any pre-provisioning benefit.
+        if self._pending:
+            return window
+        ghost_cpu, ghost_mem = self._forecaster.horizon_demand()
+        # Bound the ghost to a fraction of what the cluster could even
+        # give: pre-provisioning shares capacity with predicted load,
+        # it must never starve present admissions below their floors.
+        res_cpu, res_mem = self.cluster.residual_view()
+        cap = self.cfg.forecast.ghost_cap
+        ghost_cpu = min(ghost_cpu, cap * float(np.sum(res_cpu)))
+        ghost_mem = min(ghost_mem, cap * float(np.sum(res_mem)))
+        if ghost_cpu <= 0.0 and ghost_mem <= 0.0:
+            return window
+        self.metrics.forecast_ghost_rows += 1
+        # Appending keeps every existing slot index valid (self-exclusion
+        # masks point at unchanged positions); the store's free tail
+        # slots are done=True and numerically inert either way.
+        return TaskWindow(
+            t_start=np.append(window.t_start, np.float32(self._now)),
+            cpu=np.append(window.cpu, np.float32(ghost_cpu)),
+            mem=np.append(window.mem, np.float32(ghost_mem)),
+            done=np.append(window.done, False),
         )
 
     def _flush_state(self):
@@ -365,7 +462,7 @@ class KubeAdaptor:
         if self._use_device_state:
             state, updates = self._flush_state()
             pending = self.allocator.allocate_batch_async(
-                self._batch_of(entries), self.store.window(), self._now,
+                self._batch_of(entries), self._alloc_window(), self._now,
                 state=state, updates=updates,
             )
             self._state = pending.state
@@ -375,8 +472,9 @@ class KubeAdaptor:
         res_cpu, res_mem = self.cluster.residual_view()
         cap_cpu, cap_mem = self.cluster.capacity_view()
         return self.allocator.allocate_batch(
-            self._batch_of(entries), res_cpu, res_mem, self.store.window(),
-            self._now, cap_cpu=cap_cpu, cap_mem=cap_mem,
+            self._batch_of(entries), res_cpu, res_mem,
+            self._alloc_window(), self._now,
+            cap_cpu=cap_cpu, cap_mem=cap_mem,
         )
 
     def _decision_rows(self, entries: List[Tuple[str, TaskSpec, str]]):
@@ -398,7 +496,7 @@ class KubeAdaptor:
             cap_cpu, cap_mem = self.cluster.capacity_view()
             replay = self.allocator.begin_replay(
                 self._batch_of(entries), res_cpu, res_mem,
-                self.store.window(), self._now,
+                self._alloc_window(), self._now,
                 cap_cpu=cap_cpu, cap_mem=cap_mem,
             )
             for i in range(len(entries)):
@@ -552,11 +650,18 @@ class KubeAdaptor:
         pod's outcome and schedules self-healing).  With
         ``batch_window=0.0`` the deadline is the head's own timestamp
         and only same-timestamp allocatable events fold — the seed's
-        lockstep drain, bit for bit.  Both engine modes share this
-        drain; they differ only in how the group is decided (one fused
-        dispatch vs the row-at-a-time replay — see ``_decision_rows``).
+        lockstep drain, bit for bit.  With forecasting enabled the
+        window comes from :meth:`fold_window` instead — sized per burst
+        from the predicted next inter-arrival gap.  Both engine modes
+        share this drain; they differ only in how the group is decided
+        (one fused dispatch vs the row-at-a-time replay — see
+        ``_decision_rows``).
         """
-        deadline = first.t + self.cfg.timing.batch_window
+        window = self.fold_window()
+        if self._forecaster is not None and self._forecaster.ready:
+            self.metrics.forecast_predictions += 1
+            self.metrics.forecast_window_sum += window
+        deadline = first.t + window
         include_pending = False
         entries: List[Tuple[str, TaskSpec, str]] = []
         event: Optional[Event] = first

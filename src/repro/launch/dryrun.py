@@ -181,8 +181,20 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
     return out
 
 
-def analyse(lowered, compiled) -> Dict[str, Any]:
+def cost_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` normalized to a flat dict.
+
+    Depending on the jax version the method returns either a dict or a
+    one-element list of dicts (one per executable); collapse both forms.
+    """
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def analyse(lowered, compiled) -> Dict[str, Any]:
+    cost = cost_dict(compiled)
     mem = compiled.memory_analysis()
     mem_info: Dict[str, Any] = {}
     for attr in ("argument_size_in_bytes", "output_size_in_bytes",
@@ -246,7 +258,7 @@ def _cell_costs(cfg: ModelConfig, policy: ShardingPolicy, shape: ShapeSpec,
     else:
         lowered = lower_decode(model, policy, shape)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -573,35 +573,19 @@ def mamba_decode_step(
     conv_state: jax.Array,  # [B, d_conv-1, di]
     ssm_state: jax.Array,  # [B, di, n]
 ):
-    """O(1) single-token state update (no sequence dimension)."""
-    s = cfg.ssm
-    dt_ = x.dtype
-    B = x.shape[0]
+    """O(1) single-token state update: ``mamba`` at S=1 with carried state.
 
-    xz = x[:, 0] @ params["w_in"].astype(dt_)
-    xp, z = jnp.split(xz, 2, axis=-1)  # [B,di]
-
-    window = jnp.concatenate([conv_state.astype(dt_), xp[:, None]], axis=1)
-    conv_w = params["conv_w"].astype(dt_)
-    xc = jnp.einsum("bcd,cd->bd", window, conv_w) + params["conv_b"].astype(dt_)
-    xc = jax.nn.silu(xc)
-    new_conv_state = window[:, 1:]
-
-    dbc = xc @ params["w_x"].astype(dt_)
-    dt = jax.nn.softplus(
-        (dbc[..., : s.dt_rank] @ params["w_dt"].astype(dt_)).astype(jnp.float32)
-        + params["b_dt"]
-    )  # [B,di]
-    Bc = dbc[..., s.dt_rank: s.dt_rank + s.d_state].astype(jnp.float32)
-    Cc = dbc[..., s.dt_rank + s.d_state:].astype(jnp.float32)
-
-    A = -jnp.exp(params["A_log"])
-    da = jnp.exp(dt[..., None] * A)  # [B,di,n]
-    h = da * ssm_state.astype(jnp.float32) + \
-        (dt * xc.astype(jnp.float32))[..., None] * Bc[:, None, :]
-    y = jnp.einsum("bdn,bn->bd", h, Cc) + params["D"] * xc.astype(jnp.float32)
-    y = y.astype(dt_) * jax.nn.silu(z)
-    out = (y @ params["w_out"].astype(dt_))[:, None]
+    Delegating to the block form keeps every op (tap-ordered conv sum,
+    GEMM shapes, fp32 cast points) identical to prefill/forward, so
+    teacher-forced decode is bit-exact against the full-sequence pass in
+    bf16 — low-precision drift here used to flip near-tied MoE router
+    top-k picks in the hybrid stack (see test_arch_smoke cache parity).
+    At S=1 the chunked scan degenerates to the same h = da*h0 + dbx
+    recurrence this function previously hand-inlined.
+    """
+    out, (new_conv_state, h) = mamba(
+        params, cfg, x,
+        conv_state=conv_state, ssm_state=ssm_state, return_state=True)
     return out, new_conv_state, h
 
 

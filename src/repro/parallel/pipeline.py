@@ -17,6 +17,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
@@ -59,10 +60,10 @@ def pipeline_apply(
         mask = (stage == S - 1).astype(outbuf.dtype)
         return jax.lax.psum(outbuf * mask, axis)
 
-    return jax.shard_map(
+    return shard_map(
         per_stage, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(axis), stage_params),
                   P(*([None] * x.ndim))),
         out_specs=P(*([None] * x.ndim)),
-        check_vma=False,
+        check_rep=False,
     )(stage_params, x)

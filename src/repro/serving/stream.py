@@ -145,11 +145,15 @@ class StreamEngine:
         are submitted at the engine clock — time never runs backwards.
         """
         engine = self.engine
-        window = engine.cfg.timing.batch_window
         while self._next < len(self._arrivals):
             head = engine.queue.peek()
             t, spec = self._arrivals[self._next]
-            if head is not None and t > head.t + window:
+            # The entitlement window is re-read per arrival: with
+            # forecasting enabled (EngineConfig.forecast) the engine
+            # sizes its fold deadline from the predicted inter-arrival
+            # gap, and the pump must grant exactly that look-ahead.
+            # Forecast off, this is the static batch_window as before.
+            if head is not None and t > head.t + engine.fold_window():
                 break
             if self._backlogged():
                 if self._overload_policy == "shed":

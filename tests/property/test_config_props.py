@@ -18,6 +18,7 @@ from repro.api import (  # noqa: E402
     ClusterConfig,
     EngineConfig,
     FaultConfig,
+    ForecastConfig,
     Scenario,
     TimingConfig,
 )
@@ -71,8 +72,30 @@ _faults = st.builds(
                              allow_nan=False),
     workflow_timeout=st.one_of(st.none(), _pos),
 )
+# history/min_history must exceed the feature window, so the window is
+# drawn first and the dependent fields derive their floor from it.
+_forecast = st.integers(min_value=1, max_value=8).flatmap(
+    lambda w: st.builds(
+        ForecastConfig,
+        enabled=st.booleans(),
+        history=st.integers(min_value=w + 1, max_value=256),
+        window=st.just(w),
+        hidden=st.integers(min_value=1, max_value=64),
+        lr=st.floats(min_value=1e-4, max_value=1.0, allow_nan=False),
+        train_every=st.integers(min_value=1, max_value=8),
+        min_history=st.integers(min_value=w + 1, max_value=256),
+        window_scale=st.floats(min_value=0.1, max_value=4.0,
+                               allow_nan=False),
+        max_window=st.floats(min_value=0.0, max_value=60.0,
+                             allow_nan=False),
+        horizon=st.floats(min_value=0.0, max_value=600.0,
+                          allow_nan=False),
+        ghost_cap=st.floats(min_value=0.0, max_value=2.0,
+                            allow_nan=False),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    ))
 _engine = st.builds(EngineConfig, cluster=_cluster, alloc=_alloc,
-                    timing=_timing, faults=_faults,
+                    timing=_timing, faults=_faults, forecast=_forecast,
                     invariant_checks=st.booleans())
 
 _scenario = st.builds(
@@ -113,7 +136,8 @@ def test_evolve_routes_any_flat_key_subset(cfg, keys):
         part, field = _FLAT_MAP[key]
         flat[key] = getattr(getattr(cfg, part), field)
     parts = {"cluster": ClusterConfig(), "alloc": AllocatorConfig(),
-             "timing": TimingConfig(), "faults": FaultConfig()}
+             "timing": TimingConfig(), "faults": FaultConfig(),
+             "forecast": ForecastConfig()}
     for key, value in flat.items():
         part, field = _FLAT_MAP[key]
         parts[part] = dataclasses.replace(parts[part], **{field: value})

@@ -57,15 +57,7 @@ def test_train_step_decreases_loss(built, arch):
     assert float(l1) < float(l0), f"{arch}: loss {l0} -> {l1}"
 
 
-# jamba-1.5-large-398b has failed decode/forward cache parity since the
-# repo was seeded (hybrid attn+mamba cache path, unrelated to the
-# control plane — tracked in ROADMAP "Seeded model-stack failures").
-@pytest.mark.parametrize("arch", [
-    pytest.param(a, marks=pytest.mark.xfail(
-        strict=False, reason="seeded failure: jamba hybrid cache parity"))
-    if a == "jamba-1.5-large-398b" else a
-    for a in ARCH_IDS
-])
+@pytest.mark.parametrize("arch", ARCH_IDS)
 def test_prefill_decode_matches_forward(built, arch):
     """Teacher-forced decode must reproduce forward logits (cache parity).
 

@@ -52,7 +52,7 @@ SMALL_ARRIVALS = {
 # ------------------------------------------------------------- registries
 
 def test_builtin_registry_entries():
-    assert ALLOCATORS.names() == ("aras", "fcfs")
+    assert ALLOCATORS.names() == ("adaptive_scaling", "aras", "fcfs")
     assert "baseline" in ALLOCATORS  # alias
     assert ALLOCATORS.get("baseline").name == "fcfs"
     assert ALLOCATORS.get("aras").supports("adaptive_scaling")
@@ -70,7 +70,7 @@ def test_builtin_registry_entries():
         assert ARRIVALS.get(name).supports("stochastic"), name
     for name in ("constant", "linear", "pyramid", "trace"):
         assert not ARRIVALS.get(name).supports("stochastic"), name
-    assert len(list(ALLOCATORS)) == 2
+    assert len(list(ALLOCATORS)) == 3
 
 
 @pytest.mark.parametrize("registry,noun", [
