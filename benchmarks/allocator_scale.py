@@ -4,7 +4,7 @@ The paper's Go loops are O(nodes × pods) per allocation; our JAX
 implementation is one fused segment-sum + a branchless lattice, and the
 engine decides an entire arrival burst in a single fused dispatch.
 
-Four benchmarks:
+Five benchmarks:
 
 * ``core``   — the evaluator kernel alone (discover + summarize +
   vmapped Alg. 3), as in the seed: raw device throughput.
@@ -29,6 +29,11 @@ Four benchmarks:
   (``EngineConfig.forecast`` / ``repro.forecast``) — the
   ``makespan_improvement`` / ``dispatch_reduction`` columns are the
   predictive win the scenario grid gates on.
+* ``vertical`` (``--vertical``) — **vertical adaptivity (ARC-V)**: the
+  same decaying usage-curve trace run twice, static engine vs the
+  in-place resize controller (``EngineConfig.vertical`` /
+  ``repro.vertical``) — the ``resizes`` / ``reclaimed`` columns are the
+  over-provisioned capacity the controller hands back to admission.
 
 Usage::
 
@@ -40,6 +45,7 @@ Usage::
     PYTHONPATH=src python benchmarks/allocator_scale.py --stream --nodes 100000
     PYTHONPATH=src python benchmarks/allocator_scale.py --stream --chaos --nodes 64
     PYTHONPATH=src python benchmarks/allocator_scale.py --forecast --skip-core --skip-engine
+    PYTHONPATH=src python benchmarks/allocator_scale.py --vertical --skip-core --skip-engine
     PYTHONPATH=src python benchmarks/allocator_scale.py --json BENCH_allocator.json
 
 The engine benchmark takes a ``--clusters`` axis (federated multi-cluster
@@ -380,6 +386,69 @@ def report_forecast(num_nodes: int, seed: int = 7) -> dict:
     }
 
 
+# --------------------------------------------------------------- vertical
+
+def report_vertical(num_nodes: int, seed: int = 3) -> dict:
+    """In-place resize (ARC-V) vs the static engine on a decaying ramp.
+
+    Both runs execute the same seeded usage-curve trace — actual
+    consumption decays from 90% to 20% of the admitted quota.  The
+    vertical run's controller shrinks the over-provisioned Running pods
+    and the pending queue admits against the reclaimed capacity; the
+    static run holds every quota until completion.  ``resizes`` and
+    ``reclaimed`` are the telemetry the CI vertical smoke gates on.
+    """
+    import dataclasses as _dc
+
+    from repro.api import Scenario, run_scenario
+
+    eng = EngineConfig(
+        cluster=ClusterConfig(num_nodes=num_nodes),
+        invariant_checks=False,
+    )
+    base = Scenario(
+        name=f"vertical-bench-{num_nodes}n", workflows=("montage",),
+        arrival="constant",
+        arrival_params={"y": 4, "bursts": 2, "interval": 30.0},
+        usage_curves={"montage": {"curve": "ramp",
+                                  "params": {"start": 0.9, "end": 0.2}}},
+        engine=eng, seed=seed)
+    r_static = run_scenario(base)
+    r_vert = run_scenario(_dc.replace(base, engine=eng.evolve(
+        vertical=True, resize_interval=15.0)))
+
+    def flat(r):
+        return {
+            "makespan": round(r.avg_total_duration, 2),
+            "num_dispatches": r.num_dispatches,
+            "num_waits": r.num_waits,
+            "resizes": r.num_resizes,
+            "shrinks": r.num_shrinks,
+            "grows": r.num_grows,
+            "reclaimed": {
+                "cpu_seconds": round(r.reclaimed_cpu_seconds, 1),
+                "mem_seconds": round(r.reclaimed_mem_seconds, 1),
+            },
+        }
+
+    print(
+        f"vertical_scale_{num_nodes}n,"
+        f"static={r_static.avg_total_duration:.1f}mk,"
+        f"vertical={r_vert.avg_total_duration:.1f}mk,"
+        f"nodes={num_nodes}|resizes={r_vert.num_resizes}|"
+        f"reclaimed_cpu_s={r_vert.reclaimed_cpu_seconds:.0f}|"
+        f"reclaimed_mem_s={r_vert.reclaimed_mem_seconds:.0f}"
+    )
+    return {
+        "nodes": num_nodes,
+        "curve": dict(base.usage_curves["montage"]["params"]),
+        "static": flat(r_static),
+        "vertical": flat(r_vert),
+        "resizes": r_vert.num_resizes,
+        "reclaimed": flat(r_vert)["reclaimed"],
+    }
+
+
 def report_core(num_nodes: int, burst: int) -> dict:
     dt = bench_core(num_nodes, burst=burst)
     print(f"allocator_scale_{num_nodes}n,{1e6*dt:.0f},"
@@ -438,6 +507,10 @@ def main():
                          "mid-stream (repro.chaos node_crash): the "
                          "measured path then includes cordon, drain and "
                          "HEAL re-admission traffic")
+    ap.add_argument("--vertical", action="store_true",
+                    help="run the vertical-adaptivity comparison: static "
+                         "engine vs the ARC-V resize controller on a "
+                         "decaying usage-curve trace")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-core", action="store_true")
@@ -473,6 +546,7 @@ def main():
         "engine": [],
         "stream": [],
         "forecast": [],
+        "vertical": [],
     }
     if not args.skip_core:
         for n in core_sizes:
@@ -513,6 +587,10 @@ def main():
         # Contended small clusters are where prediction moves the
         # needle; the axis rides --nodes when given, else a 6-node run.
         results["forecast"].append(report_forecast(args.nodes or 6))
+    if args.vertical:
+        # Contention is what makes reclaimed capacity visible; the axis
+        # rides --nodes when given, else a 6-node run.
+        results["vertical"].append(report_vertical(args.nodes or 6))
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(results, fh, indent=2)

@@ -3,8 +3,9 @@
 Three layers (see the README "Scenario API" section):
 
 * **registries** (:mod:`repro.api.registry`) — pluggable allocators,
-  placement policies, sequential-core backends, arrival patterns and
-  fault schedules, registered by decorator with capability flags;
+  placement policies, sequential-core backends, arrival patterns,
+  fault schedules and usage curves, registered by decorator with
+  capability flags;
 * **typed configs** (:mod:`repro.api.config`) — frozen
   ``ClusterConfig`` / ``AllocatorConfig`` / ``TimingConfig`` /
   ``FaultConfig`` composed into ``EngineConfig``
@@ -19,11 +20,13 @@ from repro.api.config import (
     FaultConfig,
     ForecastConfig,
     TimingConfig,
+    VerticalConfig,
 )
 from repro.api.registry import (
     ALLOCATORS,
     ARRIVALS,
     BACKENDS,
+    CURVES,
     FAULTS,
     PLACEMENTS,
     Registry,
@@ -41,6 +44,7 @@ __all__ = [
     "ALLOCATORS",
     "ARRIVALS",
     "BACKENDS",
+    "CURVES",
     "FAULTS",
     "PLACEMENTS",
     "Registry",
@@ -51,6 +55,7 @@ __all__ = [
     "FaultConfig",
     "ForecastConfig",
     "TimingConfig",
+    "VerticalConfig",
     "RunResult",
     "Scenario",
     "grid",

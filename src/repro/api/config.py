@@ -17,8 +17,11 @@ splits it along the paper's own seams:
 * :class:`ForecastConfig` — online arrival forecasting
   (``repro.forecast``): the adaptive fold window and the predictive
   ``adaptive_scaling`` allocator's look-ahead knobs.
+* :class:`VerticalConfig` — vertical adaptivity (ARC-V,
+  ``repro.vertical``): the in-place resize controller's check interval,
+  shrink/grow hysteresis margins and the resize-first-on-OOM toggle.
 
-``EngineConfig`` composes the five (plus the ``invariant_checks`` debug
+``EngineConfig`` composes the six (plus the ``invariant_checks`` debug
 flag), JSON-round-trips via ``to_dict``/``from_dict``, and fails early
 with actionable messages via :meth:`EngineConfig.validate`.
 
@@ -340,6 +343,55 @@ class ForecastConfig:
         return self
 
 
+@dataclasses.dataclass(frozen=True)
+class VerticalConfig:
+    """Vertical adaptivity (ARC-V, ``repro.vertical``) — in-place resize.
+
+    ``enabled=True`` arms a resize controller inside the engine: every
+    ``check_interval`` simulated seconds (while a usage-curve pod is
+    running) a ``RESIZE`` event fires and the controller compares each
+    running pod's projected remaining-lifetime peak usage against its
+    admitted quota.  Over-provisioned records **shrink** — the freed
+    quota returns to the cluster books through the dirty-node journal
+    (so device-resident incremental state stays bit-for-bit with host
+    re-pad) and a same-time retry pass offers it to the pending queue —
+    and under-provisioned records **grow**, node headroom permitting.
+
+    * ``check_interval`` — seconds between controller sweeps.
+    * ``grow_margin`` — headroom kept above the projected peak: the
+      controller sizes quotas at ``peak × (1 + grow_margin)``.
+    * ``shrink_margin`` — hysteresis band: a pod shrinks only when its
+      quota exceeds the sized target by more than this fraction, so
+      near-steady usage does not churn resizes every sweep.
+    * ``resize_on_oom`` — turn the Fig-9 kill/reallocate path into a
+      resize-first policy: an OOM-bound pod whose node has memory
+      headroom is grown to its runtime floor in place (no restart, no
+      lost progress); kill-and-reallocate remains the fallback when the
+      node is full.
+
+    ``enabled=False`` (default) builds nothing: no RESIZE events exist
+    and the engine is bit-for-bit today's engine.
+    """
+
+    enabled: bool = False
+    check_interval: float = 15.0
+    shrink_margin: float = 0.15
+    grow_margin: float = 0.10
+    resize_on_oom: bool = True
+
+    def validate(self) -> "VerticalConfig":
+        if self.check_interval <= 0:
+            raise _err(f"VerticalConfig.check_interval is a period in "
+                       f"seconds, need > 0, got {self.check_interval}")
+        if self.shrink_margin < 0:
+            raise _err(f"VerticalConfig.shrink_margin is a hysteresis "
+                       f"fraction, need >= 0, got {self.shrink_margin}")
+        if self.grow_margin < 0:
+            raise _err(f"VerticalConfig.grow_margin is a headroom "
+                       f"fraction, need >= 0, got {self.grow_margin}")
+        return self
+
+
 # Flat evolve() name -> (sub-config field of EngineConfig, field).
 _FLAT_MAP: Dict[str, tuple] = {
     "num_nodes": ("cluster", "num_nodes"),
@@ -373,27 +425,33 @@ _FLAT_MAP: Dict[str, tuple] = {
     "forecast_horizon": ("forecast", "horizon"),
     "forecast_max_window": ("forecast", "max_window"),
     "forecast_seed": ("forecast", "seed"),
+    "vertical": ("vertical", "enabled"),
+    "resize_interval": ("vertical", "check_interval"),
+    "shrink_margin": ("vertical", "shrink_margin"),
+    "grow_margin": ("vertical", "grow_margin"),
+    "resize_on_oom": ("vertical", "resize_on_oom"),
 }
 
 _SUB_TYPES = {"cluster": ClusterConfig, "alloc": AllocatorConfig,
               "timing": TimingConfig, "faults": FaultConfig,
-              "forecast": ForecastConfig}
+              "forecast": ForecastConfig, "vertical": VerticalConfig}
 
 
 def _merge_flat(cluster: ClusterConfig, alloc: AllocatorConfig,
                 timing: TimingConfig, faults: FaultConfig,
-                forecast: ForecastConfig, flat: Dict[str, Any]):
+                forecast: ForecastConfig, vertical: VerticalConfig,
+                flat: Dict[str, Any]):
     """Route flat evolve() names into the sub-configs they live in."""
     unknown = sorted(set(flat) - set(_FLAT_MAP))
     if unknown:
         raise TypeError(
             f"EngineConfig.evolve got unexpected keyword argument(s) "
             f"{unknown}; composed fields are cluster/alloc/timing/faults/"
-            f"forecast/invariant_checks, flat field names are "
+            f"forecast/vertical/invariant_checks, flat field names are "
             f"{sorted(_FLAT_MAP)}"
         )
     parts = {"cluster": cluster, "alloc": alloc, "timing": timing,
-             "faults": faults, "forecast": forecast}
+             "faults": faults, "forecast": forecast, "vertical": vertical}
     updates: Dict[str, Dict[str, Any]] = {}
     for key, value in flat.items():
         part, field = _FLAT_MAP[key]
@@ -401,7 +459,7 @@ def _merge_flat(cluster: ClusterConfig, alloc: AllocatorConfig,
     for part, kwargs in updates.items():
         parts[part] = dataclasses.replace(parts[part], **kwargs)
     return (parts["cluster"], parts["alloc"], parts["timing"],
-            parts["faults"], parts["forecast"])
+            parts["faults"], parts["forecast"], parts["vertical"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -425,6 +483,8 @@ class EngineConfig:
     faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
     forecast: ForecastConfig = dataclasses.field(
         default_factory=ForecastConfig)
+    vertical: VerticalConfig = dataclasses.field(
+        default_factory=VerticalConfig)
     # Per-event O(nodes+pods) accounting cross-checks; disable for
     # large-scale benchmarking.
     invariant_checks: bool = True
@@ -443,18 +503,22 @@ class EngineConfig:
         alloc = updates.pop("alloc", self.alloc)
         timing = updates.pop("timing", self.timing)
         faults = updates.pop("faults", self.faults)
-        # evolve(forecast=...) is overloaded the way the field reads
-        # naturally: a ForecastConfig replaces the sub-config, a bool
-        # routes to ForecastConfig.enabled via the flat map.
+        # evolve(forecast=...) / evolve(vertical=...) are overloaded the
+        # way the fields read naturally: a sub-config instance replaces
+        # the whole sub-config, a bool routes to its ``enabled`` via the
+        # flat map.
         forecast = self.forecast
         if isinstance(updates.get("forecast"), ForecastConfig):
             forecast = updates.pop("forecast")
+        vertical = self.vertical
+        if isinstance(updates.get("vertical"), VerticalConfig):
+            vertical = updates.pop("vertical")
         checks = updates.pop("invariant_checks", self.invariant_checks)
-        cluster, alloc, timing, faults, forecast = _merge_flat(
-            cluster, alloc, timing, faults, forecast, updates)
+        cluster, alloc, timing, faults, forecast, vertical = _merge_flat(
+            cluster, alloc, timing, faults, forecast, vertical, updates)
         return EngineConfig(cluster=cluster, alloc=alloc, timing=timing,
                             faults=faults, forecast=forecast,
-                            invariant_checks=checks)
+                            vertical=vertical, invariant_checks=checks)
 
     # ---------------------------------------------------------- validation
     def validate(self) -> "EngineConfig":
@@ -466,6 +530,7 @@ class EngineConfig:
         self.timing.validate()
         self.faults.validate()
         self.forecast.validate()
+        self.vertical.validate()
         if ALLOCATORS.get(self.alloc.algorithm).supports("forecast") \
                 and not self.forecast.enabled:
             raise _err(
@@ -485,6 +550,7 @@ class EngineConfig:
             "timing": dataclasses.asdict(self.timing),
             "faults": faults,
             "forecast": dataclasses.asdict(self.forecast),
+            "vertical": dataclasses.asdict(self.vertical),
             "invariant_checks": self.invariant_checks,
         }
 
@@ -494,7 +560,7 @@ class EngineConfig:
         if unknown:
             raise ValueError(
                 f"unknown EngineConfig field(s) {unknown} "
-                f"(want cluster/alloc/timing/faults/forecast/"
+                f"(want cluster/alloc/timing/faults/forecast/vertical/"
                 f"invariant_checks; flat fields do not appear in the "
                 f"serialized form)"
             )

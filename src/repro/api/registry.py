@@ -160,7 +160,7 @@ class Registry:
         return f"Registry({self.kind!r}, entries={list(self._entries)})"
 
 
-# The five engine registries.  Built-ins register at import time of the
+# The six engine registries.  Built-ins register at import time of the
 # modules that implement them (lazily triggered on first lookup).
 ALLOCATORS = Registry(
     "allocator", bootstrap_modules=("repro.core.allocator",))
@@ -172,3 +172,5 @@ ARRIVALS = Registry(
     "arrival pattern", bootstrap_modules=("repro.workflows.arrival",))
 FAULTS = Registry(
     "fault schedule", bootstrap_modules=("repro.chaos",))
+CURVES = Registry(
+    "usage curve", bootstrap_modules=("repro.vertical",))

@@ -61,6 +61,14 @@ class Scenario:
     stream: bool = False
     stream_params: Mapping[str, Any] = dataclasses.field(
         default_factory=dict)
+    # Usage-curve declarations per workflow kind (ARC-V, repro.vertical):
+    # {"montage": "ramp"} or {"montage": {"curve": "ramp", "params":
+    # {"start": 0.9, "end": 0.2}}}.  Every injected workflow of that kind
+    # gets the curve stamped onto its non-virtual tasks
+    # (repro.vertical.attach_usage) with seeds derived from the scenario
+    # seed, so actual consumption diverges from the admitted quota — the
+    # signal EngineConfig.vertical's resize controller acts on.
+    usage_curves: Optional[Mapping[str, Any]] = None
 
     # --------------------------------------------------------------- seeds
     def _arrival_args(self) -> Dict[str, Any]:
@@ -108,8 +116,38 @@ class Scenario:
         if self.stream_params and not self.stream:
             raise ValueError("stream_params given but stream=False — set "
                              "stream=True to run the serving loop")
+        if self.usage_curves:
+            from repro.api.registry import CURVES
+
+            bad_kinds = sorted(set(self.usage_curves) - set(self.workflows))
+            if bad_kinds:
+                raise ValueError(
+                    f"usage_curves name workflow kind(s) {bad_kinds} not in "
+                    f"Scenario.workflows {list(self.workflows)}")
+            for kind in self.usage_curves:
+                curve, params = self._curve_spec(kind)
+                entry = CURVES.get(curve)  # raises with registered names
+                try:
+                    inspect.signature(entry.factory).bind(**params)
+                except TypeError as exc:
+                    raise ValueError(
+                        f"usage_curves[{kind!r}] params {params} do not "
+                        f"fit curve {curve!r}: {exc}") from None
         self.engine.validate()
         return self
+
+    def _curve_spec(self, kind: str) -> Tuple[str, Dict[str, Any]]:
+        """Normalize one ``usage_curves`` entry to (curve, params)."""
+        decl = self.usage_curves[kind]
+        if isinstance(decl, str):
+            return decl, {}
+        decl = dict(decl)
+        unknown = sorted(set(decl) - {"curve", "params"})
+        if unknown or "curve" not in decl:
+            raise ValueError(
+                f"usage_curves[{kind!r}] must be a curve name or a "
+                f"{{'curve': ..., 'params': {{...}}}} mapping, got {decl}")
+        return decl["curve"], dict(decl.get("params") or {})
 
     # ------------------------------------------------------------ behavior
     def pattern(self) -> List[Tuple[float, int]]:
@@ -132,6 +170,9 @@ class Scenario:
             if self.task_kwargs is not None else None,
             "stream": self.stream,
             "stream_params": dict(self.stream_params),
+            "usage_curves": ({k: (v if isinstance(v, str) else dict(v))
+                              for k, v in self.usage_curves.items()}
+                             if self.usage_curves is not None else None),
         }
 
     @classmethod
@@ -158,6 +199,7 @@ def grid(base: Scenario, *,
          allocators: Tuple[str, ...] = ("aras", "fcfs"),
          arrivals: Tuple[str, ...] = ("constant", "linear", "pyramid"),
          seeds: Optional[Tuple[int, ...]] = None,
+         fault_params: Optional[Tuple[Mapping[str, Any], ...]] = None,
          ) -> List[Scenario]:
     """The paper's evaluation grid as a flat list of scenarios.
 
@@ -178,30 +220,51 @@ def grid(base: Scenario, *,
     ``allocators=("aras", "adaptive_scaling")`` sweeps static-vs-
     predictive without a hand-built engine per cell; an explicit
     ``base.engine.forecast`` is kept as-is for every cell.
+
+    ``fault_params`` adds a chaos axis (suffix ``-f<i>``): each entry is
+    a parameter-override mapping merged over the base engine's
+    ``FaultConfig.params`` — so recovery-time sweeps are one call::
+
+        grid(base, fault_params=tuple({"recovery_time": r}
+                                      for r in (60.0, 120.0, 300.0)))
+
+    with ``base.engine`` carrying ``fault_schedule="node_flap"``.  The
+    merged params must fit the schedule's signature; an override that
+    does not (e.g. ``recovery_time`` against the default ``none``
+    schedule) fails the scenario's ``validate()`` with the signature in
+    the message.
     """
     from repro.api.registry import ALLOCATORS
 
-    def _engine_for(algorithm: str) -> EngineConfig:
+    def _engine_for(algorithm: str,
+                    overrides: Optional[Mapping[str, Any]]) -> EngineConfig:
         engine = base.engine.evolve(allocator=algorithm)
         if ALLOCATORS.get(algorithm).supports("forecast") \
                 and not engine.forecast.enabled:
             engine = engine.evolve(forecast=True)
+        if overrides is not None:
+            engine = engine.evolve(fault_params={
+                **dict(engine.faults.params), **dict(overrides)})
         return engine
 
     seed_axis: Tuple[Optional[int], ...] = \
         (None,) if seeds is None else tuple(seeds)
+    fault_axis: Tuple[Optional[Mapping[str, Any]], ...] = \
+        (None,) if fault_params is None else tuple(fault_params)
     return [
         dataclasses.replace(
             base,
             name=(f"{base.name}-{algorithm}-{arrival}"
-                  + ("" if seed is None else f"-s{seed}")),
+                  + ("" if seed is None else f"-s{seed}")
+                  + ("" if overrides is None else f"-f{fi}")),
             arrival=arrival,
-            engine=_engine_for(algorithm),
+            engine=_engine_for(algorithm, overrides),
             seed=base.seed if seed is None else seed,
         )
         for algorithm in allocators
         for arrival in arrivals
         for seed in seed_axis
+        for fi, overrides in enumerate(fault_axis)
     ]
 
 
@@ -253,6 +316,16 @@ class RunResult:
     forecast_predictions: int = 0
     mean_forecast_window: float = 0.0
     forecast_ghost_rows: int = 0
+    # Vertical adaptivity telemetry (EngineConfig.vertical /
+    # repro.vertical): in-place resizes, shrink-reclaimed capacity
+    # integrated over the pods' remaining lifetimes (millicore·s /
+    # MiB·s), and OOM kills the resize-first policy avoided.
+    num_resizes: int = 0
+    num_shrinks: int = 0
+    num_grows: int = 0
+    resizes_avoided_oom: int = 0
+    reclaimed_cpu_seconds: float = 0.0
+    reclaimed_mem_seconds: float = 0.0
     # Serving telemetry (Scenario.stream=True): StreamStats wired in so
     # grid() sweeps can gate on serving latency, not just makespan.
     decisions_per_sec: float = 0.0
@@ -298,6 +371,14 @@ def run_scenario(scenario: Scenario) -> RunResult:
         for _ in range(count):
             kind = scenario.workflows[idx % len(scenario.workflows)]
             spec = WORKFLOW_BUILDERS[kind](f"{kind}-{idx}", rng, task_kwargs)
+            if scenario.usage_curves and kind in scenario.usage_curves:
+                from repro.vertical import attach_usage
+
+                curve, params = scenario._curve_spec(kind)
+                # Per-injection seed: seeded curves (bursty) differ
+                # across workflows but replay bit for bit per scenario.
+                spec = attach_usage(spec, curve, params,
+                                    seed=scenario.seed * 1_000_003 + idx)
             arrivals.append((t, spec))
             idx += 1
     stats = None
@@ -342,6 +423,12 @@ def run_scenario(scenario: Scenario) -> RunResult:
         forecast_predictions=metrics.forecast_predictions,
         mean_forecast_window=metrics.mean_forecast_window,
         forecast_ghost_rows=metrics.forecast_ghost_rows,
+        num_resizes=metrics.num_resizes,
+        num_shrinks=metrics.num_shrinks,
+        num_grows=metrics.num_grows,
+        resizes_avoided_oom=metrics.resizes_avoided_oom,
+        reclaimed_cpu_seconds=metrics.reclaimed_cpu_seconds,
+        reclaimed_mem_seconds=metrics.reclaimed_mem_seconds,
         decisions_per_sec=stats.decisions_per_sec if stats else 0.0,
         p50_latency_us=1e6 * stats.p50_latency_s if stats else 0.0,
         p99_latency_us=1e6 * stats.p99_latency_s if stats else 0.0,

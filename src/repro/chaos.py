@@ -37,7 +37,7 @@ exponential backoff and the per-workflow deadline.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -92,13 +92,20 @@ def node_crash(num_nodes: int, nodes: int = 1, at: float = 300.0,
                      "`down_for` seconds later, `repeats` times")
 def node_flap(num_nodes: int, nodes: int = 1, at: float = 300.0,
               down_for: float = 120.0, repeats: int = 1,
-              period: float = 600.0, seed: int = 0) -> List[FaultEvent]:
+              period: float = 600.0, seed: int = 0,
+              recovery_time: Optional[float] = None) -> List[FaultEvent]:
     """Down/up pairs for the same seed-chosen nodes.
 
     Repeat ``r`` takes the nodes offline at ``at + r·period`` and brings
     them back ``down_for`` seconds later — capacity leaves *and* rejoins
     the allocator's view, riding the dirty-tile path both ways.
+
+    ``recovery_time`` is an alias for ``down_for`` under the name the
+    recovery-time sweeps use (``grid(..., fault_params=...)``); when
+    given it overrides ``down_for``.
     """
+    if recovery_time is not None:
+        down_for = float(recovery_time)
     if at < 0 or down_for <= 0 or period <= 0:
         raise ValueError(
             f"node_flap needs at >= 0, down_for > 0 and period > 0, got "

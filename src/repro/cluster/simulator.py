@@ -50,6 +50,7 @@ class Pod:
     t_finished: float = 0.0
     workflow_id: str = ""
     slot: int = -1  # row in the pod arrays
+    resized: bool = False  # quota changed in place after admission (ARC-V)
 
 
 class ClusterSim:
@@ -187,6 +188,16 @@ class ClusterSim:
         self._used_mem[i] -= pod.quota.mem
         self._used_cpu_total -= pod.quota.cpu
         self._used_mem_total -= pod.quota.mem
+        # In-place resizes update the books by quota *deltas*, which
+        # cannot cancel bit-exactly against the final quota subtraction;
+        # snap the ±ulp residue left when a node empties (never triggered
+        # by the exact bind/finish pairs of a resize-free run).
+        if -1e-6 < self._used_cpu[i] < 0.0:
+            self._used_cpu_total -= self._used_cpu[i]
+            self._used_cpu[i] = 0.0
+        if -1e-6 < self._used_mem[i] < 0.0:
+            self._used_mem_total -= self._used_mem[i]
+            self._used_mem[i] = 0.0
         assert self._used_cpu[i] >= 0 and self._used_mem[i] >= 0, (i, pod)
         # Resync the float32 mirror from the float64 books on every
         # release: per-op rounding then cannot accumulate across pod
@@ -201,6 +212,75 @@ class ClusterSim:
         pod.phase = phase
         pod.t_finished = now
         return pod
+
+    def resize(self, uid: int, new_cpu: float, new_mem: float) -> Resources:
+        """In-place vertical resize of a Running pod's quota (ARC-V).
+
+        Adjusts the float64 books and O(1) totals by the quota delta,
+        resyncs the node's float32 residual mirror from the books (the
+        same release-time rule as :meth:`finish`, so per-op rounding
+        cannot accumulate across repeated resizes), journals the node
+        dirty — a resize rides the identical scatter path into
+        device-resident allocator state as any bind/finish — and updates
+        the pod slot arrays so Informer consumers see the new quota.
+
+        Grows are bounded by the node's allocatable capacity (same
+        ``_OVERCOMMIT_EPS`` slack as :meth:`bind`); shrinks may go to
+        zero but not negative.  Returns the previous quota.
+        """
+        pod = self.pods[uid]
+        assert pod.phase == PodPhase.RUNNING, pod
+        if new_cpu < 0 or new_mem < 0:
+            raise RuntimeError(
+                f"resize of pod {uid} to negative quota "
+                f"({new_cpu}, {new_mem})")
+        # Quotas live on the float32 lattice, like every allocator grant:
+        # the pod slot arrays are float32, and the invariant cross-check
+        # sums them against the float64 books.
+        new_cpu = float(np.float32(new_cpu))
+        new_mem = float(np.float32(new_mem))
+        i = pod.node
+        d_cpu = new_cpu - pod.quota.cpu
+        d_mem = new_mem - pod.quota.mem
+        if (self._used_cpu[i] + d_cpu
+                > self._alloc_cpu[i] + self._OVERCOMMIT_EPS
+                or self._used_mem[i] + d_mem
+                > self._alloc_mem[i] + self._OVERCOMMIT_EPS):
+            raise RuntimeError(
+                f"resize overcommit on node {i}: "
+                f"used=({self._used_cpu[i]}, {self._used_mem[i]}) "
+                f"new quota=({new_cpu}, {new_mem}) "
+                f"cap=({self._alloc_cpu[i]}, {self._alloc_mem[i]})"
+            )
+        self._used_cpu[i] += d_cpu
+        self._used_mem[i] += d_mem
+        self._used_cpu_total += d_cpu
+        self._used_mem_total += d_mem
+        self._res_cpu32[i] = np.float32(
+            self._alloc_cpu[i] - self._used_cpu[i])
+        self._res_mem32[i] = np.float32(
+            self._alloc_mem[i] - self._used_mem[i])
+        if self._track_dirty:
+            self._dirty.append(i)
+        self._pod_cpu[pod.slot] = new_cpu
+        self._pod_mem[pod.slot] = new_mem
+        old = pod.quota
+        pod.quota = Resources(new_cpu, new_mem)
+        pod.resized = True
+        return old
+
+    def node_headroom(self, node: int) -> Resources:
+        """Unused allocatable capacity on a node, from the float64 books.
+
+        The vertical controller's grow budget; an offline node reports
+        zero (nothing may grow into cordoned capacity).
+        """
+        if self._offline[node]:
+            return Resources(0.0, 0.0)
+        return Resources(
+            float(self._alloc_cpu[node] - self._used_cpu[node]),
+            float(self._alloc_mem[node] - self._used_mem[node]),
+        )
 
     def delete(self, uid: int) -> None:
         """Task Container Cleaner: remove terminal pods from the registry."""

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -67,6 +67,14 @@ class TaskSpec:
     ``deadline`` the per-task SLO (Eq. 3).  ``actual_min_mem`` models what
     the task program *really* needs at runtime — §6.2.2 fine-tunes
     ``min_mem`` below it to provoke OOMKilled.
+
+    ``usage_curve``/``usage_params`` (ARC-V) name a registered usage-curve
+    model in ``repro.vertical`` describing how the task's *actual*
+    consumption evolves over its lifetime as a fraction of the declared
+    request — the signal the vertical controller resizes against.
+    ``usage_params`` is a sorted tuple of ``(name, value)`` pairs so the
+    spec stays hashable; ``None`` means consumption equals the admitted
+    quota for the whole lifetime (today's model).
     """
 
     task_id: str
@@ -78,6 +86,8 @@ class TaskSpec:
     min_mem: float
     deadline: Optional[float] = None
     actual_min_mem: Optional[float] = None  # runtime truth; defaults to min_mem
+    usage_curve: Optional[str] = None  # CURVES registry name (repro.vertical)
+    usage_params: Tuple[Tuple[str, object], ...] = ()
 
     @property
     def request(self) -> Resources:

@@ -56,6 +56,12 @@ class EventKind(enum.IntEnum):
     retry or arrival decides against the cluster.  None of them ever
     folds into a drained burst — like ``OOM`` they mutate pod/workflow
     outcomes, so each anchors its own drain.
+
+    ``RESIZE`` (the vertical controller's periodic sweep) is likewise
+    capacity-changing — a shrink frees quota, a grow consumes headroom —
+    so it too anchors its own drain, and it sorts *before* same-time
+    ``RETRY``: capacity reclaimed by a shrink is visible to the retry
+    pass the controller schedules at the same timestamp.
     """
 
     COMPLETE = 0   # pod ran to completion
@@ -65,9 +71,10 @@ class EventKind(enum.IntEnum):
     NODE_DOWN = 4  # injected fault: a node goes offline (capacity loss)
     NODE_UP = 5    # injected fault: an offline node recovers
     WF_DEADLINE = 6  # per-workflow deadline check -> FAILED outcome
-    RETRY = 7      # re-attempt the pending queue
-    INJECT = 8     # Workflow Injection Module delivers a workflow
-    READY = 9      # a task's dependencies are satisfied
+    RESIZE = 7     # vertical controller tick: in-place resize sweep (ARC-V)
+    RETRY = 8      # re-attempt the pending queue
+    INJECT = 9     # Workflow Injection Module delivers a workflow
+    READY = 10     # a task's dependencies are satisfied
     HEAL = 105     # self-healing re-allocation; sorts after same-time READY
 
 

@@ -14,6 +14,15 @@ Fault-tolerance semantics follow §6.2.2: a pod whose memory quota is below
 its *runtime* requirement + β turns OOMKilled mid-run; the engine deletes
 it, re-allocates with the learned floor, and relaunches (self-healing).
 
+Vertical adaptivity (``EngineConfig.vertical`` / ``repro.vertical``,
+ARC-V) layers an in-place resize controller on top: while usage-curve
+pods run, a periodic ``RESIZE`` sweep shrinks over-provisioned quotas
+back into the cluster books (the freed capacity is offered to the
+pending queue by a same-time retry) and grows under-provisioned ones
+headroom-permitting, and the §6.2.2 kill becomes a *resize-first*
+policy — an OOM-bound pod on a node with memory headroom is grown to
+its runtime floor in place and runs to its original completion.
+
 Injected chaos (``EngineConfig.faults``, schedules from ``repro.chaos``)
 extends that story beyond OOM: ``NODE_DOWN`` cordons a node (its running
 pods terminate ``FAILED`` and re-enter admission through the same HEAL
@@ -74,6 +83,7 @@ from repro.api.config import (
     EngineConfig,
     FaultConfig,
     TimingConfig,
+    VerticalConfig,
 )
 from repro.api.registry import ALLOCATORS
 from repro.cluster import federation
@@ -99,8 +109,8 @@ from repro.workflows.spec import WorkflowSpec
 # working across the redesign.
 __all__ = [
     "AllocatorConfig", "ClusterConfig", "EngineConfig", "EngineMetrics",
-    "FaultConfig", "KubeAdaptor", "TimingConfig", "WorkflowRun",
-    "run_experiment",
+    "FaultConfig", "KubeAdaptor", "TimingConfig", "VerticalConfig",
+    "WorkflowRun", "run_experiment",
 ]
 
 
@@ -171,6 +181,20 @@ class EngineMetrics:
     forecast_predictions: int = 0
     forecast_window_sum: float = 0.0
     forecast_ghost_rows: int = 0
+    # Vertical adaptivity telemetry (EngineConfig.vertical /
+    # repro.vertical): in-place resizes of running pods, the capacity a
+    # shrink returned to the books integrated over the pod's remaining
+    # lifetime (millicore·s / MiB·s), and OOM kills the resize-first
+    # policy converted into in-place grows.
+    num_resizes: int = 0
+    num_shrinks: int = 0
+    num_grows: int = 0
+    resizes_avoided_oom: int = 0
+    reclaimed_cpu_seconds: float = 0.0
+    reclaimed_mem_seconds: float = 0.0
+    resize_events: List[Tuple[float, str, float, float]] = dataclasses.field(
+        default_factory=list  # (t, wf/task, Δcpu, Δmem) signed quota deltas
+    )
 
     @property
     def mean_forecast_window(self) -> float:
@@ -297,6 +321,12 @@ class KubeAdaptor:
                           or faults.max_retries is not None
                           or faults.workflow_timeout is not None
                           or faults.backoff_base > 0)
+        # Vertical adaptivity (EngineConfig.vertical / repro.vertical):
+        # the resize controller arms a periodic RESIZE event while a
+        # usage-curve pod is running.  Disabled (default) no RESIZE event
+        # is ever queued — bit-for-bit today's engine.
+        self._vertical = config.vertical.enabled
+        self._resize_armed = False
         if faults.schedule != "none":
             from repro.api.registry import FAULTS
 
@@ -534,6 +564,15 @@ class KubeAdaptor:
         else:
             t_done = self._now + timing.pod_startup_delay + wall
             self._push(t_done, EventKind.COMPLETE, (pod.uid, wf_id))
+        if self._vertical and not self._resize_armed \
+                and task.usage_curve is not None:
+            # First usage-curve pod on an idle controller: arm the
+            # periodic sweep.  The controller re-arms itself while
+            # resizable pods remain and disarms (in ``step``) when none
+            # do, so a drained cluster queues no trailing RESIZE events.
+            self._resize_armed = True
+            self._push(self._now + self.cfg.vertical.check_interval,
+                       EventKind.RESIZE, ())
         self._sample_usage()
 
     def _budget_exhausted(self, wf_id: str, task: TaskSpec) -> bool:
@@ -739,9 +778,20 @@ class KubeAdaptor:
         self._task_done(wf_id, pod.task.task_id)
         self._push(self._now, EventKind.RETRY, ())
 
-    def _oom(self, uid: int, wf_id: str) -> None:
-        """OOMKilled watch → delete → reallocate (self-healing, Fig. 9)."""
+    def _oom(self, uid: int, wf_id: str, forced: bool = False) -> None:
+        """OOMKilled watch → delete → reallocate (self-healing, Fig. 9).
+
+        With vertical adaptivity the kill is the *fallback*: an OOM-bound
+        pod whose node has memory headroom is grown to its runtime floor
+        in place instead (``_resize_rescue``) — no restart delay, no lost
+        progress.  ``forced`` OOMs (injected storms — pressure beyond the
+        quota's control) always kill.
+        """
         if self._stale(uid):
+            return
+        vertical = self.cfg.vertical
+        if vertical.enabled and vertical.resize_on_oom and not forced \
+                and self._resize_rescue(uid, wf_id):
             return
         pod = self.cluster.finish(uid, self._now, PodPhase.OOM_KILLED)
         self._sample_usage()
@@ -755,6 +805,143 @@ class KubeAdaptor:
         )
         self._push(self._now + self.cfg.timing.restart_delay, EventKind.HEAL,
                    (wf_id, learned))
+
+    # -------------------------------------------------- vertical adaptivity
+    def _resize_rescue(self, uid: int, wf_id: str) -> bool:
+        """Resize-first OOM policy (ARC-V): grow the quota in place.
+
+        The §6.2.2 watch fired because the admitted memory quota sits
+        below the runtime floor + β.  If the node's float64 books have
+        headroom for the missing delta, the pod grows to the floor in
+        place and runs to its *original* completion time — the kill, the
+        cleanup/restart delays and the re-admission queue round-trip are
+        all avoided.  Returns ``False`` when the node is full; the caller
+        then falls back to the seed kill-and-reallocate path.
+        """
+        pod = self.cluster.pods[uid]
+        task = pod.task
+        need = task.runtime_min_mem() + self.cfg.alloc.beta
+        if pod.quota.mem < need - 1e-9:
+            head = self.cluster.node_headroom(pod.node)
+            if need - pod.quota.mem > head.mem + 1e-9:
+                return False  # node full: kill-and-reallocate
+            old_mem = pod.quota.mem
+            self.cluster.resize(uid, pod.quota.cpu, need)
+            grown = pod.quota.mem - old_mem  # post-snap, matches the books
+            self.metrics.num_resizes += 1
+            self.metrics.num_grows += 1
+            self.metrics.resize_events.append(
+                (self._now, f"{wf_id}/{task.task_id}", 0.0, grown))
+            self._sample_usage()
+        # Quota now covers the floor (grown here, or already grown by an
+        # earlier controller sweep): the kill is averted.
+        self.metrics.resizes_avoided_oom += 1
+        timing = self.cfg.timing
+        t_done = pod.t_created + timing.pod_startup_delay + \
+            timing.duration_multiplier * task.duration
+        self._push(t_done, EventKind.COMPLETE, (uid, wf_id))
+        return True
+
+    def _any_resizable(self) -> bool:
+        """A Running usage-curve pod exists — the controller has work."""
+        return any(pod.phase is PodPhase.RUNNING
+                   and pod.task.usage_curve is not None
+                   for pod in self.cluster.pods.values())
+
+    def _resize_tick(self) -> None:
+        """One controller sweep: compare usage against quota, resize.
+
+        For every Running usage-curve pod (uid order — deterministic) the
+        target quota is the curve's *remaining-lifetime peak* usage plus
+        the ``grow_margin`` headroom, floored at the acceptance minimum
+        and (for memory) the §6.2.2 runtime floor + β so a shrink can
+        never re-create the OOM condition admission cleared, and capped
+        at the declared request.  Over-provisioned quotas shrink once
+        they exceed the target by the ``shrink_margin`` hysteresis band;
+        under-provisioned ones grow as far as the node's float64 headroom
+        allows.  Shrinks credit ``reclaimed_*_seconds`` with the freed
+        quota integrated over the pod's remaining lifetime and schedule a
+        same-time RETRY (RESIZE sorts before RETRY) so the pending queue
+        decides against the reclaimed capacity immediately.
+        """
+        cfg = self.cfg.vertical
+        timing = self.cfg.timing
+        beta = self.cfg.alloc.beta
+        from repro import vertical as curves
+
+        changed = False
+        shrank = False
+        for uid in sorted(self.cluster.pods):
+            pod = self.cluster.pods[uid]
+            task = pod.task
+            if pod.phase is not PodPhase.RUNNING or task.usage_curve is None:
+                continue
+            wall = timing.duration_multiplier * task.duration
+            if wall <= 0:
+                continue
+            p = (self._now - pod.t_started - timing.pod_startup_delay) / wall
+            if p >= 1.0:
+                continue  # completing at this instant
+            p = max(p, 0.0)
+            peak_cpu, peak_mem = curves.peak_usage(task, p)
+            floor_cpu = task.min_cpu
+            floor_mem = max(task.min_mem, task.runtime_min_mem() + beta) \
+                if task.mem > 0 else 0.0
+            want_cpu = min(max(peak_cpu * (1.0 + cfg.grow_margin),
+                               floor_cpu), max(task.cpu, floor_cpu))
+            want_mem = min(max(peak_mem * (1.0 + cfg.grow_margin),
+                               floor_mem), max(task.mem, floor_mem))
+            q_cpu, q_mem = pod.quota.cpu, pod.quota.mem
+            new_cpu, new_mem = q_cpu, q_mem
+            if q_cpu > want_cpu * (1.0 + cfg.shrink_margin) \
+                    or want_cpu > q_cpu:
+                new_cpu = want_cpu
+            if q_mem > want_mem * (1.0 + cfg.shrink_margin) \
+                    or want_mem > q_mem:
+                new_mem = want_mem
+            # Grows are bounded by the node's remaining headroom (the
+            # resize itself re-checks against the authoritative books).
+            if new_cpu > q_cpu or new_mem > q_mem:
+                head = self.cluster.node_headroom(pod.node)
+                new_cpu = min(new_cpu, q_cpu + max(head.cpu, 0.0)) \
+                    if new_cpu > q_cpu else new_cpu
+                new_mem = min(new_mem, q_mem + max(head.mem, 0.0)) \
+                    if new_mem > q_mem else new_mem
+            # ClusterSim.resize snaps quotas onto the float32 lattice
+            # (the pod slot arrays are float32); snap here too so the
+            # telemetry deltas below equal the books' deltas exactly.
+            new_cpu = float(np.float32(new_cpu))
+            new_mem = float(np.float32(new_mem))
+            if abs(new_cpu - q_cpu) < 1e-9 and abs(new_mem - q_mem) < 1e-9:
+                continue
+            self.cluster.resize(uid, new_cpu, new_mem)
+            changed = True
+            self.metrics.num_resizes += 1
+            if new_cpu < q_cpu or new_mem < q_mem:
+                self.metrics.num_shrinks += 1
+            if new_cpu > q_cpu or new_mem > q_mem:
+                self.metrics.num_grows += 1
+            remaining = (1.0 - p) * wall
+            if new_cpu < q_cpu:
+                self.metrics.reclaimed_cpu_seconds += \
+                    (q_cpu - new_cpu) * remaining
+                shrank = True
+            if new_mem < q_mem:
+                self.metrics.reclaimed_mem_seconds += \
+                    (q_mem - new_mem) * remaining
+                shrank = True
+            self.metrics.resize_events.append(
+                (self._now, f"{pod.workflow_id}/{task.task_id}",
+                 new_cpu - q_cpu, new_mem - q_mem))
+        if changed:
+            self._sample_usage()
+        if shrank:
+            self._push(self._now, EventKind.RETRY, ())
+        # Re-arm unconditionally; a sweep that finds nothing resizable is
+        # dropped (and disarmed) by the guard in ``step`` without
+        # advancing the clock, so trailing RESIZE events cannot stretch
+        # the makespan.
+        self._push(self._now + cfg.check_interval, EventKind.RESIZE, ())
 
     # ------------------------------------------------------- fault handling
     def _node_down(self, node: int) -> None:
@@ -781,8 +968,17 @@ class KubeAdaptor:
             if pod.workflow_id in self._failed_workflows:
                 continue
             self._displaced_at.setdefault(key, self._now)
+            heal_task = pod.task
+            if pod.resized:
+                # A resized pod re-enters admission at its *current*
+                # quota, not the stale declared request — the vertical
+                # controller's sizing survives displacement.
+                heal_task = dataclasses.replace(
+                    heal_task,
+                    cpu=max(pod.quota.cpu, heal_task.min_cpu),
+                    mem=max(pod.quota.mem, heal_task.min_mem))
             self._push(self._now + timing.restart_delay, EventKind.HEAL,
-                       (pod.workflow_id, pod.task))
+                       (pod.workflow_id, heal_task))
 
     def _node_up(self, node: int) -> None:
         """Injected NODE_UP: restore the node, retry against it.
@@ -807,7 +1003,9 @@ class KubeAdaptor:
         running = sorted(uid for uid, pod in self.cluster.pods.items()
                          if pod.phase is PodPhase.RUNNING)
         for uid in running[:victims]:
-            self._oom(uid, self.cluster.pods[uid].workflow_id)
+            # forced: storm pressure is beyond the quota's control, so
+            # the resize-first rescue never applies — the victim dies.
+            self._oom(uid, self.cluster.pods[uid].workflow_id, forced=True)
 
     def _wf_deadline(self, wf_id: str) -> None:
         """Per-workflow deadline check: incomplete -> FAILED outcome."""
@@ -885,6 +1083,12 @@ class KubeAdaptor:
         event = self.queue.pop()
         if self._chaos_on and self._event_stale(event):
             return event
+        if event.kind is EventKind.RESIZE and not self._any_resizable():
+            # Quiescent controller: drop the sweep *before* the clock
+            # advances (a trailing RESIZE must not stretch the makespan)
+            # and disarm — the next usage-curve bind re-arms it.
+            self._resize_armed = False
+            return event
         if event.t > self.cfg.timing.max_time:
             raise RuntimeError("simulation exceeded max_time — deadlock?")
         self._now = event.t
@@ -906,6 +1110,8 @@ class KubeAdaptor:
             self._node_up(*event.payload)
         elif event.kind is EventKind.WF_DEADLINE:
             self._wf_deadline(*event.payload)
+        elif event.kind is EventKind.RESIZE:
+            self._resize_tick()
         else:  # RETRY / READY / HEAL
             self._drain_group(event)
         return event

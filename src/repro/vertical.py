@@ -1,0 +1,258 @@
+"""Usage-curve models for vertical adaptivity (ARC-V).
+
+The paper's allocator fixes a pod's quota at admission: declared request
+in, granted quota out, and the record never changes until completion (or
+the §6.2.2 OOM-kill/reallocate detour).  That model cannot express the
+waste ARC-V targets — a pod whose *actual* consumption diverges from its
+admitted quota over its lifetime, stranding residual capacity the
+cluster could re-admit pending work into.
+
+This module makes declared ≠ used a first-class scenario family:
+
+* a :data:`repro.api.registry.CURVES` registry of **usage-curve models**
+  — seed-deterministic functions of lifetime progress ``p ∈ [0, 1]``
+  returning the fraction of the declared request the task really uses at
+  that point.  Built-ins: ``constant`` (flat fraction), ``ramp`` (linear
+  start→end), ``step`` (piecewise phases), ``bursty`` (low baseline with
+  seed-placed high bursts).
+* :func:`attach_usage` — stamp a curve onto every non-virtual task of a
+  :class:`~repro.workflows.spec.WorkflowSpec`; per-task seeds are
+  derived deterministically so ``bursty`` curves differ across tasks but
+  replay bit for bit.
+* :func:`usage_at` / :func:`peak_usage` — the engine-facing sampling
+  API.  ``peak_usage(task, p)`` is the maximum usage over the task's
+  *remaining* lifetime ``[p, 1]`` — the quantity the vertical controller
+  in ``KubeAdaptor`` sizes quotas against: shrinking to the remaining
+  peak (plus a hysteresis margin) can never starve a deterministic
+  curve later in life.
+
+Curves are *models of truth*, not measurements: the controller treats
+them as an oracle for what the pod consumes, the same way
+``actual_min_mem`` models the Stress program's real footprint for the
+Fig-9 OOM experiments.
+
+A curve object needs two methods::
+
+    value(p)  -> fraction of the declared request in use at progress p
+    peak(p0)  -> max over p in [p0, 1] of value(p)
+
+Fractions are clamped to be non-negative but may exceed 1.0 — a task can
+use more than it declared, which is exactly the under-provisioned case
+the grow path (and resize-first OOM rescue) exists for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+from typing import Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.api.registry import CURVES
+from repro.core.types import TaskSpec
+from repro.workflows.spec import WorkflowSpec
+
+
+# --------------------------------------------------------------- curves
+@dataclasses.dataclass(frozen=True)
+class ConstantCurve:
+    """Flat usage at a fixed fraction of the declared request."""
+
+    frac: float
+
+    def value(self, p: float) -> float:
+        return self.frac
+
+    def peak(self, p0: float) -> float:
+        return self.frac
+
+
+@dataclasses.dataclass(frozen=True)
+class RampCurve:
+    """Linear interpolation ``start`` → ``end`` over the lifetime."""
+
+    start: float
+    end: float
+
+    def value(self, p: float) -> float:
+        p = min(max(p, 0.0), 1.0)
+        return self.start + (self.end - self.start) * p
+
+    def peak(self, p0: float) -> float:
+        # Linear: the max over [p0, 1] sits at an endpoint.
+        return max(self.value(p0), self.end)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCurve:
+    """Piecewise-constant phases: ``levels[i]`` holds on the segment
+    between ``breaks[i-1]`` and ``breaks[i]`` (progress fractions)."""
+
+    levels: Tuple[float, ...]
+    breaks: Tuple[float, ...]
+
+    def _segment(self, p: float) -> int:
+        for i, b in enumerate(self.breaks):
+            if p < b:
+                return i
+        return len(self.levels) - 1
+
+    def value(self, p: float) -> float:
+        return self.levels[self._segment(min(max(p, 0.0), 1.0))]
+
+    def peak(self, p0: float) -> float:
+        return max(self.levels[self._segment(min(max(p0, 0.0), 1.0)):])
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstyCurve:
+    """Low baseline ``lo`` with ``bursts`` seed-placed windows at ``hi``.
+
+    Burst centres are drawn once from ``default_rng(seed)`` — the same
+    ``(seed, bursts, width)`` triple replays the same burst placement bit
+    for bit, which is what keeps bursty scenarios deterministic.
+    """
+
+    lo: float
+    hi: float
+    centers: Tuple[float, ...]
+    width: float
+
+    def value(self, p: float) -> float:
+        half = self.width / 2.0
+        for c in self.centers:
+            if c - half <= p <= c + half:
+                return self.hi
+        return self.lo
+
+    def peak(self, p0: float) -> float:
+        half = self.width / 2.0
+        if any(c + half >= p0 for c in self.centers):
+            return self.hi
+        return self.lo
+
+
+def _check_frac(name: str, value: float) -> float:
+    if not np.isfinite(value) or value < 0:
+        raise ValueError(f"usage-curve {name} must be a finite "
+                         f"non-negative fraction, got {value}")
+    return float(value)
+
+
+@CURVES.register("constant", doc="flat usage at a fixed fraction of the "
+                                 "declared request")
+def constant(frac: float = 0.6) -> ConstantCurve:
+    """Use ``frac`` of the declared request for the whole lifetime."""
+    return ConstantCurve(frac=_check_frac("frac", frac))
+
+
+@CURVES.register("ramp", doc="linear start→end usage over the lifetime")
+def ramp(start: float = 0.9, end: float = 0.3) -> RampCurve:
+    """Linear ramp: init-heavy tasks decay (start > end), accumulating
+    ones grow (start < end)."""
+    return RampCurve(start=_check_frac("start", start),
+                     end=_check_frac("end", end))
+
+
+@CURVES.register("step", doc="piecewise-constant usage phases")
+def step(levels: Tuple[float, ...] = (0.9, 0.35),
+         breaks: Tuple[float, ...] = (0.4,)) -> StepCurve:
+    """Phase model: ``levels[i]`` holds until progress ``breaks[i]``.
+
+    ``breaks`` must be strictly increasing inside (0, 1) with exactly
+    ``len(levels) - 1`` entries.
+    """
+    levels = tuple(_check_frac(f"levels[{i}]", v)
+                   for i, v in enumerate(levels))
+    breaks = tuple(float(b) for b in breaks)
+    if len(breaks) != len(levels) - 1:
+        raise ValueError(
+            f"step needs len(breaks) == len(levels) - 1, got "
+            f"{len(breaks)} breaks for {len(levels)} levels")
+    if any(not 0.0 < b < 1.0 for b in breaks) or list(breaks) != \
+            sorted(set(breaks)):
+        raise ValueError(
+            f"step breaks must be strictly increasing in (0, 1), "
+            f"got {breaks}")
+    return StepCurve(levels=levels, breaks=breaks)
+
+
+@CURVES.register("bursty", capabilities=("seeded",),
+                 doc="low baseline with seed-placed usage bursts")
+def bursty(lo: float = 0.3, hi: float = 0.9, bursts: int = 3,
+           width: float = 0.08, seed: int = 0) -> BurstyCurve:
+    """``bursts`` windows of ``width`` lifetime-fraction at ``hi``,
+    centred at seed-drawn points; ``lo`` elsewhere."""
+    lo = _check_frac("lo", lo)
+    hi = _check_frac("hi", hi)
+    if bursts < 1:
+        raise ValueError(f"bursty needs bursts >= 1, got {bursts}")
+    if not 0.0 < width <= 1.0:
+        raise ValueError(f"bursty width must be in (0, 1], got {width}")
+    rng = np.random.default_rng(seed)
+    centers = tuple(sorted(float(c)
+                           for c in rng.uniform(0.0, 1.0, size=bursts)))
+    return BurstyCurve(lo=lo, hi=hi, centers=centers, width=float(width))
+
+
+# ------------------------------------------------------------- sampling
+@functools.lru_cache(maxsize=4096)
+def _curve_of(name: str, params: Tuple[Tuple[str, object], ...]):
+    """Instantiate (and memoize) the curve object for a task's
+    ``(usage_curve, usage_params)`` pair."""
+    return CURVES.get(name).factory(**dict(params))
+
+
+def usage_at(task: TaskSpec, p: float) -> Tuple[float, float]:
+    """(cpu, mem) the task actually uses at lifetime progress ``p``."""
+    curve = _curve_of(task.usage_curve, task.usage_params)
+    f = max(curve.value(p), 0.0)
+    return f * task.cpu, f * task.mem
+
+
+def peak_usage(task: TaskSpec, p0: float) -> Tuple[float, float]:
+    """(cpu, mem) peak usage over the task's remaining lifetime
+    ``[p0, 1]`` — the controller's safe-shrink target."""
+    curve = _curve_of(task.usage_curve, task.usage_params)
+    f = max(curve.peak(p0), 0.0)
+    return f * task.cpu, f * task.mem
+
+
+# ------------------------------------------------------------ attaching
+def _task_seed(seed: int, index: int) -> int:
+    # Distinct, deterministic per-task streams from one scenario seed.
+    return (seed * 100_003 + index * 7919) & 0x7FFFFFFF
+
+
+def attach_usage(spec: WorkflowSpec, curve: str,
+                 params: Optional[Mapping[str, object]] = None,
+                 seed: int = 0) -> WorkflowSpec:
+    """Return a copy of ``spec`` whose tasks carry the usage curve.
+
+    Virtual tasks (zero declared cpu *and* mem — DAG glue) are left
+    untouched.  For ``seeded`` curves (e.g. ``bursty``) each task gets a
+    distinct deterministic seed derived from ``seed`` and its position,
+    unless the caller pinned ``seed`` in ``params`` explicitly.
+    """
+    entry = CURVES.get(curve)
+    base = dict(params or {})
+    # Validate eagerly: a typo'd parameter should fail at scenario build
+    # time with the factory's own error, not mid-simulation.
+    try:
+        inspect.signature(entry.factory).bind(**base)
+    except TypeError as exc:
+        raise ValueError(
+            f"usage curve {curve!r} rejects params {base}: {exc}") from None
+    tasks = {}
+    for index, (tid, task) in enumerate(spec.tasks.items()):
+        if task.cpu == 0 and task.mem == 0:
+            tasks[tid] = task
+            continue
+        p = dict(base)
+        if entry.supports("seeded"):
+            p.setdefault("seed", _task_seed(seed, index))
+        tasks[tid] = dataclasses.replace(
+            task, usage_curve=curve,
+            usage_params=tuple(sorted(p.items())))
+    return dataclasses.replace(spec, tasks=tasks)

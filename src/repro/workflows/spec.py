@@ -97,9 +97,17 @@ def make_task(
     min_mem: float = 1000.0,
     dur_range: Tuple[float, float] = (10.0, 20.0),
     actual_min_mem: Optional[float] = None,
+    usage_curve: Optional[str] = None,
+    usage_params: Tuple[Tuple[str, object], ...] = (),
 ) -> TaskSpec:
     """Paper §6.1.3 instantiation: requests=limits=2000m/4000Mi, Stress
-    holds 1000Mi (= min_mem), duration ~ U(10, 20) s."""
+    holds 1000Mi (= min_mem), duration ~ U(10, 20) s.
+
+    ``usage_curve``/``usage_params`` optionally attach an ARC-V usage
+    model (see ``repro.vertical``) so actual consumption diverges from
+    the admitted quota; ``repro.vertical.attach_usage`` stamps these onto
+    an existing spec wholesale.
+    """
     return TaskSpec(
         task_id=task_id,
         image="task-emulator:stress",
@@ -109,4 +117,6 @@ def make_task(
         min_cpu=min_cpu,
         min_mem=min_mem,
         actual_min_mem=actual_min_mem,
+        usage_curve=usage_curve,
+        usage_params=usage_params,
     )

@@ -21,6 +21,7 @@ from repro.api import (  # noqa: E402
     ForecastConfig,
     Scenario,
     TimingConfig,
+    VerticalConfig,
 )
 from repro.api.config import _FLAT_MAP  # noqa: E402
 
@@ -94,8 +95,17 @@ _forecast = st.integers(min_value=1, max_value=8).flatmap(
                             allow_nan=False),
         seed=st.integers(min_value=0, max_value=2**31 - 1),
     ))
+_vertical = st.builds(
+    VerticalConfig,
+    enabled=st.booleans(),
+    check_interval=_pos,
+    shrink_margin=st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+    grow_margin=st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+    resize_on_oom=st.booleans(),
+)
 _engine = st.builds(EngineConfig, cluster=_cluster, alloc=_alloc,
                     timing=_timing, faults=_faults, forecast=_forecast,
+                    vertical=_vertical,
                     invariant_checks=st.booleans())
 
 _scenario = st.builds(
@@ -137,7 +147,7 @@ def test_evolve_routes_any_flat_key_subset(cfg, keys):
         flat[key] = getattr(getattr(cfg, part), field)
     parts = {"cluster": ClusterConfig(), "alloc": AllocatorConfig(),
              "timing": TimingConfig(), "faults": FaultConfig(),
-             "forecast": ForecastConfig()}
+             "forecast": ForecastConfig(), "vertical": VerticalConfig()}
     for key, value in flat.items():
         part, field = _FLAT_MAP[key]
         parts[part] = dataclasses.replace(parts[part], **{field: value})

@@ -1,0 +1,228 @@
+"""Stateful fuzz of in-place resize — conservation under random walks.
+
+Extends the ``ClusterSim`` lifecycle fuzz with a ``resize`` rule: random
+bind / resize / finish / delete sequences over single- and two-cluster
+simulators, with an independent model of every live pod's quota.  The
+invariant is *conservation*: the float64 books equal the model's
+per-node quota sums at every step — no capacity leaks through a
+shrink/grow, and what a resized pod releases at ``finish`` is exactly
+what the books carried for it.  Quotas are floored to quarter-unit
+granularity (dyadic, float32-exact), so equality is checked tight.
+
+The hypothesis machine is the thorough driver; a seeded ``random`` walk
+below replays the same rule mix so the conservation property still runs
+where hypothesis is not installed.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import ClusterSim
+from repro.core.types import Allocation, PodPhase, TaskSpec
+
+try:
+    from hypothesis import settings, strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine,
+        initialize,
+        invariant,
+        precondition,
+        rule,
+    )
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.tier1
+
+_TASK = TaskSpec(task_id="rz", image="i", cpu=1.0, mem=1.0,
+                 duration=1.0, min_cpu=1.0, min_mem=1.0)
+
+
+def _quarter(x: float) -> float:
+    return float(np.floor(max(x, 0.0) * 4) / 4)
+
+
+class _Model:
+    """Shared rule bodies: an independent ledger of every live quota."""
+
+    def setup(self, num_nodes, num_clusters, node_cpu, node_mem):
+        self.sim = ClusterSim(num_nodes, node_cpu, node_mem,
+                              num_clusters=min(num_clusters, num_nodes))
+        self.now = 0.0
+        self.quota = {}     # uid -> (node, cpu, mem): the model's books
+        self.terminal = []
+
+    def _free(self, node):
+        used_c = sum(c for n, c, _ in self.quota.values() if n == node)
+        used_m = sum(m for n, _, m in self.quota.values() if n == node)
+        return (self.sim._alloc_cpu[node] - used_c,
+                self.sim._alloc_mem[node] - used_m)
+
+    def do_bind(self, node_pick, cpu_frac, mem_frac):
+        node = node_pick % self.sim.num_nodes
+        free_cpu, free_mem = self._free(node)
+        alloc = Allocation(cpu=_quarter(free_cpu * cpu_frac),
+                           mem=_quarter(free_mem * mem_frac),
+                           node=node, feasible=True)
+        pod = self.sim.bind(_TASK, alloc, self.now)
+        self.quota[pod.uid] = (node, alloc.cpu, alloc.mem)
+        self.now += 1.0
+
+    def do_resize(self, pick, cpu_frac, mem_frac):
+        """Resize a running pod anywhere between zero and quota + the
+        node's free capacity — shrinks and grows in one rule, never an
+        overcommit, so every raise would be a bug."""
+        uid = sorted(self.quota)[pick % len(self.quota)]
+        node, cpu, mem = self.quota[uid]
+        free_cpu, free_mem = self._free(node)
+        new_cpu = _quarter((cpu + free_cpu) * cpu_frac)
+        new_mem = _quarter((mem + free_mem) * mem_frac)
+        old = self.sim.resize(uid, new_cpu, new_mem)
+        assert (old.cpu, old.mem) == (cpu, mem)  # returns the prior quota
+        pod = self.sim.pods[uid]
+        assert pod.resized and (pod.quota.cpu, pod.quota.mem) == \
+            (new_cpu, new_mem)
+        self.quota[uid] = (node, new_cpu, new_mem)
+
+    def do_finish(self, pick, phase):
+        uid = sorted(self.quota)[pick % len(self.quota)]
+        self.sim.finish(uid, self.now, phase)
+        del self.quota[uid]
+        self.terminal.append(uid)
+        self.now += 1.0
+
+    def do_delete(self, pick):
+        self.sim.delete(self.terminal.pop(pick % len(self.terminal)))
+
+    def check_conservation(self):
+        self.sim.check_invariants()
+        want_cpu = np.zeros(self.sim.num_nodes)
+        want_mem = np.zeros(self.sim.num_nodes)
+        for node, cpu, mem in self.quota.values():
+            want_cpu[node] += cpu
+            want_mem[node] += mem
+        assert np.allclose(self.sim._used_cpu, want_cpu, atol=1e-6), \
+            (self.sim._used_cpu, want_cpu)
+        assert np.allclose(self.sim._used_mem, want_mem, atol=1e-6)
+        assert np.isclose(self.sim._used_cpu_total, want_cpu.sum(),
+                          atol=1e-6)
+        assert np.isclose(self.sim._used_mem_total, want_mem.sum(),
+                          atol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+    class ResizeConservationMachine(_Model, RuleBasedStateMachine):
+        @initialize(num_nodes=st.integers(1, 6),
+                    num_clusters=st.integers(1, 2),
+                    node_cpu=st.sampled_from([800.0, 6800.0]),
+                    node_mem=st.sampled_from([1600.0, 13600.0]))
+        def setup(self, num_nodes, num_clusters, node_cpu, node_mem):
+            _Model.setup(self, num_nodes, num_clusters, node_cpu, node_mem)
+
+        @rule(node_pick=st.integers(0, 10**6),
+              cpu_frac=st.floats(0.0, 1.0, allow_nan=False),
+              mem_frac=st.floats(0.0, 1.0, allow_nan=False))
+        def bind(self, node_pick, cpu_frac, mem_frac):
+            self.do_bind(node_pick, cpu_frac, mem_frac)
+
+        @precondition(lambda self: self.quota)
+        @rule(pick=st.integers(0, 10**6),
+              cpu_frac=st.floats(0.0, 1.0, allow_nan=False),
+              mem_frac=st.floats(0.0, 1.0, allow_nan=False))
+        def resize(self, pick, cpu_frac, mem_frac):
+            self.do_resize(pick, cpu_frac, mem_frac)
+
+        @precondition(lambda self: self.quota)
+        @rule(pick=st.integers(0, 10**6),
+              phase=st.sampled_from([PodPhase.SUCCEEDED, PodPhase.FAILED]))
+        def finish(self, pick, phase):
+            self.do_finish(pick, phase)
+
+        @precondition(lambda self: self.terminal)
+        @rule(pick=st.integers(0, 10**6))
+        def delete(self, pick):
+            self.do_delete(pick)
+
+        @invariant()
+        def books_equal_model(self):
+            if hasattr(self, "sim"):  # before @initialize
+                self.check_conservation()
+
+    ResizeConservationMachine.TestCase.settings = settings(
+        max_examples=20, stateful_step_count=40, deadline=None)
+
+    TestResizeConservation = ResizeConservationMachine.TestCase
+
+
+@pytest.mark.parametrize("num_clusters", [1, 2])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_seeded_walk_conserves_capacity(seed, num_clusters):
+    """Deterministic replay of the machine's rule mix: 200 random
+    bind/resize/finish/delete steps, conservation checked after each."""
+    rng = random.Random(seed * 7 + num_clusters)
+    m = _Model()
+    m.setup(num_nodes=rng.randint(2, 6), num_clusters=num_clusters,
+            node_cpu=rng.choice([800.0, 6800.0]),
+            node_mem=rng.choice([1600.0, 13600.0]))
+    for _ in range(200):
+        op = rng.random()
+        if op < 0.35 or not m.quota:
+            m.do_bind(rng.randrange(10**6), rng.random(), rng.random())
+        elif op < 0.75:
+            m.do_resize(rng.randrange(10**6), rng.random(), rng.random())
+        elif op < 0.9:
+            m.do_finish(rng.randrange(10**6),
+                        rng.choice([PodPhase.SUCCEEDED, PodPhase.FAILED]))
+        elif m.terminal:
+            m.do_delete(rng.randrange(10**6))
+        m.check_conservation()
+    while m.quota:
+        m.do_finish(0, PodPhase.SUCCEEDED)
+        m.check_conservation()
+    assert m.sim._used_cpu_total == 0.0 and m.sim._used_mem_total == 0.0
+
+
+# ------------------------------------------------- direct edge cases
+
+def _one_pod_sim():
+    sim = ClusterSim(2, 1000.0, 2000.0)
+    pod = sim.bind(_TASK, Allocation(cpu=400.0, mem=800.0, node=0,
+                                     feasible=True), 0.0)
+    return sim, pod
+
+
+def test_resize_rejects_negative_quota():
+    sim, pod = _one_pod_sim()
+    with pytest.raises(RuntimeError, match="negative"):
+        sim.resize(pod.uid, -1.0, 800.0)
+
+
+def test_resize_rejects_overcommit():
+    sim, pod = _one_pod_sim()
+    with pytest.raises(RuntimeError):
+        sim.resize(pod.uid, 5000.0, 800.0)
+
+
+def test_resize_to_zero_then_finish_is_clean():
+    """The books survive the degenerate shrink-to-nothing and release
+    exactly nothing at finish."""
+    sim, pod = _one_pod_sim()
+    sim.resize(pod.uid, 0.0, 0.0)
+    assert sim._used_cpu[0] == 0.0 and sim._used_mem[0] == 0.0
+    sim.finish(pod.uid, 1.0, PodPhase.SUCCEEDED)
+    sim.check_invariants()
+    assert sim._used_cpu_total == 0.0 and sim._used_mem_total == 0.0
+
+
+def test_node_headroom_tracks_resize_and_offline():
+    sim, pod = _one_pod_sim()
+    head = sim.node_headroom(0)
+    assert head.cpu == 600.0 and head.mem == 1200.0
+    sim.resize(pod.uid, 100.0, 200.0)
+    head = sim.node_headroom(0)
+    assert head.cpu == 900.0 and head.mem == 1800.0
+    sim.finish(pod.uid, 1.0, PodPhase.SUCCEEDED)
+    sim.set_node_down(0, 2.0)
+    assert sim.node_headroom(0) == type(head)(0.0, 0.0)

@@ -308,6 +308,31 @@ def test_chaos_incremental_matches_repad(k, schedule, params):
                           _chaos_metrics(k, False, schedule, params))
 
 
+def _vertical_metrics(k: int, incremental: bool):
+    from repro.vertical import attach_usage
+    eng = KubeAdaptor(EngineConfig(
+        timing=TimingConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                            duration_multiplier=1.0, batch_window=3.0),
+    ).evolve(allocator="aras", num_clusters=k, incremental_state=incremental,
+             vertical=True, resize_interval=2.0))
+    for t, wf in _ARRIVALS:
+        eng.submit(attach_usage(wf, "ramp", {"start": 0.9, "end": 0.3}), t)
+    return eng.run()
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_vertical_resize_incremental_matches_repad(k):
+    """RESIZE quota deltas ride the same dirty-node journal as binds and
+    finishes — the device-resident state stays bit-for-bit with the host
+    re-pad path through every in-place shrink and grow."""
+    a = _vertical_metrics(k, True)
+    b = _vertical_metrics(k, False)
+    assert a.resize_events == b.resize_events and a.resize_events
+    assert a.num_shrinks == b.num_shrinks
+    assert a.reclaimed_cpu_seconds == b.reclaimed_cpu_seconds
+    _assert_metrics_equal(a, b)
+
+
 @pytest.mark.parametrize("k", [1, 2])
 def test_oom_selfheal_incremental_matches_repad(k):
     """The OOM kill → reallocate-with-learned-floor loop under federation:

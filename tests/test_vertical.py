@@ -1,0 +1,351 @@
+"""Vertical adaptivity (ARC-V): usage curves + in-place pod resize.
+
+Four contracts:
+
+* **inert when disabled** — attaching usage curves to a workload and
+  leaving ``VerticalConfig.enabled=False`` is bit-for-bit the engine
+  without them, offline and streaming: the curves only describe what the
+  pods *would* consume, the controller is the only reader.
+* **shrink conservation** — capacity reclaimed by shrinking an
+  over-provisioned running pod re-admits a previously-refused pending
+  task strictly earlier than the baseline that waits for completion.
+* **resize-first OOM** — a pod admitted below its runtime memory floor
+  is grown in place when the node has headroom; the §6.2.2 kill (and its
+  restart penalty) only happens when it does not.
+* **chaos interaction** — a displaced *resized* pod re-enters admission
+  at its current (controller-sized) quota, not the stale declared
+  request.
+"""
+import dataclasses
+
+import pytest
+
+from repro.api import (
+    CURVES,
+    EngineConfig,
+    Scenario,
+    TimingConfig,
+    VerticalConfig,
+    grid,
+    run_scenario,
+)
+from repro.engine import KubeAdaptor
+from repro.engine.events import EventKind
+from repro.serving import StreamEngine
+from repro.vertical import attach_usage, peak_usage, usage_at
+from repro.workflows.spec import TaskSpec, WorkflowSpec
+
+pytestmark = pytest.mark.tier1
+
+
+# ------------------------------------------------------- usage curves
+
+def _one_task_wf(i=0, cpu=1000.0, mem=2000.0, duration=10.0,
+                 min_cpu=100.0, min_mem=200.0, **kw) -> WorkflowSpec:
+    t = TaskSpec(task_id="t0", image="img", cpu=cpu, mem=mem,
+                 duration=duration, min_cpu=min_cpu, min_mem=min_mem, **kw)
+    return WorkflowSpec(workflow_id=f"w{i}", tasks={"t0": t}, edges=[])
+
+
+def test_curve_registry_bootstraps():
+    assert set(CURVES.names()) >= {"constant", "ramp", "step", "bursty"}
+
+
+@pytest.mark.parametrize("curve,params", [
+    ("constant", {"frac": 0.6}),
+    ("ramp", {"start": 0.9, "end": 0.2}),
+    ("ramp", {"start": 0.3, "end": 1.2}),   # fractions may exceed 1.0
+    ("step", {"levels": (0.9, 0.35), "breaks": (0.4,)}),
+    ("bursty", {"lo": 0.3, "hi": 0.9, "bursts": 3, "seed": 5}),
+])
+def test_peak_dominates_value_and_is_monotone(curve, params):
+    """``peak(p0)`` is the max of ``value`` over the remaining lifetime:
+    it dominates every later sample and never increases as p0 advances —
+    the property that makes shrink-to-remaining-peak safe."""
+    wf = attach_usage(_one_task_wf(), curve, params)
+    task = wf.tasks["t0"]
+    grid_p = [i / 50 for i in range(51)]
+    peaks = [peak_usage(task, p)[0] for p in grid_p]
+    for a, b in zip(peaks, peaks[1:]):
+        assert a >= b - 1e-9
+    for i, p0 in enumerate(grid_p):
+        tail = max(usage_at(task, p)[0] for p in grid_p[i:])
+        assert peaks[i] >= tail - 1e-6
+
+
+def test_usage_scales_declared_request():
+    wf = attach_usage(_one_task_wf(cpu=1000.0, mem=2000.0), "constant",
+                      {"frac": 0.5})
+    assert usage_at(wf.tasks["t0"], 0.3) == (500.0, 1000.0)
+    assert peak_usage(wf.tasks["t0"], 0.0) == (500.0, 1000.0)
+
+
+def test_bursty_is_seed_deterministic_and_per_task():
+    tasks = {
+        f"t{j}": TaskSpec(task_id=f"t{j}", image="i", cpu=100.0, mem=100.0,
+                          duration=5.0, min_cpu=10.0, min_mem=10.0)
+        for j in range(2)
+    }
+    spec = WorkflowSpec(workflow_id="w", tasks=tasks, edges=[])
+    a = attach_usage(spec, "bursty", seed=7)
+    b = attach_usage(spec, "bursty", seed=7)
+    c = attach_usage(spec, "bursty", seed=8)
+    assert a.tasks["t0"].usage_params == b.tasks["t0"].usage_params
+    assert a.tasks["t0"].usage_params != a.tasks["t1"].usage_params
+    assert a.tasks["t0"].usage_params != c.tasks["t0"].usage_params
+
+
+def test_attach_usage_validates():
+    with pytest.raises(ValueError, match="unknown usage curve"):
+        attach_usage(_one_task_wf(), "nope")
+    with pytest.raises(ValueError, match="rejects params"):
+        attach_usage(_one_task_wf(), "ramp", {"bogus": 1.0})
+
+
+def test_attach_usage_skips_virtual_tasks():
+    wf = _one_task_wf(cpu=0.0, mem=0.0, min_cpu=0.0, min_mem=0.0)
+    out = attach_usage(wf, "ramp")
+    assert out.tasks["t0"].usage_curve is None
+
+
+# ------------------------------------------------------------- config
+
+def test_vertical_config_defaults_off_and_roundtrips():
+    cfg = EngineConfig()
+    assert cfg.vertical == VerticalConfig() and not cfg.vertical.enabled
+    on = cfg.evolve(vertical=True, resize_interval=9.0, shrink_margin=0.2)
+    assert on.vertical.enabled and on.vertical.check_interval == 9.0
+    assert EngineConfig.from_json(on.to_json()) == on
+    assert cfg.evolve(vertical=VerticalConfig(enabled=True)).vertical.enabled
+
+
+def test_vertical_config_validates():
+    with pytest.raises(ValueError):
+        EngineConfig().evolve(vertical=True, resize_interval=0.0).validate()
+    with pytest.raises(ValueError):
+        EngineConfig().evolve(vertical=True, shrink_margin=-0.1).validate()
+
+
+# ------------------------------------------- inert-when-disabled parity
+
+_TIMING = TimingConfig(pod_startup_delay=1.0, cleanup_delay=1.0,
+                       duration_multiplier=1.0, batch_window=3.0)
+
+
+def _curved_arrivals():
+    out = []
+    for i in range(4):
+        wf = _one_task_wf(i, cpu=600.0 + 50.0 * i, mem=1200.0,
+                          duration=8.0 + i)
+        out.append((1.5 * i, attach_usage(wf, "ramp",
+                                          {"start": 0.9, "end": 0.3})))
+    return out
+
+
+def _assert_metrics_equal(a, b):
+    assert a.alloc_trace == b.alloc_trace
+    assert a.num_dispatches == b.num_dispatches
+    assert a.num_allocations == b.num_allocations
+    assert a.num_waits == b.num_waits
+    assert a.makespan == b.makespan
+    assert a.usage_series == b.usage_series
+    assert a.workflow_durations == b.workflow_durations
+    assert a.oom_events == b.oom_events
+    assert a.resize_events == b.resize_events
+
+
+def test_disabled_is_bit_for_bit_inert_offline():
+    """Curves on the tasks + ``enabled=False`` ≡ no curves at all."""
+    def run(arrivals, cfg):
+        eng = KubeAdaptor(cfg)
+        for t, wf in arrivals:
+            eng.submit(wf, t)
+        return eng.run()
+
+    cfg = EngineConfig(timing=_TIMING)
+    plain = [(t, _one_task_wf(i, cpu=600.0 + 50.0 * i, mem=1200.0,
+                              duration=8.0 + i))
+             for i, (t, _) in enumerate(_curved_arrivals())]
+    a = run(_curved_arrivals(), cfg)
+    b = run(plain, cfg)
+    c = run(_curved_arrivals(), cfg.evolve(vertical=False))
+    assert a.num_resizes == 0 and not a.resize_events
+    _assert_metrics_equal(a, b)
+    _assert_metrics_equal(a, c)
+
+
+def test_disabled_is_bit_for_bit_inert_stream():
+    cfg = EngineConfig(timing=_TIMING)
+    offline = KubeAdaptor(cfg)
+    for t, wf in _curved_arrivals():
+        offline.submit(wf, t)
+    want = offline.run()
+    stats = StreamEngine(KubeAdaptor(cfg), _curved_arrivals()).serve()
+    assert stats.metrics.num_resizes == 0
+    _assert_metrics_equal(stats.metrics, want)
+
+
+# --------------------------------------------------- shrink conservation
+
+def _contended():
+    """One node; A's ramp decays, B is refused until capacity appears."""
+    a = attach_usage(_one_task_wf(0, cpu=3000.0, mem=3000.0, duration=100.0,
+                                  min_cpu=100.0, min_mem=300.0),
+                     "ramp", {"start": 0.9, "end": 0.2})
+    b = _one_task_wf(1, cpu=2000.0, mem=2000.0, duration=10.0,
+                     min_cpu=1800.0, min_mem=1800.0)
+    return [(0.0, a), (1.0, b)]
+
+
+def _contended_cfg(vertical: bool) -> EngineConfig:
+    cfg = EngineConfig(timing=_TIMING).evolve(
+        num_nodes=1, node_cpu=4000.0, node_mem=8000.0)
+    if vertical:
+        cfg = cfg.evolve(vertical=True, resize_interval=10.0)
+    return cfg
+
+
+def _run_contended(vertical: bool):
+    eng = KubeAdaptor(_contended_cfg(vertical))
+    for t, wf in _contended():
+        eng.submit(wf, t)
+    return eng.run()
+
+
+def _bind_time(metrics, key):
+    return min(t for (t, k, _cpu, _mem, _why) in metrics.alloc_trace
+               if k == key)
+
+
+def test_shrink_readmits_refused_pending_task_earlier():
+    """The reclaimed quota is *conserved*: what the shrink frees, the
+    same-time RETRY hands to the pending task the baseline kept refusing
+    until the fat pod completed."""
+    base = _run_contended(vertical=False)
+    vert = _run_contended(vertical=True)
+    assert base.num_waits >= 1          # B was refused at admission
+    assert vert.num_shrinks >= 1
+    assert vert.reclaimed_cpu_seconds > 0
+    # baseline binds B only after A completes; vertical mid-A, off a shrink
+    assert _bind_time(base, "w1/t0") > 100.0
+    assert _bind_time(vert, "w1/t0") < _bind_time(base, "w1/t0")
+    assert vert.makespan < base.makespan
+    # A itself still runs to its full duration — shrink is invisible to it.
+    assert vert.workflow_durations["w0"] == base.workflow_durations["w0"]
+
+
+def test_trailing_resize_tick_does_not_stretch_makespan():
+    """The controller re-arms every sweep; once no Running usage-curve
+    pod remains the queued RESIZE is dropped before the clock advances,
+    so an idle tick can never define the makespan."""
+    vert = _run_contended(vertical=True)
+    interval = _contended_cfg(True).vertical.check_interval
+    assert vert.makespan % interval != 0.0 or vert.makespan < interval
+
+
+# ---------------------------------------------------- resize-first OOM
+
+def _oom_scenario(**engine_kw) -> Scenario:
+    sc = Scenario(
+        name="vert-oom", workflows=("montage",), arrival="constant",
+        arrival_params={"y": 4, "bursts": 1},
+        task_kwargs={"mem": 2600.0, "min_mem": 200.0,
+                     "actual_min_mem": 2000.0},
+        seed=1)
+    if engine_kw:
+        sc = dataclasses.replace(sc, engine=sc.engine.evolve(**engine_kw))
+    return sc
+
+
+def test_resize_first_avoids_the_baseline_oom():
+    base = run_scenario(_oom_scenario())
+    vert = run_scenario(_oom_scenario(vertical=True))
+    assert base.num_oom_events >= 1
+    assert vert.resizes_avoided_oom >= 1
+    assert vert.num_oom_events < base.num_oom_events
+    # grown in place: no kill, no restart round-trip, earlier finish
+    assert vert.avg_total_duration < base.avg_total_duration
+
+
+def test_resize_on_oom_gate():
+    vert = run_scenario(_oom_scenario(vertical=True, resize_on_oom=False))
+    base = run_scenario(_oom_scenario())
+    assert vert.resizes_avoided_oom == 0
+    assert vert.num_oom_events == base.num_oom_events
+
+
+# ------------------------------------------------------- chaos crossing
+
+def test_displaced_resized_pod_heals_at_current_quota():
+    """Kill the node under a shrunken pod: the HEAL re-admission carries
+    the controller's quota, not the stale declared request."""
+    cfg = EngineConfig(timing=_TIMING).evolve(
+        num_nodes=2, node_cpu=4000.0, node_mem=8000.0,
+        vertical=True, resize_interval=10.0,
+        fault_schedule="node_flap",
+        fault_params={"at": 30.0, "down_for": 20.0, "nodes": 2})
+    eng = KubeAdaptor(cfg)
+    eng.submit(attach_usage(
+        _one_task_wf(0, cpu=3000.0, mem=3000.0, duration=100.0,
+                     min_cpu=100.0, min_mem=300.0),
+        "ramp", {"start": 0.9, "end": 0.2}), 0.0)
+    while not eng.metrics.displaced_tasks:
+        eng.step()
+    assert eng.metrics.num_shrinks >= 1  # it was resized before the crash
+    heals = [e for e in eng.queue._heap if e.kind is EventKind.HEAL]
+    assert len(heals) == 1
+    _wf_id, heal_task = heals[0].payload
+    shrunken = [(dc, dm) for _t, _key, dc, dm in eng.metrics.resize_events]
+    assert heal_task.cpu == 3000.0 + sum(dc for dc, _ in shrunken)
+    assert heal_task.mem == 3000.0 + sum(dm for _, dm in shrunken)
+    assert heal_task.cpu < 3000.0 and heal_task.mem < 3000.0
+    eng.run()  # node comes back; the shrunken re-admission completes
+    assert eng.metrics.recovery_times and not eng.metrics.failed_workflows
+    assert eng.metrics.workflow_durations
+
+
+# ------------------------------------------------ scenario-level surface
+
+def test_scenario_usage_curves_validate():
+    with pytest.raises(ValueError, match="not in Scenario.workflows"):
+        Scenario(workflows=("montage",),
+                 usage_curves={"nope": "ramp"}).validate()
+    with pytest.raises(ValueError, match="unknown usage curve"):
+        Scenario(workflows=("montage",),
+                 usage_curves={"montage": "zigzag"}).validate()
+    with pytest.raises(ValueError, match="do not fit curve"):
+        Scenario(workflows=("montage",),
+                 usage_curves={"montage": {"curve": "ramp",
+                                           "params": {"zig": 1}}}).validate()
+
+
+def test_run_result_carries_reclaim_telemetry():
+    sc = Scenario(
+        name="vert", workflows=("montage",), arrival="constant",
+        arrival_params={"y": 2, "bursts": 1},
+        engine=EngineConfig().evolve(vertical=True, resize_interval=8.0),
+        usage_curves={"montage": {"curve": "ramp",
+                                  "params": {"start": 0.9, "end": 0.2}}},
+        seed=3)
+    r = run_scenario(sc)
+    d = r.to_dict()
+    for key in ("num_resizes", "num_shrinks", "num_grows",
+                "resizes_avoided_oom", "reclaimed_cpu_seconds",
+                "reclaimed_mem_seconds"):
+        assert key in d
+    assert r.num_resizes == r.num_shrinks + r.num_grows > 0
+    assert r.reclaimed_cpu_seconds > 0 and r.reclaimed_mem_seconds > 0
+
+
+def test_grid_fault_params_axis():
+    base = Scenario(workflows=("montage",), arrival_params={"y": 1})
+    plain = grid(base, allocators=("aras",), arrivals=("constant",))
+    assert all("-f" not in s.name for s in plain)  # backward compatible
+    g = grid(base, allocators=("aras",), arrivals=("constant",),
+             fault_params=({"mtbf": 200.0},
+                           {"mtbf": 400.0, "recovery_time": 15.0}))
+    assert len(g) == 2 * len(plain)
+    assert [s.name.rsplit("-", 1)[1] for s in g] == ["f0", "f1"]
+    merged = [dict(s.engine.faults.params) for s in g]
+    assert merged[0]["mtbf"] == 200.0 and "recovery_time" not in merged[0]
+    assert merged[1] == {**merged[1], "mtbf": 400.0, "recovery_time": 15.0}
